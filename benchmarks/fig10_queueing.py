@@ -1,0 +1,36 @@
+"""Fig. 10 — queuing time per policy (avg + P90): Tropical's TTFT advantage
+over DistServe comes from queuing (claimed ~9x better P90 queueing)."""
+from __future__ import annotations
+
+from benchmarks.common import POLICIES, cost_model, emit, make_trace, run_policy
+
+RATES = (2.0, 4.0, 6.0)
+DURATION = 300.0
+
+
+def main() -> list[dict]:
+    cm = cost_model()
+    rows = []
+    for rate in RATES:
+        trace = make_trace(rate, DURATION, cm, seed=31)
+        per = {}
+        for pol in POLICIES:
+            m = run_policy(pol, trace, until=DURATION * 6)
+            per[pol] = m
+            rows.append({
+                "policy": pol, "rate": rate,
+                "queue_avg_s": round(m.queue_avg, 3),
+                "queue_p90_s": round(m.queue_p90, 3),
+            })
+        rows.append({
+            "policy": "ratio", "rate": rate,
+            "distserve_over_tropical_q90": round(
+                per["distserve"].queue_p90
+                / max(per["tropical"].queue_p90, 1e-9), 2),
+        })
+    emit("fig10_queueing", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

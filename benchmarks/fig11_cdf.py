@@ -1,0 +1,32 @@
+"""Fig. 11 — TTFT and TPOT CDFs per policy (tail-latency view)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POLICIES, cost_model, emit, make_trace, run_policy
+
+RATE = 5.0
+DURATION = 300.0
+QUANTILES = (0.5, 0.9, 0.95, 0.99)
+
+
+def main() -> list[dict]:
+    cm = cost_model()
+    trace = make_trace(RATE, DURATION, cm, seed=41)
+    rows = []
+    for pol in POLICIES:
+        m = run_policy(pol, trace, until=DURATION * 6)
+        for q in QUANTILES:
+            rows.append({
+                "policy": pol, "quantile": q,
+                "ttft_s": round(float(np.percentile(m.ttfts, q * 100)), 3)
+                if m.ttfts else None,
+                "tpot_s": round(float(np.percentile(m.tpots, q * 100)), 4)
+                if m.tpots else None,
+            })
+    emit("fig11_cdf", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

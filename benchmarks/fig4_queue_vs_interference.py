@@ -1,0 +1,60 @@
+"""Fig. 4 — queuing vs interference by context length.
+
+(a) prefill-time breakdown (execution vs queuing) per context bucket;
+(b) decode blocked-time (interference) per context bucket;
+non-disaggregated (vllm) vs disaggregated (distserve).
+
+Expected reproduction of Characterization II: short contexts are
+queue-dominated (disaggregated ~10x worse queuing), long contexts are
+interference-dominated (non-disaggregated blocked-time grows with length).
+"""
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from benchmarks.common import MODEL, N_WORKERS, WORKER, cost_model, emit, make_trace
+from repro.configs import get_config
+from repro.serving.simulator import build_cluster
+
+BUCKETS = [(0, 2048), (2048, 8192), (8192, 32768), (32768, 1 << 20)]
+
+
+def main() -> list[dict]:
+    cm = cost_model()
+    trace = make_trace(5.0, 400.0, cm, seed=1)
+    rows = []
+    for pol in ("vllm", "distserve"):
+        sim, _ = build_cluster(get_config(MODEL), pol, n_workers=N_WORKERS,
+                               worker_spec=WORKER)
+        sim.add_trace(copy.deepcopy(trace))
+        sim.run(until=2000.0)
+        queue_by_rid, blocked_by_rid = {}, {}
+        for w in sim.workers.values():
+            queue_by_rid.update(w.queue_times)
+            blocked_by_rid.update(w.blocked_time)
+        for lo, hi in BUCKETS:
+            reqs = [r for r in sim.requests if lo <= r.prompt_len < hi
+                    and r.first_token_time is not None]
+            if not reqs:
+                continue
+            queues = [queue_by_rid.get(r.rid, 0.0) for r in reqs]
+            execs = [r.first_token_time - r.arrival_time
+                     - queue_by_rid.get(r.rid, 0.0) for r in reqs]
+            blocked = [blocked_by_rid.get(r.rid, 0.0)
+                       / max(r.generated_tokens, 1) for r in reqs]
+            rows.append({
+                "policy": pol, "ctx_lo": lo, "ctx_hi": hi, "n": len(reqs),
+                "queue_p90_s": round(float(np.percentile(queues, 90)), 3),
+                "exec_p90_s": round(float(np.percentile(execs, 90)), 3),
+                "queue_over_exec": round(
+                    float(np.mean(queues) / max(np.mean(execs), 1e-9)), 2),
+                "blocked_per_token_s": round(float(np.mean(blocked)), 4),
+            })
+    emit("fig4_queue_vs_interference", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 5 — P90 latency under different prefill:decode worker splits for
+three (input, output) configurations: static allocation cannot match both
+phases (Characterization III / leaky-bucket)."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import MODEL, WORKER, cost_model, emit
+from repro.configs import get_config
+from repro.core.request import Request
+from repro.serving.simulator import build_cluster
+from repro.core.metrics import derive_slos
+import numpy as np
+
+
+CONFIGS = [(8192, 64), (8192, 256), (16384, 256)]
+SPLITS = [(1, 3), (2, 2), (3, 1)]
+RATE = 1.2
+DURATION = 300.0
+
+
+def fixed_trace(cm, inp, out, rate, seed=0):
+    rng = np.random.default_rng(seed)
+    n = rng.poisson(rate * DURATION)
+    times = np.sort(rng.uniform(0, DURATION, n))
+    slo = derive_slos(cm, inp)
+    return [Request(rid=i, arrival_time=float(t), prompt_len=inp,
+                    output_len=out, slo=slo) for i, t in enumerate(times)]
+
+
+def main() -> list[dict]:
+    cm = cost_model()
+    rows = []
+    for inp, out in CONFIGS:
+        trace = fixed_trace(cm, inp, out, RATE)
+        for n_p, n_d in SPLITS:
+            sim, _ = build_cluster(get_config(MODEL), "distserve",
+                                   n_workers=n_p + n_d, worker_spec=WORKER,
+                                   n_prefill=n_p)
+            sim.add_trace(copy.deepcopy(trace))
+            m = sim.run(until=1500.0)
+            rows.append({
+                "input": inp, "output": out, "split": f"{n_p}p{n_d}d",
+                "ttft_p90_s": round(m.ttft_p90, 3),
+                "tpot_p90_s": round(m.tpot_p90, 4),
+                "slo_attainment": round(m.slo_attainment, 3),
+                "finished": m.n_finished,
+            })
+    emit("fig5_worker_allocation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints the per-(arch x shape x mesh)
+three-term roofline: compute / memory / collective seconds, dominant term,
+MODEL_FLOPS/HLO_FLOPS useful ratio, roofline fraction."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def main() -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": r["status"]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_us": round(rl["compute_s"] * 1e6, 1),
+            "memory_us": round(rl["memory_s"] * 1e6, 1),
+            "collective_us": round(rl["collective_s"] * 1e6, 1),
+            "dominant": rl["dominant"],
+            "useful_ratio": round(rl["useful_ratio"], 4),
+            "roofline_fraction": round(rl["roofline_fraction"], 4),
+            "mem_gb_per_dev": round(r["bytes_per_device"] / 1e9, 2),
+        })
+    emit("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

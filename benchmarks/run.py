@@ -1,0 +1,51 @@
+"""Benchmark driver: one function per paper table/figure + the roofline
+table. Prints ``name,key=value,...`` CSV rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_workload, fig4_queue_vs_interference,
+                            fig5_worker_allocation, fig8_slo_attainment,
+                            fig9_latency, fig10_queueing, fig11_cdf,
+                            predictor_noise, roofline, scale)
+    benches = {
+        "fig3": fig3_workload.main,
+        "fig4": fig4_queue_vs_interference.main,
+        "fig5": fig5_worker_allocation.main,
+        "fig8": (lambda: fig8_slo_attainment.main(rates=(1.0, 2.0, 3.0)))
+        if args.quick else fig8_slo_attainment.main,
+        "fig9": fig9_latency.main,
+        "fig10": fig10_queueing.main,
+        "fig11": fig11_cdf.main,
+        "scale": scale.main,
+        "predictor_noise": predictor_noise.main,
+        "roofline": roofline.main,
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"# {name}: done in {time.perf_counter() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"# {name}: FAILED {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Cluster-scale sweep (beyond-paper): the paper stops at 4 workers; the
+scheduler must hold SLO attainment as workers and load scale together
+(64 workers x TP8 = 512 chips — one dry-run pod-pair worth of serving).
+
+Checks (a) attainment stays flat under proportional scaling (no
+centralised-scheduler collapse), (b) simulated-cluster throughput, (c)
+scheduler decision cost per request stays O(workers).
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+from benchmarks.common import MODEL, WORKER, cost_model, emit, make_trace
+from repro.configs import get_config
+from repro.serving.simulator import build_cluster
+
+SCALES = [(4, 4.0), (16, 16.0), (64, 64.0)]
+DURATION = 120.0
+
+
+def main() -> list[dict]:
+    cm = cost_model()
+    rows = []
+    for n_workers, rate in SCALES:
+        trace = make_trace(rate, DURATION, cm, seed=5)
+        for pol in ("tropical", "tropical++"):
+            sim, _ = build_cluster(get_config(MODEL), pol,
+                                   n_workers=n_workers, worker_spec=WORKER)
+            sim.add_trace(copy.deepcopy(trace))
+            t0 = time.perf_counter()
+            m = sim.run(until=DURATION * 6)
+            wall = time.perf_counter() - t0
+            rows.append({
+                "policy": pol, "workers": n_workers, "rate": rate,
+                "chips": n_workers * WORKER.tp,
+                "requests": m.n_total,
+                "slo_attainment": round(m.slo_attainment, 3),
+                "ttft_p90_s": round(m.ttft_p90, 2),
+                "tpot_p90_s": round(m.tpot_p90, 4),
+                "sim_wall_s": round(wall, 2),
+                "req_per_sim_sec": round(m.n_total / max(wall, 1e-9), 0),
+            })
+    emit("scale", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

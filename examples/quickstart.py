@@ -1,0 +1,62 @@
+"""Quickstart: build a model from the registry, prefill + decode a few
+tokens, run one training step.
+
+    PYTHONPATH=src python examples/quickstart.py [arch]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke, list_archs
+from repro.models import api as model_api
+from repro.train import optimizer
+from repro.train.data import DataConfig, SyntheticLM
+
+
+def main(arch: str = "gemma2-2b") -> None:
+    cfg = get_smoke(arch)     # reduced same-family config for CPU
+    print(f"arch={cfg.name} family={cfg.family} layers={cfg.num_layers} "
+          f"d_model={cfg.d_model}")
+    api = model_api.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f}M")
+
+    # ---- serve: prefill a prompt, decode 8 tokens -----------------------
+    rng = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)
+    inputs = prompt
+    if cfg.family == "encdec":
+        inputs = {"frames": jax.random.normal(rng, (2, 8, cfg.d_model),
+                                              dtype=cfg.dtype),
+                  "tokens": prompt}
+    elif cfg.family == "vlm":
+        inputs = {"tokens": prompt,
+                  "prefix_embeds": jax.random.normal(
+                      rng, (2, cfg.num_patches, cfg.vision_feature_dim),
+                      dtype=cfg.dtype)}
+    cache = api.init_cache(2, 32)
+    lengths = jnp.full((2,), 12, jnp.int32)
+    logits, cache = api.prefill(params, cache, inputs, lengths)
+    out = [int(t) for t in jnp.argmax(logits, -1)]
+    seqs = [[t] for t in out]
+    for _ in range(8):
+        tok = jnp.asarray([s[-1] for s in seqs], jnp.int32)
+        logits, cache = api.decode(params, cache, tok, lengths)
+        lengths = lengths + 1
+        for s, t in zip(seqs, jnp.argmax(logits, -1)):
+            s.append(int(t))
+    print("generated:", seqs)
+
+    # ---- train: a couple of optimizer steps ------------------------------
+    data = SyntheticLM(cfg, DataConfig(batch=2, seq=16))
+    step = jax.jit(optimizer.make_train_step(lambda p, b: api.loss(p, b)))
+    state = optimizer.init_state(params)
+    for i in range(3):
+        params, state, loss = step(params, state, data.batch_at(i))
+        print(f"train step {i}: loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b")

@@ -1,0 +1,99 @@
+"""SLO attainment + latency metrics (paper Eq. 1-3, Figs. 8-11)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Phase, Request
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), p))
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    n_total: int
+    n_finished: int
+    slo_attainment: float          # Eq. 3
+    ttft_attainment: float
+    tpot_attainment: float
+    ttft_avg: float
+    ttft_p90: float
+    tpot_avg: float
+    tpot_p90: float
+    queue_avg: float
+    queue_p90: float
+    ttfts: list
+    tpots: list
+    queues: list
+    blocked_time_avg: float        # decode blocked by prefill (interference)
+    migrations: int
+    restarts: int
+
+    def row(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "n_total", "n_finished", "slo_attainment", "ttft_attainment",
+            "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg",
+            "tpot_p90", "queue_avg", "queue_p90", "blocked_time_avg",
+            "migrations", "restarts")}
+
+
+def compute_metrics(requests: Iterable[Request],
+                    queue_times: Optional[dict] = None,
+                    blocked_times: Optional[dict] = None) -> ServeMetrics:
+    reqs = list(requests)
+    fin = [r for r in reqs if r.phase == Phase.FINISHED]
+    ttfts = [r.ttft() for r in fin]
+    tpots = [r.tpot() for r in fin]
+    ok_ttft = [r for r in fin if r.ttft_ok()]
+    ok_tpot = [r for r in fin if r.tpot_ok()]
+    ok_both = [r for r in fin if r.slo_ok()]
+    n = max(len(reqs), 1)
+    queues = list((queue_times or {}).values())
+    blocked = list((blocked_times or {}).values())
+    return ServeMetrics(
+        n_total=len(reqs),
+        n_finished=len(fin),
+        slo_attainment=len(ok_both) / n,
+        ttft_attainment=len(ok_ttft) / n,
+        tpot_attainment=len(ok_tpot) / n,
+        ttft_avg=float(np.mean(ttfts)) if ttfts else float("nan"),
+        ttft_p90=percentile(ttfts, 90),
+        tpot_avg=float(np.mean(tpots)) if tpots else float("nan"),
+        tpot_p90=percentile(tpots, 90),
+        queue_avg=float(np.mean(queues)) if queues else float("nan"),
+        queue_p90=percentile(queues, 90),
+        ttfts=ttfts,
+        tpots=tpots,
+        queues=queues,
+        blocked_time_avg=float(np.mean(blocked)) if blocked else 0.0,
+        migrations=sum(r.migrations for r in reqs),
+        restarts=sum(r.restarts for r in reqs),
+    )
+
+
+def cdf(xs: Sequence[float], n_points: int = 50):
+    """(value, fraction<=value) pairs for Fig.11-style CDFs."""
+    xs = sorted(x for x in xs if x is not None)
+    if not xs:
+        return []
+    out = []
+    for i in range(n_points + 1):
+        q = i / n_points
+        idx = min(int(q * (len(xs) - 1)), len(xs) - 1)
+        out.append((xs[idx], q))
+    return out
+
+
+def derive_slos(cost_model, prompt_len: int, ttft_scale: float = 5.0,
+                tpot_scale: float = 5.0):
+    """Paper §V-A: SLO = scale x the light-workload latency of the phase."""
+    from repro.core.request import SLOSpec
+    t_prefill = cost_model.prefill_time(prompt_len)
+    t_decode = cost_model.decode_iter_time(1, float(prompt_len))
+    return SLOSpec(ttft=ttft_scale * t_prefill, tpot=tpot_scale * t_decode)

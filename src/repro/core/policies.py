@@ -1,0 +1,206 @@
+"""Scheduling policies: Tropical + the paper's three baselines.
+
+A policy owns (a) worker role assignment, (b) global dispatch, and (c) the
+per-iteration batch-composition rule its workers follow. The engine asks the
+policy what to run each iteration; executors (sim or real JAX) are
+orthogonal.
+
+  vllm       — non-disaggregated, prefill-prioritised full-prompt iterations
+               (decode stalls behind prefill: the interference regime).
+  sarathi    — non-disaggregated + chunked prefill (hybrid batches,
+               chunk=2048 as profiled in the paper §V-A).
+  distserve  — disaggregated: static P/D worker split, full-prompt prefill
+               on P, pure decode batches on D, KV migration P->D.
+  tropical   — SLO-aware multiplexing via the MultiplexingToggle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.predictor import Predictor
+from repro.core.request import Request
+from repro.core.toggle import MultiplexingToggle, Role, ToggleConfig, WorkerView
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRule:
+    """What a worker may put in one iteration."""
+    run_decode: bool
+    prefill_budget: int            # max new prefill tokens this iteration
+    prefill_exclusive: bool        # if True and prefill work exists, decode
+                                   # is stalled (vLLM-style interference)
+
+
+class Policy:
+    name = "base"
+    queue_discipline = "fcfs"     # what the real systems do; see engine
+
+    def __init__(self, workers: Sequence[WorkerView], predictor: Predictor):
+        self.workers = {w.wid: w for w in workers}
+        self.predictor = predictor
+
+    # --- dispatch ----------------------------------------------------------
+    def dispatch_prefill(self, req: Request, now: float) -> Optional[int]:
+        raise NotImplementedError
+
+    def dispatch_decode(self, req: Request, now: float) -> Optional[int]:
+        """Where decode continues after prefill. None = same worker."""
+        return None
+
+    # --- iteration composition ---------------------------------------------
+    def batch_rule(self, w: WorkerView, now: float,
+                   head: Optional[Request]) -> BatchRule:
+        raise NotImplementedError
+
+    def on_worker_failure(self, wid: int) -> None:
+        self.workers[wid].alive = False
+
+    def _alive(self, role: Optional[Role] = None):
+        return [w for w in self.workers.values()
+                if w.alive and (role is None or w.role == role)]
+
+    def _least_loaded(self, ws):
+        return min(ws, key=lambda w: w.unfinished_tokens).wid if ws else None
+
+
+# ---------------------------------------------------------------------------
+
+
+class VLLMPolicy(Policy):
+    """Colocated; InFaaS least-unfinished-token dispatch; prefill-priority."""
+    name = "vllm"
+    prefill_token_budget = 16384
+
+    def dispatch_prefill(self, req, now):
+        return self._least_loaded(self._alive())
+
+    def batch_rule(self, w, now, head):
+        return BatchRule(run_decode=True,
+                         prefill_budget=self.prefill_token_budget,
+                         prefill_exclusive=True)
+
+
+class SarathiPolicy(Policy):
+    """Colocated + chunked prefill: hybrid decode+chunk iterations."""
+    name = "sarathi"
+
+    def __init__(self, workers, predictor, chunk: int = 2048):
+        super().__init__(workers, predictor)
+        self.chunk = chunk
+
+    def dispatch_prefill(self, req, now):
+        return self._least_loaded(self._alive())
+
+    def batch_rule(self, w, now, head):
+        return BatchRule(run_decode=True, prefill_budget=self.chunk,
+                         prefill_exclusive=False)
+
+
+class DistServePolicy(Policy):
+    """Static P/D split; decode always migrates to a D worker."""
+    name = "distserve"
+    prefill_token_budget = 16384
+
+    def __init__(self, workers, predictor, n_prefill: Optional[int] = None):
+        super().__init__(workers, predictor)
+        ws = list(self.workers.values())
+        n_p = n_prefill if n_prefill is not None else len(ws) // 2
+        for i, w in enumerate(ws):
+            w.role = Role.PREFILL if i < n_p else Role.MULTIPLEX
+
+    def dispatch_prefill(self, req, now):
+        wid = self._least_loaded(self._alive(Role.PREFILL))
+        if wid is None:                     # note: wid 0 is a valid worker
+            wid = self._least_loaded(self._alive())
+        return wid
+
+    def dispatch_decode(self, req, now):
+        return self._least_loaded(self._alive(Role.MULTIPLEX))
+
+    def batch_rule(self, w, now, head):
+        if w.role == Role.PREFILL:
+            return BatchRule(run_decode=False,
+                             prefill_budget=self.prefill_token_budget,
+                             prefill_exclusive=True)
+        return BatchRule(run_decode=True, prefill_budget=0,
+                         prefill_exclusive=False)
+
+
+class TropicalPolicy(Policy):
+    """SLO-aware multiplexing (the paper's contribution)."""
+    name = "tropical"
+    prefill_token_budget = 16384
+
+    def __init__(self, workers, predictor, n_prefill: Optional[int] = None,
+                 toggle_config: ToggleConfig = ToggleConfig()):
+        super().__init__(workers, predictor)
+        ws = list(self.workers.values())
+        n_p = n_prefill if n_prefill is not None else len(ws) // 2
+        for i, w in enumerate(ws):
+            w.role = Role.PREFILL if i < n_p else Role.MULTIPLEX
+        self.toggle = MultiplexingToggle(ws, predictor, toggle_config)
+
+    def dispatch_prefill(self, req, now):
+        return self.toggle.dispatch_prefill(req, now)
+
+    def dispatch_decode(self, req, now):
+        # decode stays in place on a multiplexing worker (Path ②); only
+        # Path-① prefills migrate
+        w = self.workers[req.worker]
+        if w.role == Role.MULTIPLEX and w.alive:
+            return None
+        return self.toggle.dispatch_decode(req, now)
+
+    def batch_rule(self, w, now, head):
+        if w.role == Role.PREFILL:
+            return BatchRule(run_decode=True,
+                             prefill_budget=self.prefill_token_budget,
+                             prefill_exclusive=True)
+        # multiplexing worker: piggyback a chunk only when slack allows
+        if head is None:
+            return BatchRule(run_decode=True, prefill_budget=0,
+                             prefill_exclusive=False)
+        if w.decode_batch == 0:
+            return BatchRule(run_decode=True,
+                             prefill_budget=self.prefill_token_budget,
+                             prefill_exclusive=False)
+        chunk = self.toggle.chunk_for(w, head.slo.tpot)
+        t_chunk = self.predictor.predict_prefill(
+            min(chunk, head.remaining_prefill), int(w.decode_sum_ctx))
+        budget = max(w.min_tpot_slack, 0.0) / self.toggle.cfg.slack_safety
+        if t_chunk <= budget:
+            return BatchRule(run_decode=True, prefill_budget=chunk,
+                             prefill_exclusive=False)
+        return BatchRule(run_decode=True, prefill_budget=0,
+                         prefill_exclusive=False)
+
+
+class TropicalPPPolicy(TropicalPolicy):
+    """Beyond-paper extensions on top of the faithful Tropical:
+    * EDF + hopeless-last prefill queue order (SLO-aware queueing);
+    * slack-sized prefill chunks instead of the fixed 2048 (§IV-B note:
+      the paper uses a fixed chunk; sizing it to the currently banked
+      slack extracts more multiplexing throughput at equal TPOT safety).
+    Reported separately in EXPERIMENTS.md §Repro vs §Beyond."""
+    name = "tropical++"
+    queue_discipline = "edf"
+
+    def __init__(self, workers, predictor, n_prefill: Optional[int] = None,
+                 toggle_config: Optional[ToggleConfig] = None):
+        super().__init__(
+            workers, predictor, n_prefill,
+            toggle_config or ToggleConfig(slack_chunking=True))
+
+
+POLICIES = {
+    "vllm": VLLMPolicy,
+    "sarathi": SarathiPolicy,
+    "distserve": DistServePolicy,
+    "tropical": TropicalPolicy,
+    "tropical++": TropicalPPPolicy,
+}
+
+
+def make_policy(name: str, workers, predictor, **kw) -> Policy:
+    return POLICIES[name](workers, predictor, **kw)

@@ -1,0 +1,104 @@
+"""Execution-time predictor (paper §IV-C).
+
+The toggle "leverages offline profiling tools to estimate both the execution
+time of a prefill request and the queuing time when scheduling to the local
+worker". Two implementations share the interface:
+
+* ``AnalyticalPredictor`` — wraps the roofline CostModel (what the simulator
+  itself uses, optionally with a safety margin; predictor error can be
+  injected for robustness experiments).
+* ``ProfiledPredictor`` — piecewise-linear interpolation over an offline
+  profile table {(tokens, ctx) -> seconds}, the way a real deployment
+  profiles its worker; built by ``profile_worker`` from any executor.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.serving.costmodel import CostModel
+
+
+class Predictor:
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
+        raise NotImplementedError
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
+        raise NotImplementedError
+
+    def predict_migration(self, ctx_tokens: int) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class AnalyticalPredictor(Predictor):
+    cost: CostModel
+    safety: float = 1.1          # conservative over-estimate (paper: the
+                                 # toggle "conservatively sends requests")
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
+        return self.cost.prefill_time(tokens, ctx_offset) * self.safety
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
+        return self.cost.decode_iter_time(n_decode, sum_ctx) * self.safety
+
+    def predict_migration(self, ctx_tokens: int) -> float:
+        return self.cost.migration_time(ctx_tokens) * self.safety
+
+
+class ProfiledPredictor(Predictor):
+    """Interpolates a profiled (tokens -> seconds) table; ctx contributions
+    enter linearly with a profiled per-ctx-token coefficient."""
+
+    def __init__(self, prefill_points: Sequence[tuple[int, float]],
+                 decode_points: Sequence[tuple[int, float, float]],
+                 ctx_coeff: float, migration_coeff: float,
+                 safety: float = 1.1):
+        self.prefill_points = sorted(prefill_points)
+        self.decode_points = sorted(decode_points)
+        self.ctx_coeff = ctx_coeff
+        self.migration_coeff = migration_coeff
+        self.safety = safety
+
+    @staticmethod
+    def _interp(points, x):
+        xs = [p[0] for p in points]
+        i = bisect.bisect_left(xs, x)
+        if i == 0:
+            lo, hi = points[0], points[min(1, len(points) - 1)]
+        elif i >= len(points):
+            lo, hi = points[-2] if len(points) > 1 else points[-1], points[-1]
+        else:
+            lo, hi = points[i - 1], points[i]
+        if hi[0] == lo[0]:
+            return lo[1]
+        t = (x - lo[0]) / (hi[0] - lo[0])
+        return lo[1] + t * (hi[1] - lo[1])
+
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
+        base = self._interp(self.prefill_points, tokens)
+        return (base + self.ctx_coeff * ctx_offset * tokens) * self.safety
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
+        base = self._interp([(b, t) for b, t, _ in self.decode_points], n_decode)
+        return (base + self.ctx_coeff * sum_ctx) * self.safety
+
+    def predict_migration(self, ctx_tokens: int) -> float:
+        return self.migration_coeff * ctx_tokens * self.safety
+
+
+def profile_worker(step_fn: Callable[[int, float, int], float],
+                   token_grid: Sequence[int] = (128, 512, 2048, 8192),
+                   batch_grid: Sequence[int] = (1, 8, 32, 128),
+                   ctx_probe: int = 8192) -> ProfiledPredictor:
+    """Build a ProfiledPredictor by measuring ``step_fn(n_decode, sum_ctx,
+    prefill_tokens) -> seconds`` — works against the real executor or the
+    simulator alike (offline profiling per §IV-C)."""
+    prefill_points = [(t, step_fn(0, 0.0, t)) for t in token_grid]
+    decode_points = [(b, step_fn(b, float(b * 512), 0), 512.0)
+                     for b in batch_grid]
+    t0 = step_fn(1, 0.0, 0)
+    t1 = step_fn(1, float(ctx_probe), 0)
+    ctx_coeff = max(0.0, (t1 - t0) / ctx_probe)
+    return ProfiledPredictor(prefill_points, decode_points, ctx_coeff,
+                             migration_coeff=1e-9)

@@ -1,0 +1,114 @@
+"""Request lifecycle + SLO bookkeeping (paper §II-B).
+
+Timestamps are simulation-clock (or wall-clock for the real executor)
+seconds. TTFT/TPOT follow the paper's Eq. (1)-(3):
+
+    TTFT  = first_token_time - arrival
+    TPOT  = (sum of decode-phase time) / (#generated tokens beyond first)
+    A     = |R_TTFT ∩ R_TPOT| / |R|
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class Phase(enum.Enum):
+    QUEUED_PREFILL = "queued_prefill"
+    PREFILLING = "prefilling"
+    MIGRATING = "migrating"
+    QUEUED_DECODE = "queued_decode"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    ttft: float     # seconds
+    tpot: float     # seconds / output token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    arrival_time: float
+    prompt_len: int
+    output_len: int            # tokens to generate (incl. first token)
+    slo: SLOSpec
+
+    # --- runtime state -----------------------------------------------------
+    phase: Phase = Phase.QUEUED_PREFILL
+    worker: Optional[int] = None          # current worker id
+    prefilled_tokens: int = 0             # chunked-prefill progress
+    generated_tokens: int = 0
+    prefill_start: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    decode_time: float = 0.0              # accumulated decode-phase seconds
+    tpot_slack: float = 0.0               # paper §IV-B accumulated slack
+    migrations: int = 0
+    restarts: int = 0                     # fault-tolerance: re-prefills
+
+    # ------------------------------------------------------------------ SLO
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.generated_tokens
+
+    @property
+    def remaining_prefill(self) -> int:
+        return max(0, self.prompt_len - self.prefilled_tokens)
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def tpot(self) -> Optional[float]:
+        if self.finish_time is None or self.generated_tokens <= 1:
+            return 0.0 if self.finish_time is not None else None
+        return self.decode_time / (self.generated_tokens - 1)
+
+    def ttft_ok(self) -> bool:
+        t = self.ttft()
+        return t is not None and t <= self.slo.ttft
+
+    def tpot_ok(self) -> bool:
+        t = self.tpot()
+        return t is not None and t <= self.slo.tpot
+
+    def slo_ok(self) -> bool:
+        return self.ttft_ok() and self.tpot_ok()
+
+    # ------------------------------------------------------- event recording
+    def record_decode_iteration(self, duration: float) -> None:
+        """One decode iteration this request took part in (paper §IV-B:
+        slack accumulates by TPOT_SLO - iteration_time)."""
+        self.decode_time += duration
+        self.generated_tokens += 1
+        self.tpot_slack += self.slo.tpot - duration
+
+    def record_first_token(self, now: float) -> None:
+        self.first_token_time = now
+        self.generated_tokens = 1
+        # one iteration of initial credit: TPOT is measured per *generated*
+        # token, so the budget of the first decode iteration is available
+        # the moment the request enters decode (paper Fig. 7 banks slack
+        # from the first tokens before admitting a prefill).
+        self.tpot_slack = self.slo.tpot
+
+    def effective_slack(self, base_iter: float, horizon: int = 4) -> float:
+        """Delay this request can absorb NOW without its final TPOT
+        average exceeding the SLO (paper §II-B: users read at an average
+        rate, so early/remaining tokens bank budget). banked slack plus a
+        bounded forward credit over the next ``horizon`` iterations at the
+        current base decode rate."""
+        remaining = max(0, self.output_len - self.generated_tokens)
+        credit = max(0.0, (self.slo.tpot - base_iter)) * min(remaining,
+                                                             horizon)
+        return self.tpot_slack + credit
+
+    def ttft_deadline_slack(self, now: float) -> float:
+        """Remaining TTFT budget at ``now`` (before any predicted costs)."""
+        return self.slo.ttft - (now - self.arrival_time)

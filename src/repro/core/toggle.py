@@ -1,0 +1,230 @@
+"""The Multiplexing Toggle (paper §IV) — Tropical's cluster scheduler.
+
+Responsibilities (Fig. 6):
+  * assignment: classify workers as PREFILL or MULTIPLEX;
+  * dispatching: route requests
+      Path ① -> prefill workers (queue-dominated regime),
+      Path ② -> multiplexing workers directly (interference within budget);
+  * track per-worker status: HBM watermark, local queue, decode batch,
+    accumulated TPOT slack (§IV-B);
+  * role transitions: P->M when every multiplexing worker is above the HBM
+    watermark; M->P when prefill queuing persistently violates TTFT slack.
+    Transitions only change *admission* — running decodes drain in place,
+    so there is no migration/recompute overhead (the paper's asymmetry
+    argument: D->P switching is the expensive direction and is avoided).
+
+The toggle is executor-agnostic: it sees ``WorkerView`` state snapshots and
+returns dispatch decisions; the engine (serving/engine.py) owns execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+from repro.core.predictor import Predictor
+from repro.core.request import Phase, Request
+
+
+class Role(enum.Enum):
+    PREFILL = "prefill"
+    MULTIPLEX = "multiplex"
+
+
+@dataclasses.dataclass
+class WorkerView:
+    """Scheduler-visible state of one worker (kept current by the engine)."""
+    wid: int
+    role: Role
+    # prefill side
+    queued_prefill_tokens: int = 0          # tokens waiting in local queue
+    queued_requests: int = 0
+    # decode side
+    decode_batch: int = 0                   # running decode requests
+    decode_sum_ctx: float = 0.0
+    min_tpot_slack: float = float("inf")    # min over running decodes
+    # memory
+    kv_used_tokens: float = 0.0
+    kv_capacity_tokens: float = 1.0
+    alive: bool = True
+
+    @property
+    def hbm_util(self) -> float:
+        return self.kv_used_tokens / max(self.kv_capacity_tokens, 1.0)
+
+    @property
+    def unfinished_tokens(self) -> float:
+        """InFaaS-style load metric: fewest unfinished token count."""
+        return self.queued_prefill_tokens + self.decode_sum_ctx
+
+
+@dataclasses.dataclass(frozen=True)
+class ToggleConfig:
+    hbm_watermark: float = 0.90         # stop Path-② above this
+    hbm_admission: float = 0.85         # don't admit prefill into M above
+    slack_safety: float = 1.2           # chunk must fit slack*1/safety
+    decode_iter_guard: float = 0.8      # don't multiplex when decode iter
+                                        # time > guard * TPOT_SLO (§IV-C)
+    chunk_tokens: int = 2048            # chunked prefill on M workers
+    slack_chunking: bool = False        # beyond-paper: size chunk by slack
+    min_chunk: int = 256
+    queue_violation_window: int = 16    # dispatches between role reviews
+    role_transitions: bool = True
+
+
+class MultiplexingToggle:
+    def __init__(self, workers: Sequence[WorkerView], predictor: Predictor,
+                 config: ToggleConfig = ToggleConfig()):
+        self.workers = {w.wid: w for w in workers}
+        self.predictor = predictor
+        self.cfg = config
+        self._ttft_pressure = 0           # recent Path-① slack violations
+        self._dispatches = 0
+
+    # ------------------------------------------------------------- helpers
+    def _alive(self, role: Optional[Role] = None):
+        return [w for w in self.workers.values()
+                if w.alive and (role is None or w.role == role)]
+
+    def chunk_for(self, w: WorkerView, tpot_slo: float) -> int:
+        """Prefill chunk size admissible on multiplexing worker ``w``."""
+        if not self.cfg.slack_chunking:
+            return self.cfg.chunk_tokens
+        # beyond-paper: binary-search the largest chunk the current slack
+        # budget allows (paper uses a fixed 2048 chunk).
+        lo, hi = self.cfg.min_chunk, self.cfg.chunk_tokens
+        budget = w.min_tpot_slack / self.cfg.slack_safety
+        if self.predictor.predict_prefill(lo, int(w.decode_sum_ctx)) > budget:
+            return lo
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.predictor.predict_prefill(mid, int(w.decode_sum_ctx)) <= budget:
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    # ----------------------------------------------------------- Path ②
+    def _multiplex_ok(self, w: WorkerView, req: Request) -> bool:
+        """§IV-B / §IV-C admission: slack, decode-iter guard, HBM."""
+        cfg = self.cfg
+        if w.role != Role.MULTIPLEX or not w.alive:
+            return False
+        if w.hbm_util > cfg.hbm_admission:
+            return False
+        if (w.kv_used_tokens + req.prompt_len + req.output_len
+                > cfg.hbm_watermark * w.kv_capacity_tokens):
+            return False
+        chunk = min(self.chunk_for(w, req.slo.tpot), req.remaining_prefill
+                    or req.prompt_len)
+        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx))
+        if w.decode_batch > 0:
+            # per-iteration slack must absorb the inserted chunk
+            if t_chunk * self.cfg.slack_safety > max(w.min_tpot_slack, 0.0):
+                return False
+            # decode batch already near the TPOT SLO -> no multiplexing
+            t_iter = self.predictor.predict_decode_iter(
+                w.decode_batch, w.decode_sum_ctx)
+            if t_iter > cfg.decode_iter_guard * req.slo.tpot:
+                return False
+        return True
+
+    # ----------------------------------------------------------- Path ①
+    def _prefill_queue_time(self, w: WorkerView) -> float:
+        return self.predictor.predict_prefill(max(w.queued_prefill_tokens, 0))
+
+    def _prefill_ok(self, w: WorkerView, req: Request, now: float) -> bool:
+        t_exec = self.predictor.predict_prefill(req.prompt_len)
+        t_queue = self._prefill_queue_time(w)
+        return t_queue + t_exec <= req.ttft_deadline_slack(now)
+
+    # ---------------------------------------------------------- dispatch
+    def _predict_ttft_on_prefill(self, w: WorkerView, req: Request) -> float:
+        return self._prefill_queue_time(w) \
+            + self.predictor.predict_prefill(req.prompt_len)
+
+    def _predict_ttft_on_multiplex(self, w: WorkerView, req: Request) -> float:
+        """Chunked-prefill completion on an M worker: each chunk is admitted
+        once the batch has re-banked ~chunk_time of slack, i.e. the prefill
+        advances at chunk/(t_chunk + catchup) tokens/s."""
+        chunk = self.cfg.chunk_tokens
+        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx))
+        base = self.predictor.predict_decode_iter(
+            max(w.decode_batch, 1), w.decode_sum_ctx)
+        margin = max(req.slo.tpot - base, 1e-3)
+        catchup = t_chunk / margin * base        # iterations to re-bank
+        rate = chunk / (t_chunk + catchup)
+        queue = w.queued_prefill_tokens / max(rate, 1.0)
+        return queue + req.prompt_len / max(rate, 1.0)
+
+    def dispatch_prefill(self, req: Request, now: float) -> Optional[int]:
+        """Choose the worker minimising predicted TTFT among SLO-admissible
+        paths (Path ① prefill workers / Path ② multiplexing workers); the
+        per-path admission checks of §IV-B/C gate candidacy."""
+        self._dispatches += 1
+        if self.cfg.role_transitions and \
+                self._dispatches % self.cfg.queue_violation_window == 0:
+            self.review_roles(now)
+
+        slack = req.ttft_deadline_slack(now)
+        cands: list[tuple[float, int, bool]] = []   # (t_pred, wid, in_slo)
+        for w in self._alive(Role.PREFILL):
+            t = self._predict_ttft_on_prefill(w, req)
+            cands.append((t, w.wid, t <= slack))
+        for w in self._alive(Role.MULTIPLEX):
+            if self._multiplex_ok(w, req):
+                t = self._predict_ttft_on_multiplex(w, req)
+                cands.append((t, w.wid, t <= slack))
+        if not cands:
+            m_any = self._alive(Role.MULTIPLEX) or self._alive()
+            if not m_any:
+                return None
+            self._ttft_pressure += 1
+            return min(m_any, key=lambda w: w.unfinished_tokens).wid
+        ok = [c for c in cands if c[2]]
+        if not ok:
+            self._ttft_pressure += 1
+        pick = min(ok or cands, key=lambda c: c[0])
+        return pick[1]
+
+    def dispatch_decode(self, req: Request, now: float) -> Optional[int]:
+        """After Path-① prefill completes: pick a multiplexing worker for the
+        decode phase (KV migrates). InFaaS least-unfinished-tokens."""
+        need = req.context_len + (req.output_len - req.generated_tokens)
+        cands = [w for w in self._alive(Role.MULTIPLEX)
+                 if w.kv_used_tokens + need
+                 <= self.cfg.hbm_watermark * w.kv_capacity_tokens]
+        if not cands:
+            cands = self._alive(Role.MULTIPLEX)
+        if not cands:
+            return None
+        return min(cands, key=lambda w: w.unfinished_tokens).wid
+
+    # ------------------------------------------------------ role management
+    def review_roles(self, now: float) -> None:
+        """§IV-C: all M workers above watermark -> P becomes M; persistent
+        prefill TTFT pressure -> one M (least decode load) becomes P."""
+        cfg = self.cfg
+        m = self._alive(Role.MULTIPLEX)
+        p = self._alive(Role.PREFILL)
+        if m and all(w.hbm_util > cfg.hbm_watermark for w in m) and p:
+            conv = min(p, key=lambda w: w.queued_prefill_tokens)
+            conv.role = Role.MULTIPLEX
+            self._ttft_pressure = 0
+            return
+        if self._ttft_pressure >= cfg.queue_violation_window and len(m) > 1:
+            conv = min(m, key=lambda w: w.decode_batch)
+            if conv.hbm_util < 0.5:
+                conv.role = Role.PREFILL
+        self._ttft_pressure = 0
+
+    # --------------------------------------------------------------- faults
+    def on_worker_failure(self, wid: int) -> None:
+        if wid in self.workers:
+            self.workers[wid].alive = False
+
+    def on_worker_recovered(self, wid: int, role: Role) -> None:
+        w = self.workers.get(wid)
+        if w is not None:
+            w.alive = True
+            w.role = role

@@ -1,0 +1,154 @@
+"""Chunked-prefill attention — Pallas TPU kernel.
+
+Tropical's multiplexing workers run prefill in chunks piggybacked on decode
+batches (§IV-B): a chunk of Sq new tokens, starting at per-request offset
+``starts[b]``, attends to the KV cache prefix [0, starts[b]+i] (the chunk's
+own K/V have already been written at [starts, starts+Sq)).
+
+Flash-attention layout: grid (B, Hkv, Sq/bq, Sk/bk); the KV-block dim
+iterates fastest and carries the online-softmax state in VMEM scratch.
+KV blocks entirely above the causal frontier (or entirely below the
+sliding-window floor) are skipped with @pl.when — chunked prefill against
+a long prefix is mostly *skippable* work, which is where the kernel beats
+a dense mask.
+
+Block sizes default to (bq=128|Sq, bk=256) — MXU-aligned with D=64..256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    starts_ref,           # (B,) scalar prefetch
+    q_ref,                # (1, bq, 1, G, D)
+    k_ref,                # (1, bk, 1, D)
+    v_ref,                # (1, bk, 1, D)
+    o_ref,                # (1, bq, 1, G, D)
+    m_ref, l_ref, acc_ref,
+    *,
+    bq: int,
+    bk: int,
+    n_kv_blocks: int,
+    softcap,
+    window,
+):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    start = starts_ref[b]
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal frontier for this q block: kpos <= start + iq*bq + (bq-1)
+    hi = start + (iq + 1) * bq
+    lo = 0 if window is None else start + iq * bq - window + 1
+    block_lo = jk * bk
+    relevant = (block_lo < hi) if window is None else (
+        (block_lo < hi) & (block_lo + bk > lo))
+
+    @pl.when(relevant)
+    def _step():
+        g, d = q_ref.shape[3], q_ref.shape[4]
+        q = q_ref[0, :, 0].astype(jnp.float32).reshape(bq * g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * (1.0 / math.sqrt(d))                       # (bq*G, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = start + iq * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, 1, 1), 0)                  # (bq,1,1)
+        kpos = block_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, bk), 2)
+        ok = kpos <= qpos
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+        ok = jnp.broadcast_to(ok, (bq, g, bk)).reshape(bq * g, bk)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finalize():
+        g, d = q_ref.shape[3], q_ref.shape[4]
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = (acc_ref[...] / l).reshape(bq, g, d)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(
+    q: jax.Array,            # (B, Sq, Hq, D) — the chunk's queries (roped)
+    k_cache: jax.Array,      # (B, Smax, Hkv, D) — chunk K/V already written
+    v_cache: jax.Array,
+    starts: jax.Array,       # (B,) int32 chunk start offsets
+    *,
+    softcap: float | None = None,
+    window: int | None = None,
+    bq: int = 128,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    bq = min(bq, sq)
+    bk = min(bk, smax)
+    assert sq % bq == 0 and smax % bk == 0, (sq, bq, smax, bk)
+    n_kv_blocks = smax // bk
+
+    def q_map(bi, h, iq, jk, st):
+        return (bi, iq, h, 0, 0)
+
+    def kv_map(bi, h, iq, jk, st):
+        return (bi, jk, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, sq // bq, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, d), q_map),
+            pl.BlockSpec((1, bk, 1, d), kv_map),
+            pl.BlockSpec((1, bk, 1, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, g, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, 1), jnp.float32),
+            pltpu.VMEM((bq * g, d), jnp.float32),
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv_blocks=n_kv_blocks,
+                          softcap=softcap, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )
+    qg = q.reshape(b, sq, hkv, g, d)
+    out = kernel(starts, qg, k_cache, v_cache)
+    return out.reshape(b, sq, hq, d)

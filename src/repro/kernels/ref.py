@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (same math, no tiling)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _soft_cap(s, cap):
+    return s if cap is None else cap * jnp.tanh(s / cap)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        softcap=None):
+    """q: (B, Hq, D); pages (N, ps, Hkv, D); block_tables (B, P); lengths (B,).
+    Gathers each request's pages into a dense (P*ps, Hkv, D) cache and runs
+    masked attention."""
+    b, hq, d = q.shape
+    _, ps, hkv, _ = k_pages.shape
+    g = hq // hkv
+    max_pages = block_tables.shape[1]
+    s_max = max_pages * ps
+
+    safe_tables = jnp.maximum(block_tables, 0)
+    k = k_pages[safe_tables]          # (B, P, ps, Hkv, D)
+    v = v_pages[safe_tables]
+    k = k.reshape(b, s_max, hkv, d)
+    v = v.reshape(b, s_max, hkv, d)
+
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    s = _soft_cap(s, softcap)
+    mask = jnp.arange(s_max)[None, :] < lengths[:, None]   # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def chunked_prefill_attention_ref(q, k_cache, v_cache, starts, *,
+                                  softcap=None, window=None):
+    """q: (B, Sq, Hq, D); caches (B, Smax, Hkv, D); starts (B,)."""
+    b, sq, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    s = _soft_cap(s, softcap)
+    qpos = starts[:, None] + jnp.arange(sq)[None, :]       # (B, Sq)
+    kpos = jnp.arange(smax)
+    ok = kpos[None, None, :] <= qpos[:, :, None]           # (B, Sq, Smax)
+    if window is not None:
+        ok = ok & (kpos[None, None, :] > qpos[:, :, None] - window)
+    s = jnp.where(ok[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

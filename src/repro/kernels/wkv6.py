@@ -1,0 +1,137 @@
+"""Chunked WKV6 recurrence — Pallas TPU kernel.
+
+RWKV-6's time-mix is the attention-equivalent hot spot of the rwkv6-7b
+arch: a linear recurrence with data-dependent per-channel decay,
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T),   S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+
+The chunked-parallel form (models/rwkv6.wkv_chunked) turns the T-step scan
+into T/C chunk steps of C x C / C x D matmuls — MXU work instead of a
+sequential VPU scan. This kernel keeps the running (D_k x D_v) state in
+VMEM f32 scratch across the chunk grid dim; all factored exponents are
+taken relative to the chunk-midpoint cumulative decay, which is f32-safe
+under the decay clip applied by the model (see models/rwkv6).
+
+Grid: (B, H, T/C) — chunk dim iterates fastest. Per-step VMEM: four
+(C, D) tiles + (D, D) state + (C, C) intra matrix ≈ 50 KB at C=D=64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    r_ref, k_ref, v_ref, w_ref,     # (1, C, 1, D)
+    u_ref,                          # (1, D)
+    s0_ref,                         # (1, 1, D, D)
+    o_ref,                          # (1, C, 1, D)
+    sT_ref,                         # (1, 1, D, D)
+    state,                          # VMEM (D, D) f32
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)        # (C, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                 # (D,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)                   # inclusive (C, D)
+    total = cum[-1:, :]                              # (1, D)
+    ref_row = cum[chunk // 2 - 1:chunk // 2, :]      # midpoint reference
+
+    s = state[...]
+    # state contribution: r_i ⊙ prod_{j<i} w · S   (exponent <= 0: safe)
+    r_state = r * jnp.exp(cum - logw)
+    out_state = jax.lax.dot_general(
+        r_state, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (C, D_v)
+    # intra-chunk (midpoint-referenced factorisation)
+    r_dec = r * jnp.exp(cum - logw - ref_row)
+    kj = k * jnp.exp(ref_row - cum)
+    att = jax.lax.dot_general(
+        r_dec, kj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (C, C)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(jj < ii, att, 0.0)               # strict lower triangle
+    diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)
+    out_intra = jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + diag * v
+
+    o_ref[0, :, 0, :] = (out_state + out_intra).astype(o_ref.dtype)
+
+    # state update: S' = exp(total) ⊙ S + sum_j (k_j exp(total-cum_j)) v_j^T
+    k_dec = k * jnp.exp(total - cum)
+    state[...] = jnp.exp(total[0])[:, None] * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        sT_ref[0, 0] = state[...].astype(sT_ref.dtype)
+
+
+def wkv6_chunked(
+    r: jax.Array,       # (B, T, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,       # decay in (0,1), clipped per models/rwkv6
+    u: jax.Array,       # (H, D) bonus
+    s0: jax.Array,      # (B, H, D, D) f32 carried state
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    """Returns (out (B,T,H,D), sT (B,H,D,D))."""
+    b, t, h, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n_chunks = t // chunk
+
+    def x_map(bi, hi, ci):
+        return (bi, ci, hi, 0)
+
+    def u_map(bi, hi, ci):
+        return (hi, 0)
+
+    def s_map(bi, hi, ci):
+        return (bi, hi, 0, 0)
+
+    grid = (b, h, n_chunks)
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, d), x_map),
+            pl.BlockSpec((1, chunk, 1, d), x_map),
+            pl.BlockSpec((1, chunk, 1, d), x_map),
+            pl.BlockSpec((1, chunk, 1, d), x_map),
+            pl.BlockSpec((1, d), u_map),
+            pl.BlockSpec((1, 1, d, d), s_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, d), x_map),
+            pl.BlockSpec((1, 1, d, d), s_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )
+    return kernel(r, k, v, w, u, s0)

@@ -1,0 +1,406 @@
+"""Compiled-HLO analysis: collective bytes + roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs / bytes-accessed but no
+collective traffic, so we parse the post-SPMD HLO text and sum operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+Every layer/chunk loop is unrolled in dry-run configs (see
+ModelConfig.scan_layers / attn_unroll_chunks) so no while-trip-count
+multipliers are needed; the only remaining scans are the rwkv/mamba time
+recurrences, which contain no collectives and contribute only a few
+percent of FLOPs (documented in EXPERIMENTS.md §Methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Collective traffic from compiled (post-SPMD) HLO.
+
+    Two accountings per kind:
+      * operand bytes — the assignment's formula (sum of operand sizes);
+      * wire bytes — per-device link traffic under ring algorithms
+        (all-gather / reduce-scatter ~ (N-1)/N x full buffer; all-reduce ~
+        2x that; permute = operand). Wire bytes feed the collective
+        roofline term.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    wire = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"\s{k}(-start)?\(", stripped):
+                kind = k
+                break
+        if kind is None:
+            continue
+        # result shape sits between '=' and the op name in compiled HLO:
+        #   %all-reduce.5 = f32[8,1,4096]{2,1,0} all-reduce(%fusion)
+        rhs = stripped.split("=", 1)[1] if "=" in stripped else stripped
+        head = rhs.split(kind)[0]
+        result_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        n = _group_size(stripped)
+        ring = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-gather":
+            operand_b = result_b // max(n, 1)
+            wire_b = int(result_b * ring)
+        elif kind == "reduce-scatter":
+            operand_b = result_b * n          # operand is the full buffer
+            wire_b = int(operand_b * ring)
+        elif kind == "all-reduce":
+            operand_b = result_b
+            wire_b = int(2 * result_b * ring)
+        elif kind == "all-to-all":
+            operand_b = result_b
+            wire_b = int(result_b * ring)
+        else:  # collective-permute
+            operand_b = result_b
+            wire_b = result_b
+        out[kind] += operand_b
+        wire[kind] += wire_b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["wire"] = wire
+    out["wire_total"] = sum(wire[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+# ------------------------------------------------- while-body flop correction
+
+_BLOCK_HEAD = re.compile(r"^(%[\w.\-]+|ENTRY [%\w.\-]+) \((.*?)\) -> .* \{")
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+) = ([a-z0-9]+)\[([\d,]*)\]")
+_PARAM_RE = re.compile(r"(%?[\w.\-]+): ([a-z0-9]+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_CONST_RE = re.compile(r"(%[\w.\-]+) = s32\[\] constant\((\d+)\)")
+_CMP_RE = re.compile(
+    r"compare\((?:s32\[\] )?(%[\w.\-]+), (?:s32\[\] )?(%[\w.\-]+)\)"
+    r".*direction=LT")
+_DOT_RE = re.compile(
+    r"(%[\w.\-]+) = ([a-z0-9]+)\[([\d,]*)\][^=]*? dot\((%[\w.\-]+), "
+    r"(%[\w.\-]+)\)(.*)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _split_blocks(hlo_text: str) -> dict[str, list[str]]:
+    blocks: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _BLOCK_HEAD.match(line.strip())
+        if m:
+            name = m.group(1).replace("ENTRY ", "")
+            cur = name
+            blocks[cur] = [line]
+        elif cur is not None:
+            blocks[cur].append(line)
+            if line.strip() == "}":
+                cur = None
+    return blocks
+
+
+def _shape_map(block_lines: list[str]) -> dict[str, tuple[str, list[int]]]:
+    shapes = {}
+    header = block_lines[0]
+    for name, dt, dims in _PARAM_RE.findall(header):
+        key = name if name.startswith("%") else "%" + name
+        shapes[key] = (dt, [int(d) for d in dims.split(",") if d])
+    for line in block_lines[1:]:
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = (
+                m.group(2), [int(d) for d in m.group(3).split(",") if d])
+    return shapes
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = dict(_CONST_RE.findall("\n".join(cond_lines)))
+    m = _CMP_RE.search("\n".join(cond_lines))
+    if m:
+        for side in (m.group(2), m.group(1)):
+            if side in consts:
+                return int(consts[side])
+    # fall back: the largest s32 constant in the condition
+    vals = [int(v) for v in consts.values()]
+    return max(vals) if vals else 1
+
+
+def _body_dot_flops(body_lines: list[str]) -> tuple[float, float]:
+    """(dot flops, dot operand+result bytes) for one body iteration."""
+    shapes = _shape_map(body_lines)
+    flops = 0.0
+    bytes_ = 0.0
+    for line in body_lines:
+        m = _DOT_RE.search(line)
+        if not m:
+            continue
+        _, rdt, rdims, lhs, rhs, tail = m.groups()
+        rshape = [int(d) for d in rdims.split(",") if d]
+        out = 1
+        for d in rshape:
+            out *= d
+        contract = 1
+        mc = _LHS_C_RE.search(tail)
+        if mc and lhs in shapes:
+            ldims = shapes[lhs][1]
+            for ci in (int(c) for c in mc.group(1).split(",") if c):
+                if ci < len(ldims):
+                    contract *= ldims[ci]
+        flops += 2.0 * out * contract
+        bytes_ += out * _DTYPE_BYTES.get(rdt, 4)
+        for op in (lhs, rhs):
+            if op in shapes:
+                dt, dims = shapes[op]
+                n = 1
+                for d in dims:
+                    n *= d
+                bytes_ += n * _DTYPE_BYTES.get(dt, 4)
+    return flops, bytes_
+
+
+def scan_correction(hlo_text: str) -> dict:
+    """Extra (trip-1) x body cost for every while loop: XLA's static cost
+    model counts loop bodies once, so scanned attention chunks / time
+    recurrences are under-counted by the trip count. Returns per-device
+    {flops, bytes, loops:[(trip, body_flops)]}."""
+    blocks = _split_blocks(hlo_text)
+    extra_f = 0.0
+    extra_b = 0.0
+    loops = []
+    for name, lines in blocks.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            if cond not in blocks or body not in blocks:
+                continue
+            trip = _trip_count(blocks[cond])
+            bf, bb = _body_dot_flops(blocks[body])
+            if trip > 1:
+                extra_f += (trip - 1) * bf
+                extra_b += (trip - 1) * bb
+                loops.append({"trip": trip, "body_dot_flops": bf})
+    return {"flops": extra_f, "bytes": extra_b, "loops": loops}
+
+
+_CALL_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=)(%[\w.\-]+)")
+
+
+def _block_multipliers(blocks: dict) -> dict[str, float]:
+    """Execution-count multiplier per computation via the call graph:
+    while bodies execute trip times (from the paired condition), other
+    callees inherit their caller's multiplier. Handles nested scans
+    (layer-scan x chunk-scan) by composition."""
+    # edges: callee -> (caller, factor)
+    edges: dict[str, tuple[str, float]] = {}
+    for caller, lines in blocks.items():
+        text = "\n".join(lines)
+        for m in _WHILE_RE.finditer(text):
+            cond, body = m.group(1), m.group(2)
+            trip = _trip_count(blocks.get(cond, [])) if cond in blocks else 1
+            edges[body] = (caller, float(max(trip, 1)))
+            edges[cond] = (caller, float(max(trip, 1)))
+        for name in _CALL_RE.findall(text):
+            if name not in edges:
+                edges[name] = (caller, 1.0)
+
+    mult: dict[str, float] = {}
+
+    def resolve(b: str, depth=0) -> float:
+        if b in mult:
+            return mult[b]
+        if depth > 50 or b not in edges:
+            mult[b] = 1.0
+            return 1.0
+        caller, factor = edges[b]
+        mult[b] = factor * resolve(caller, depth + 1)
+        return mult[b]
+
+    for b in blocks:
+        resolve(b)
+    return mult
+
+
+def module_cost(hlo_text: str) -> dict:
+    """Per-device MXU work + collective traffic with execution-count
+    multipliers (scan bodies count trip x, nested loops compose).
+
+    The dot-flop measure is the roofline-relevant compute term — verified
+    to match MODEL_FLOPS/chip exactly on a hand-checked decode cell,
+    whereas XLA-CPU cost_analysis()['flops'] also counts VPU/elementwise
+    emulation noise (converts, masks, scatters) and overstates 10-100x."""
+    blocks = _split_blocks(hlo_text)
+    mult = _block_multipliers(blocks)
+    f_total = 0.0
+    b_total = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    wire = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    n_loops = 0
+    for name, lines in blocks.items():
+        m = mult.get(name, 1.0)
+        if m > 1:
+            n_loops += 1
+        f, b = _body_dot_flops(lines)
+        f_total += m * f
+        b_total += m * b
+        c = collective_bytes("\n".join(lines))
+        for k in _COLLECTIVES:
+            coll[k] += m * c[k]
+            wire[k] += m * c["wire"][k]
+            counts[k] += c["counts"][k]
+    out = dict(coll)
+    out["total"] = sum(coll.values())
+    out["wire"] = wire
+    out["wire_total"] = sum(wire.values())
+    out["counts"] = counts
+    return {"flops": f_total, "bytes": b_total, "collectives": out,
+            "n_multiplied_blocks": n_loops}
+
+
+def dot_cost(hlo_text: str) -> dict:
+    """Back-compat wrapper over module_cost."""
+    mc = module_cost(hlo_text)
+    return {"flops": mc["flops"], "bytes": mc["bytes"],
+            "loops": [None] * mc["n_multiplied_blocks"]}
+
+
+# ------------------------------------------------------------------ roofline
+
+PEAK_FLOPS = 197e12       # bf16 / chip (v5e)
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float              # per device (MXU dot flops, loop-corrected)
+    hlo_bytes: float              # per device (see memory accounting note)
+    coll_bytes: float             # per device
+    model_flops_per_device: float
+    useful_ratio: float           # model_flops / hlo_flops
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / modeled step time."""
+        useful = self.model_flops_per_device / PEAK_FLOPS
+        return useful / self.step_s if self.step_s > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(dot: dict, resident_bytes: float, coll: dict,
+             model_flops_total: float, n_devices: int) -> RooflineTerms:
+    """Three-term roofline per device.
+
+    compute    = parsed MXU dot flops (loop-corrected) / peak
+    memory     = max(resident-state bytes touched once per step
+                     [weights+caches+opt — the decode/train floor],
+                     dot operand+result traffic) / HBM bw
+    collective = ring wire bytes / link bw
+    (XLA-CPU cost_analysis is recorded raw in the JSON but not used: its
+    flops/bytes include f32-emulation artifacts that do not exist on TPU.)
+    """
+    flops = float(dot["flops"])
+    bytes_ = max(float(resident_bytes), float(dot["bytes"]))
+    cb = float(coll.get("wire_total", coll.get("total", 0.0)))
+    mf = model_flops_total / n_devices
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=cb / ICI_BW,
+        hlo_flops=flops, hlo_bytes=bytes_, coll_bytes=cb,
+        model_flops_per_device=mf,
+        useful_ratio=mf / flops if flops > 0 else 0.0,
+    )
+
+
+def model_flops(cfg, kind: str, batch: int, seq: int,
+                dec_len: Optional[int] = None) -> float:
+    """MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D (+attn) for
+    inference — the classical useful-work estimate."""
+    from repro.serving.costmodel import build_cost_spec
+    spec = build_cost_spec(cfg)
+    if kind == "train":
+        d = dec_len if cfg.family == "encdec" and dec_len else seq
+        tokens = batch * d
+        base = 6.0 * spec.n_active * tokens
+        if cfg.family == "encdec":
+            # encoder fwd+bwd over seq frames
+            enc_active = spec.n_params - spec.n_active
+            base += 6.0 * enc_active * batch * seq
+        attn = 3.0 * spec.attn_flops_per_ctx_token * (seq / 2) * tokens
+        return base + attn
+    if kind == "prefill":
+        tokens = batch * seq
+        base = 2.0 * spec.n_active * tokens
+        if cfg.family == "encdec":
+            enc_active = spec.n_params - spec.n_active
+            base = 2.0 * enc_active * tokens + 2.0 * spec.n_active * batch * (dec_len or 64)
+        attn = spec.attn_flops_per_ctx_token * (seq / 2) * tokens
+        return base + attn
+    # decode: one token against a seq-long context
+    base = 2.0 * spec.n_active * batch
+    attn = spec.attn_flops_per_ctx_token * seq * batch
+    return base + attn

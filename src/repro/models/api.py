@@ -1,0 +1,106 @@
+"""Uniform model API over all architecture families.
+
+Every family exposes:
+  init(rng)                          -> params
+  init_cache(batch, max_len)         -> cache/state pytree
+  prefill(params, cache, inputs, lengths) -> (last_logits, cache)
+  decode(params, cache, tokens, lengths)  -> (logits, cache)
+  loss(params, batch)                -> scalar
+plus shape-only variants (``*_spec``) for the dry-run.
+
+"inputs" is tokens (B, S) for LMs; whisper/vlm carry extra modality inputs
+in a dict (stub frontends per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6, transformer, whisper, zamba2
+from repro.models.layers import ModelConfig
+from repro.models.moe import EPInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    init_cache: Callable          # (batch, max_len) -> pytree
+    cache_spec: Callable          # (batch, max_len) -> ShapeDtypeStruct tree
+    prefill: Callable             # (params, cache, inputs, lengths, ep=None)
+    decode: Callable              # (params, cache, tokens, lengths, ep=None)
+    loss: Callable                # (params, batch, ep=None)
+    prefill_chunk: Optional[Callable] = None
+    # shape helpers for the dry-run / serving engine
+    enc_len_for: Callable = lambda seq: 0
+
+
+def _sds(tree):
+    return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def prefill_fn(params, cache, inputs, lengths, ep=None):
+            if isinstance(inputs, dict):
+                return transformer.prefill(
+                    params, cache, inputs["tokens"], lengths, cfg, ep=ep,
+                    prefix_embeds=inputs.get("prefix_embeds"))
+            return transformer.prefill(params, cache, inputs, lengths, cfg, ep=ep)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: transformer.init_lm(rng, cfg),
+            init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+            cache_spec=lambda b, s: transformer.cache_spec(cfg, b, s),
+            prefill=prefill_fn,
+            decode=lambda p, c, t, l, ep=None: transformer.decode(p, c, t, l, cfg, ep=ep),
+            loss=lambda p, batch, ep=None: transformer.lm_loss(p, batch, cfg, ep=ep),
+            prefill_chunk=lambda p, c, ch, st, ep=None: transformer.prefill_chunk(
+                p, c, ch, st, cfg, ep=ep),
+        )
+    if fam == "rwkv":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: rwkv6.init_lm(rng, cfg),
+            init_cache=lambda b, s: rwkv6.init_state(cfg, b),
+            cache_spec=lambda b, s: rwkv6.state_spec(cfg, b),
+            prefill=lambda p, c, t, l, ep=None: rwkv6.prefill(p, c, t, l, cfg),
+            decode=lambda p, c, t, l, ep=None: rwkv6.decode(p, c, t, l, cfg),
+            loss=lambda p, batch, ep=None: rwkv6.lm_loss(p, batch, cfg),
+        )
+    if fam == "hybrid":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: zamba2.init_lm(rng, cfg),
+            init_cache=lambda b, s: zamba2.init_state(cfg, b, s),
+            cache_spec=lambda b, s: zamba2.state_spec(cfg, b, s),
+            prefill=lambda p, c, t, l, ep=None: zamba2.prefill(p, c, t, l, cfg),
+            decode=lambda p, c, t, l, ep=None: zamba2.decode(p, c, t, l, cfg),
+            loss=lambda p, batch, ep=None: zamba2.lm_loss(p, batch, cfg),
+        )
+    if fam == "encdec":
+        def enc_len_for(seq):
+            return seq
+
+        def prefill_fn(params, cache, inputs, lengths, ep=None):
+            return whisper.prefill(params, cache, inputs["frames"],
+                                   inputs["tokens"], lengths, cfg)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: whisper.init_lm(rng, cfg),
+            init_cache=lambda b, s, enc_len=0: whisper.init_cache(
+                cfg, b, s, enc_len or max(8, s // 4)),
+            cache_spec=lambda b, s, enc_len=0: whisper.cache_spec(
+                cfg, b, s, enc_len or max(8, s // 4)),
+            prefill=prefill_fn,
+            decode=lambda p, c, t, l, ep=None: whisper.decode(p, c, t, l, cfg),
+            loss=lambda p, batch, ep=None: whisper.lm_loss(p, batch, cfg),
+            enc_len_for=enc_len_for,
+        )
+    raise ValueError(f"unknown family {fam}")

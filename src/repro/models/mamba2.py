@@ -1,0 +1,191 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) block — used by zamba2.
+
+Selective state space with scalar-per-head decay:
+
+    S_t = exp(dt_t A_h) S_{t-1} + dt_t x_t ⊗ B_t        (d_head × d_state)
+    y_t = C_t · S_t + D_h x_t
+
+Chunked-parallel form: because the decay is a *scalar* per head/step, every
+exponent in the chunked decomposition is <= 0, so it is f32-safe with no
+clipping (contrast rwkv6.wkv_chunked).
+
+State per layer: conv state (B, conv_k-1, d_conv_in) + SSD state
+(B, H, d_head, d_state) — O(1) decode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.layers import ModelConfig
+
+D_HEAD = 64
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // D_HEAD
+    d_conv_in = d_inner + 2 * cfg.ssm_state   # x + B + C (n_groups = 1)
+    return d_inner, n_heads, d_conv_in
+
+
+def init_block(rng, cfg: ModelConfig):
+    """Projections are split per stream (z, x, B, C, dt) rather than packed,
+    so z/x/dt can be head-aligned TP-sharded while B/C stay replicated."""
+    d_inner, n_heads, _ = dims(cfg)
+    k = jax.random.split(rng, 8)
+    n = cfg.ssm_state
+    return {
+        "norm": L.init_norm(cfg),
+        "in_z": L._dense_init(k[0], (cfg.d_model, d_inner), cfg.dtype),
+        "in_x": L._dense_init(k[1], (cfg.d_model, d_inner), cfg.dtype),
+        "in_b": L._dense_init(k[2], (cfg.d_model, n), cfg.dtype),
+        "in_c": L._dense_init(k[3], (cfg.d_model, n), cfg.dtype),
+        "in_dt": L._dense_init(k[4], (cfg.d_model, n_heads), cfg.dtype),
+        "conv_wx": L._dense_init(k[5], (cfg.ssm_conv, d_inner), cfg.dtype),
+        "conv_bx": jnp.zeros((d_inner,), cfg.dtype),
+        "conv_wbc": L._dense_init(k[6], (cfg.ssm_conv, 2 * n), cfg.dtype),
+        "conv_bbc": jnp.zeros((2 * n,), cfg.dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": {"scale": jnp.zeros((d_inner,), cfg.dtype)},
+        "out_proj": L._dense_init(k[7], (d_inner, cfg.d_model), cfg.dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    d_inner, n_heads, _ = dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), cfg.dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                             cfg.dtype),
+        "ssd": jnp.zeros((batch, n_heads, D_HEAD, cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, s0):
+    """Sequential oracle.
+    x: (B,T,H,P); dt: (B,T,H); A: (H,); Bm/Cm: (B,T,N); s0: (B,H,P,N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A[None])              # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        s = decay[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    sT, ys = lax.scan(step, s0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3) + D[None, None, :, None] * xf
+    return y, sT
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, s0, chunk: int = 64):
+    """Chunked-parallel SSD (all exponents <= 0)."""
+    b, t, h, p = x.shape
+    n_state = Bm.shape[-1]
+    assert t % chunk == 0
+    n = t // chunk
+    xf = x.astype(jnp.float32).reshape(b, n, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    dtf = dt.astype(jnp.float32).reshape(b, n, chunk, h).transpose(1, 0, 3, 2)
+    Bf = Bm.astype(jnp.float32).reshape(b, n, chunk, n_state).transpose(1, 0, 2, 3)
+    Cf = Cm.astype(jnp.float32).reshape(b, n, chunk, n_state).transpose(1, 0, 2, 3)
+
+    a = dtf * A[None, None, :, None]               # (n,B,H,C) log-decay <= 0
+    cum = jnp.cumsum(a, axis=-1)                    # inclusive
+    total = cum[..., -1:]
+
+    def step(s, inp):
+        xc, dtc, bc, cc, cumc, totc = inp           # xc: (B,H,C,P)
+        # intra-chunk: Att[i,j] = (C_i.B_j) exp(cum[i]-cum[j]) dt_j, j<=i
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)     # (B,C,C)
+        dec = jnp.exp(cumc[..., :, None] - cumc[..., None, :])  # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        att = jnp.where(mask, cb[:, None] * dec, 0.0) * dtc[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bhjp->bhip", att, xc)
+        # state contribution: y_i += C_i . (exp(cum[i]) S)
+        c_dec = cc[:, None, :, :] * jnp.exp(cumc)[..., None]   # (B,H,C,N)
+        y_state = jnp.einsum("bhcn,bhpn->bhcp", c_dec, s)
+        # state update: S' = exp(tot) S + sum_j exp(tot-cum[j]) dt_j x_j B_j
+        k_dec = (dtc * jnp.exp(totc - cumc))[..., None] * xc   # (B,H,C,P)
+        s = jnp.exp(totc)[..., None] * s + jnp.einsum(
+            "bhcp,bcn->bhpn", k_dec, bc)
+        return s, y_intra + y_state
+
+    xs = (xf, dtf, Bf, Cf, cum, total)
+    sT, ys = lax.scan(step, s0.astype(jnp.float32), xs)
+    y = ys.swapaxes(2, 3).transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y + D[None, None, :, None] * x.astype(jnp.float32), sT
+
+
+def ssd_decode(x, dt, A, Bm, Cm, D, s):
+    """One step. x: (B,H,P); dt: (B,H); Bm/Cm: (B,N); s: (B,H,P,N)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None])
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dtf[..., None], Bm.astype(jnp.float32))
+    s = decay[..., None, None] * s + upd
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm.astype(jnp.float32))
+    return y + D[None, :, None] * xf, s
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(seq, conv_state, w, bias):
+    """seq: (B,T,Dc); conv_state: (B,K-1,Dc) = trailing inputs of the past.
+    Returns (out (B,T,Dc), new_state)."""
+    k = w.shape[0]
+    ext = jnp.concatenate([conv_state.astype(seq.dtype), seq], axis=1)
+    out = sum(ext[:, i : i + seq.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = ext[:, -(k - 1):] if k > 1 else conv_state
+    return jax.nn.silu(out + bias[None, None]), new_state
+
+
+def apply_block(bp, x, state, cfg: ModelConfig, seq_mode: str):
+    """x: (B,T,d). Returns (out, new_state)."""
+    d_inner, n_heads, _ = dims(cfg)
+    b, t, _ = x.shape
+    h = L.apply_norm(bp["norm"], x, cfg)
+    z = jnp.einsum("btd,de->bte", h, bp["in_z"])
+    xr = jnp.einsum("btd,de->bte", h, bp["in_x"])
+    bc = jnp.einsum("btd,de->bte", h,
+                    jnp.concatenate([bp["in_b"], bp["in_c"]], axis=-1))
+    dt_raw = jnp.einsum("btd,de->bte", h, bp["in_dt"])
+    xs, new_conv_x = _causal_conv(xr, state["conv_x"], bp["conv_wx"],
+                                  bp["conv_bx"])
+    bc, new_conv_bc = _causal_conv(bc, state["conv_bc"], bp["conv_wbc"],
+                                   bp["conv_bbc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"][None, None])
+    A = -jnp.exp(bp["A_log"])
+    xh = xs.reshape(b, t, n_heads, D_HEAD)
+
+    if seq_mode == "decode":
+        y, new_ssd = ssd_decode(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                bp["D"], state["ssd"])
+        y = y[:, None]
+    elif seq_mode == "chunked" and t % 64 == 0 and t >= 64:
+        y, new_ssd = ssd_chunked(xh, dt, A, Bm, Cm, bp["D"], state["ssd"])
+    else:
+        y, new_ssd = ssd_scan(xh, dt, A, Bm, Cm, bp["D"], state["ssd"])
+
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), bp["gate_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, bp["out_proj"])
+    return out, {"conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssd": new_ssd}

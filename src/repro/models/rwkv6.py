@@ -1,0 +1,322 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free LM.
+
+Time-mixing: token-shift with data-dependent (LoRA-produced) interpolation,
+data-dependent per-channel decay w_t, and the WKV linear recurrence
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+per head (head size 64). Channel-mixing: squared-ReLU MLP with token shift.
+
+State per layer (decode is O(1) in context length):
+  * ts_tm, ts_cm: (B, d) last-token hidden for the two token shifts
+  * wkv:          (B, H, Dk, Dv) f32 recurrent state
+
+Prefill/train run the recurrence with a time-dim lax.scan over chunks; the
+Pallas kernel (kernels/wkv6.py) implements the chunked form for the TPU hot
+path and is validated against `wkv_scan` here.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.layers import ModelConfig
+
+LORA_DECAY = 64
+LORA_MIX = 32
+N_MIX = 5  # w, k, v, r, g
+
+
+def _dinit(rng, shape, dtype, scale=None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(rng, shape, jnp.float32) * s).astype(dtype)
+
+
+def head_dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = 64
+    return cfg.d_model // hd, hd
+
+
+def init_block(rng, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.dtype
+    k = jax.random.split(rng, 16)
+    nh, hd = head_dims(cfg)
+    return {
+        "norm_tm": L.init_norm(cfg),
+        "norm_cm": L.init_norm(cfg),
+        "tm": {
+            "mix_base": jnp.zeros((N_MIX, d), dt),
+            "mix_x": jnp.zeros((d,), dt),
+            "mix_w1": _dinit(k[0], (d, N_MIX * LORA_MIX), dt),
+            "mix_w2": _dinit(k[1], (N_MIX, LORA_MIX, d), dt, scale=0.01),
+            "wr": _dinit(k[2], (d, d), dt),
+            "wk": _dinit(k[3], (d, d), dt),
+            "wv": _dinit(k[4], (d, d), dt),
+            "wg": _dinit(k[5], (d, d), dt),
+            "wo": _dinit(k[6], (d, d), dt),
+            "decay_base": jnp.full((d,), -6.0, jnp.float32),
+            "decay_w1": _dinit(k[7], (d, LORA_DECAY), dt),
+            "decay_w2": _dinit(k[8], (LORA_DECAY, d), dt, scale=0.01),
+            "bonus_u": _dinit(k[9], (nh, hd), jnp.float32, scale=0.5),
+            "ln_out_scale": jnp.ones((d,), dt),
+            "ln_out_bias": jnp.zeros((d,), dt),
+        },
+        "cm": {
+            "mix_k": jnp.zeros((d,), dt),
+            "mix_r": jnp.zeros((d,), dt),
+            "wk": _dinit(k[10], (d, cfg.d_ff), dt),
+            "wv": _dinit(k[11], (cfg.d_ff, d), dt),
+            "wr": _dinit(k[12], (d, d), dt),
+        },
+    }
+
+
+def init_lm(rng, cfg: ModelConfig):
+    k = jax.random.split(rng, 2)
+    blocks = jax.vmap(lambda r: init_block(r, cfg))(
+        jax.random.split(k[0], cfg.num_layers)
+    )
+    return {
+        "embed": L.init_embedding(k[1], cfg),
+        "blocks": blocks,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    nh, hd = head_dims(cfg)
+    return {
+        "ts_tm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), cfg.dtype),
+        "ts_cm": jnp.zeros((cfg.num_layers, batch, cfg.d_model), cfg.dtype),
+        "wkv": jnp.zeros((cfg.num_layers, batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def state_spec(cfg: ModelConfig, batch: int):
+    nh, hd = head_dims(cfg)
+    return {
+        "ts_tm": jax.ShapeDtypeStruct((cfg.num_layers, batch, cfg.d_model), cfg.dtype),
+        "ts_cm": jax.ShapeDtypeStruct((cfg.num_layers, batch, cfg.d_model), cfg.dtype),
+        "wkv": jax.ShapeDtypeStruct((cfg.num_layers, batch, nh, hd, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV (the oracle).
+
+    r,k,v: (B, T, H, D); w: (B, T, H, D) decay in (0,1); u: (H, D);
+    s0: (B, H, D, D) [key, value]. Returns (out (B,T,H,D), sT).
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(s, inputs):
+        rt, kt, vt, wt = inputs  # (B, H, D)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        out = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    sT, outs = lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3), sT
+
+
+def wkv_chunked(r, k, v, w, u, s0, chunk: int = 64):
+    """Chunked-parallel WKV: intra-chunk via masked matmuls (MXU friendly),
+    inter-chunk state via a scan over T/chunk steps. Matches wkv_scan."""
+    b, t, h, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    # (n, B, H, C, D)
+    def to_chunks(a):
+        return a.reshape(b, n, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(to_chunks, (rf, kf, vf, wf))
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))            # (n,B,H,C,D)
+    cum = jnp.cumsum(logw, axis=-2)                    # inclusive cumsum
+    total = cum[..., -1:, :]                           # (n,B,H,1,D)
+    ref = cum[..., chunk // 2 : chunk // 2 + 1, :]     # midpoint reference
+    # exponents below are taken relative to ``ref`` so their magnitude is
+    # bounded by half-chunk * max|log w| (f32-safe given the decay clip).
+
+    def step(s, xs):
+        rt, kt, vt, logw_c, cum_c, total_c, ref_c = xs
+        # r_i scaled by prod_{j<=i-1} w (relative to ref)
+        r_dec = rt * jnp.exp(cum_c - logw_c - ref_c)   # (B,H,C,D)
+        # state contribution: r_i ⊙ prod_{j<i} w · s  (re-apply ref)
+        r_state = rt * jnp.exp(cum_c - logw_c)
+        out_state = jnp.einsum("bhcd,bhde->bhce", r_state, s)
+        # intra-chunk A[i,j] = sum_d r_i[d] k_j[d] exp(cum[i-1,d]-cum[j,d])
+        kj = kt * jnp.exp(ref_c - cum_c)               # (B,H,C,D)
+        att = jnp.einsum("bhid,bhjd->bhij", r_dec, kj)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask, att, 0.0)
+        diag = jnp.einsum("bhid,bhid->bhi", rt * u[None, :, None, :], kt)
+        out_intra = jnp.einsum("bhij,bhjd->bhid", att, vt) + diag[..., None] * vt
+        # state update: decay k_j to chunk end
+        k_dec = kt * jnp.exp(total_c - cum_c)
+        s = jnp.exp(total_c.squeeze(-2))[..., None] * s + jnp.einsum(
+            "bhcd,bhce->bhde", k_dec, vt)
+        return s, out_state + out_intra
+
+    sT, outs = lax.scan(step, s0.astype(jnp.float32),
+                        (rc, kc, vc, logw, cum, total, ref))
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d), sT
+
+
+def wkv_decode(r, k, v, w, u, s):
+    """Single-token WKV. r,k,v,w: (B, H, D); s: (B, H, D, D)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = jnp.einsum("bhi,bhj->bhij", kf, vf)
+    out = jnp.einsum("bhi,bhij->bhj", rf, s + u[None, :, :, None] * kv)
+    s = wf[..., None] * s + kv
+    return out, s
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, last):
+    """shifted[t] = x[t-1], with ``last`` filling t=0. x: (B,T,d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix(p, x, last, wkv_state, cfg: ModelConfig, *, seq_mode: str):
+    b, t, d = x.shape
+    nh, hd = head_dims(cfg)
+    xx = _token_shift(x, last) - x
+    xbase = x + xx * p["mix_x"]
+    lora = jnp.einsum("btd,dm->btm", xbase, p["mix_w1"])
+    lora = jnp.tanh(lora).reshape(b, t, N_MIX, LORA_MIX)
+    mixes = p["mix_base"][None, None] + jnp.einsum(
+        "btnm,nmd->btnd", lora, p["mix_w2"])
+    xw, xk, xv, xr, xg = [x + xx * mixes[:, :, i] for i in range(N_MIX)]
+
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(b, t, nh, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(b, t, nh, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(b, t, nh, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+
+    decay_lora = jnp.einsum("btd,dm->btm", xw, p["decay_w1"])
+    decay = p["decay_base"][None, None] + jnp.einsum(
+        "btm,md->btd", jnp.tanh(decay_lora), p["decay_w2"]).astype(jnp.float32)
+    # clip keeps |log w| <= e^0.5 so the chunked form's factored exponents
+    # stay f32-safe (see wkv_chunked); scan/decode see the same w.
+    decay = jnp.clip(decay, -20.0, 0.5)
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, nh, hd)   # (0,1)
+
+    if seq_mode == "decode":
+        out, new_s = wkv_decode(r[:, 0], k[:, 0], v[:, 0], w[:, 0],
+                                p["bonus_u"], wkv_state)
+        out = out[:, None]
+    elif seq_mode == "chunked" and t % 64 == 0 and t >= 64:
+        out, new_s = wkv_chunked(r, k, v, w, p["bonus_u"], wkv_state)
+    else:
+        out, new_s = wkv_scan(r, k, v, w, p["bonus_u"], wkv_state)
+
+    out = out.reshape(b, t, d)
+    # per-head group norm
+    og = out.reshape(b, t, nh, hd)
+    mu = og.mean(-1, keepdims=True)
+    var = og.var(-1, keepdims=True)
+    og = (og - mu) * lax.rsqrt(var + 64e-5)
+    out = og.reshape(b, t, d) * p["ln_out_scale"].astype(jnp.float32) \
+        + p["ln_out_bias"].astype(jnp.float32)
+    out = (out.astype(x.dtype) * g)
+    return jnp.einsum("btd,de->bte", out, p["wo"]), x[:, -1, :], new_s
+
+
+def _channel_mix(p, x, last):
+    xx = _token_shift(x, last) - x
+    xk = x + xx * p["mix_k"]
+    xr = x + xx * p["mix_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"])))
+    kv = jnp.einsum("btf,fd->btd", k, p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"])) * kv, x[:, -1, :]
+
+
+def _block(bp, x, state, cfg: ModelConfig, seq_mode: str):
+    ts_tm, ts_cm, wkv_s = state
+    h = L.apply_norm(bp["norm_tm"], x, cfg)
+    tm_out, new_ts_tm, new_wkv = _time_mix(
+        bp["tm"], h, ts_tm, wkv_s, cfg, seq_mode=seq_mode)
+    x = x + tm_out
+    h = L.apply_norm(bp["norm_cm"], x, cfg)
+    cm_out, new_ts_cm = _channel_mix(bp["cm"], h, ts_cm)
+    x = x + cm_out
+    return x, (new_ts_tm, new_ts_cm, new_wkv)
+
+
+def _run(params, x, state, cfg: ModelConfig, seq_mode: str, remat=False):
+    def body(carry, scanned):
+        bp, st = scanned
+        fn = functools.partial(_block, cfg=cfg, seq_mode=seq_mode)
+        if remat:
+            fn = jax.checkpoint(fn, prevent_cse=False)
+        h, new_st = fn(bp, carry, st)
+        return h, new_st
+
+    sts = (state["ts_tm"], state["ts_cm"], state["wkv"])
+    if not cfg.scan_layers:
+        a, b_, c = sts
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda t: t[i], params["blocks"])
+            x, ns = body(x, (bp, (a[i], b_[i], c[i])))
+            a, b_, c = a.at[i].set(ns[0]), b_.at[i].set(ns[1]), c.at[i].set(ns[2])
+        new = (a, b_, c)
+    else:
+        x, new = lax.scan(body, x, (params["blocks"], sts))
+    return x, {"ts_tm": new[0], "ts_cm": new[1], "wkv": new[2]}
+
+
+# ---------------------------------------------------------------------------
+# entry points (same interface as transformer.py)
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, tokens, cfg: ModelConfig, ep=None):
+    b = tokens.shape[0]
+    x = L.embed(params["embed"], tokens, cfg)
+    state = init_state(cfg, b)
+    x, _ = _run(params, x, state, cfg, "chunked", remat=True)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, ep=None):
+    logits = forward_train(params, batch["tokens"], cfg)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def prefill(params, state, tokens, lengths, cfg: ModelConfig, ep=None):
+    """NOTE: linear-state models have no per-position cache; requests padded
+    to a common length are handled by the engine one-at-a-time (B matches)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    x, state = _run(params, x, state, cfg, "chunked")
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    idx = jnp.clip(lengths - 1, 0, tokens.shape[1] - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return L.unembed(params["embed"], last[:, None], cfg)[:, 0], state
+
+
+def decode(params, state, tokens, lengths, cfg: ModelConfig, ep=None):
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    x, state = _run(params, x, state, cfg, "decode")
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)[:, 0], state

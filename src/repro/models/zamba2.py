@@ -1,0 +1,175 @@
+"""Zamba2 (arXiv:2411.15242) — Mamba2 backbone + *shared* attention block.
+
+``num_layers`` Mamba2 blocks; every ``attn_every`` blocks, one shared
+(single weight set) attention+MLP block is invoked, taking
+``proj(concat(hidden, original_embedding))`` as input — each invocation has
+its own KV cache slot (the weights are shared, the caches are not).
+
+State: per-layer mamba states + per-invocation KV caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.layers import MaskSpec, ModelConfig
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def init_lm(rng, cfg: ModelConfig):
+    k = jax.random.split(rng, 6)
+    blocks = jax.vmap(lambda r: M2.init_block(r, cfg))(
+        jax.random.split(k[0], cfg.num_layers)
+    )
+    shared = {
+        "norm_attn": L.init_norm(cfg),
+        "attn": L.init_attention(k[1], cfg),
+        "norm_mlp": L.init_norm(cfg),
+        "mlp": L.init_mlp(k[2], cfg),
+        "in_proj": L._dense_init(k[3], (2 * cfg.d_model, cfg.d_model), cfg.dtype),
+        "out_proj": L._dense_init(k[4], (cfg.d_model, cfg.d_model), cfg.dtype),
+    }
+    return {
+        "embed": L.init_embedding(k[5], cfg),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int):
+    ninv = n_shared_invocations(cfg)
+    m = M2.init_state(cfg, batch)
+    mamba = jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), m)
+    return {
+        "mamba": mamba,
+        "k": jnp.zeros((ninv, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+        "v": jnp.zeros((ninv, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+    }
+
+
+def state_spec(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        jax.eval_shape(lambda: init_state(cfg, batch, max_len)),
+    )
+
+
+def _shared_block(sp, h, x0, cfg: ModelConfig, *, positions, mask, kv,
+                  cache_positions, lengths):
+    inp = jnp.concatenate([h, x0], axis=-1)
+    a_in = jnp.einsum("btd,de->bte", inp, sp["in_proj"])
+    z = L.apply_norm(sp["norm_attn"], a_in, cfg)
+    attn_out, new_kv = L.apply_attention(
+        sp["attn"], z, cfg, positions=positions, mask=mask,
+        kv_cache=kv, cache_positions=cache_positions, lengths=lengths)
+    a = a_in + attn_out
+    z = L.apply_norm(sp["norm_mlp"], a, cfg)
+    a = a + L.apply_mlp(sp["mlp"], z, cfg)
+    return h + jnp.einsum("btd,de->bte", a, sp["out_proj"]), new_kv
+
+
+def _run(params, x, state, cfg: ModelConfig, seq_mode: str, *,
+         positions, mask, cache_positions, lengths, remat=False):
+    """Mixed cadence breaks a single homogeneous scan; we unroll the shared
+    invocations and scan each mamba segment between them."""
+    x0 = x
+    ninv = n_shared_invocations(cfg)
+    new_mamba = state["mamba"]
+    new_k, new_v = state["k"], state["v"]
+
+    def mamba_seg(x, lo, hi):
+        def body(carry, scanned):
+            bp, st = scanned
+            fn = functools.partial(M2.apply_block, cfg=cfg, seq_mode=seq_mode)
+            if remat:
+                fn = jax.checkpoint(fn, prevent_cse=False)
+            out, nst = fn(bp, carry, st)
+            return carry + out, nst
+
+        seg_params = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        seg_state = jax.tree.map(lambda a: a[lo:hi], state["mamba"])
+        if cfg.scan_layers:
+            x, nst = lax.scan(body, x, (seg_params, seg_state))
+            return x, nst
+        outs = []
+        for i in range(hi - lo):
+            bp = jax.tree.map(lambda a: a[i], seg_params)
+            st = jax.tree.map(lambda a: a[i], seg_state)
+            x, nst_i = body(x, (bp, st))
+            outs.append(nst_i)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    for inv in range(ninv):
+        lo = inv * cfg.attn_every
+        hi = min(cfg.num_layers, (inv + 1) * cfg.attn_every)
+        x, nst = mamba_seg(x, lo, hi)
+        new_mamba = jax.tree.map(
+            lambda full, seg: lax.dynamic_update_slice_in_dim(full, seg, lo, 0),
+            new_mamba, nst)
+        x, kv = _shared_block(
+            params["shared"], x, x0, cfg, positions=positions, mask=mask,
+            kv=(new_k[inv], new_v[inv]), cache_positions=cache_positions,
+            lengths=lengths)
+        new_k = new_k.at[inv].set(kv[0])
+        new_v = new_v.at[inv].set(kv[1])
+
+    return x, {"mamba": new_mamba, "k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params, tokens, cfg: ModelConfig, ep=None):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    state = init_state(cfg, b, s)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    zero = jnp.zeros((b,), jnp.int32)
+    x, _ = _run(params, x, state, cfg, "chunked", positions=positions,
+                mask=MaskSpec("causal"), cache_positions=zero, lengths=None,
+                remat=True)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, ep=None):
+    logits = forward_train(params, batch["tokens"], cfg)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+def prefill(params, state, tokens, lengths, cfg: ModelConfig, ep=None):
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    zero = jnp.zeros((b,), jnp.int32)
+    x, state = _run(params, x, state, cfg, "chunked", positions=positions,
+                    mask=MaskSpec("causal"), cache_positions=zero, lengths=None)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    idx = jnp.clip(lengths - 1, 0, s - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return L.unembed(params["embed"], last[:, None], cfg)[:, 0], state
+
+
+def decode(params, state, tokens, lengths, cfg: ModelConfig, ep=None):
+    b = tokens.shape[0]
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    positions = lengths[:, None]
+    x, state = _run(params, x, state, cfg, "decode", positions=positions,
+                    mask=MaskSpec("lengths"), cache_positions=lengths,
+                    lengths=lengths)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)[:, 0], state

@@ -1,0 +1,242 @@
+"""Per-worker continuous-batching engine.
+
+A Worker owns: a local prefill queue, the running decode batch, KV/state
+accounting, and iteration composition (driven by the policy's BatchRule).
+It is executor-agnostic: ``compose_iteration`` returns the work description;
+the simulator (or real executor) supplies the duration; ``complete_iteration``
+applies state transitions + SLO bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.core.policies import BatchRule, Policy
+from repro.core.request import Phase, Request
+from repro.core.toggle import Role, WorkerView
+from repro.serving.costmodel import CostModel
+
+
+@dataclasses.dataclass
+class IterationPlan:
+    decode_reqs: list          # requests getting one token this iteration
+    prefill_parts: list        # (request, tokens) chunks executed
+    n_decode: int
+    sum_ctx: float
+    prefill_tokens: int
+    prefill_ctx_offset: float
+    exclusive_prefill: bool    # decode stalled behind prefill (interference)
+
+    @property
+    def empty(self) -> bool:
+        return self.n_decode == 0 and self.prefill_tokens == 0
+
+
+class Worker:
+    def __init__(self, wid: int, cost: CostModel, role: Role = Role.MULTIPLEX,
+                 queue_discipline: str = "fcfs"):
+        self.wid = wid
+        self.cost = cost
+        self.queue_discipline = queue_discipline   # fcfs | edf
+        self.view = WorkerView(
+            wid=wid, role=role,
+            kv_capacity_tokens=float(max(cost.kv_capacity_tokens(), 1)),
+        )
+        self.prefill_queue: deque[Request] = deque()
+        self.decode_running: list[Request] = []
+        self.busy = False
+        # metrics
+        self.blocked_time: dict[int, float] = {}
+        self.queue_times: dict[int, float] = {}
+        self.busy_time = 0.0
+
+    # ------------------------------------------------------------- admission
+    def admit_prefill(self, req: Request, now: float) -> None:
+        req.worker = self.wid
+        self.prefill_queue.append(req)
+        self._refresh_view()
+
+    def admit_decode(self, req: Request, now: float) -> None:
+        req.worker = self.wid
+        req.phase = Phase.DECODING
+        self.decode_running.append(req)
+        self._refresh_view()
+
+    # ------------------------------------------------------------- planning
+    def compose_iteration(self, rule: BatchRule, now: float) -> IterationPlan:
+        decode_reqs: list[Request] = []
+        prefill_parts: list[tuple[Request, int]] = []
+        budget = rule.prefill_budget
+
+        run_prefill_exclusively = (
+            rule.prefill_exclusive and self._has_admissible_prefill())
+        if run_prefill_exclusively:
+            # full-prompt (or budget-bounded) prefill-only iteration
+            taken = set()
+            while budget > 0 and self._has_admissible_prefill():
+                req = self._next_admissible_prefill(now)
+                if req is None or req.rid in taken:
+                    break
+                take = min(req.remaining_prefill, budget)
+                if take < req.remaining_prefill and prefill_parts:
+                    break       # don't split a second prompt mid-iteration
+                self._start_prefill(req, now)
+                prefill_parts.append((req, take))
+                taken.add(req.rid)
+                budget -= take
+        else:
+            if rule.run_decode:
+                decode_reqs = list(self.decode_running)
+            if budget > 0 and self._has_admissible_prefill():
+                req = self._peek_admissible_prefill(now)
+                if req is not None:
+                    take = min(req.remaining_prefill, budget)
+                    self._start_prefill(req, now)
+                    prefill_parts.append((req, take))
+
+        sum_ctx = float(sum(r.context_len for r in decode_reqs))
+        p_tokens = sum(t for _, t in prefill_parts)
+        ctx_off = float(prefill_parts[0][0].prefilled_tokens) if prefill_parts else 0.0
+        return IterationPlan(
+            decode_reqs=decode_reqs, prefill_parts=prefill_parts,
+            n_decode=len(decode_reqs), sum_ctx=sum_ctx,
+            prefill_tokens=p_tokens, prefill_ctx_offset=ctx_off,
+            exclusive_prefill=run_prefill_exclusively and bool(prefill_parts),
+        )
+
+    def plan_duration(self, plan: IterationPlan) -> float:
+        return self.cost.iteration_time(
+            plan.n_decode, plan.sum_ctx, plan.prefill_tokens,
+            plan.prefill_ctx_offset)
+
+    # ------------------------------------------------------------ completion
+    def complete_iteration(self, plan: IterationPlan, now: float,
+                           duration: float) -> list[Request]:
+        """Apply effects at iteration end. Returns requests whose prefill
+        finished this iteration (for decode dispatch)."""
+        self.busy_time += duration
+        finished_prefills: list[Request] = []
+        # decode side
+        pure_decode = self.cost.decode_iter_time(plan.n_decode, plan.sum_ctx) \
+            if plan.n_decode else 0.0
+        interference = max(0.0, duration - pure_decode)
+        for r in plan.decode_reqs:
+            r.record_decode_iteration(duration)
+            self.view.kv_used_tokens += 1
+            if plan.prefill_tokens > 0:
+                self.blocked_time[r.rid] = \
+                    self.blocked_time.get(r.rid, 0.0) + interference
+            if r.generated_tokens >= r.output_len:
+                r.phase = Phase.FINISHED
+                r.finish_time = now
+                self.release(r)
+        # decode requests stalled behind an exclusive prefill count as blocked
+        if plan.exclusive_prefill:
+            for r in self.decode_running:
+                r.decode_time += duration
+                r.tpot_slack -= duration       # the stall burns slack
+                self.blocked_time[r.rid] = \
+                    self.blocked_time.get(r.rid, 0.0) + duration
+        # prefill side
+        for req, tokens in plan.prefill_parts:
+            req.prefilled_tokens += tokens
+            if req.remaining_prefill == 0:
+                req.record_first_token(now)
+                if req.output_len <= 1:
+                    req.phase = Phase.FINISHED
+                    req.finish_time = now
+                    self.release(req)
+                else:
+                    finished_prefills.append(req)
+                if req in self.prefill_queue:
+                    self.prefill_queue.remove(req)
+        self._refresh_view()
+        return finished_prefills
+
+    def release(self, req: Request) -> None:
+        """Free KV held by a finished/migrated request."""
+        self.view.kv_used_tokens = max(
+            0.0, self.view.kv_used_tokens - self.cost.state_tokens(req.context_len))
+        if req in self.decode_running:
+            self.decode_running.remove(req)
+        self._refresh_view()
+
+    # ------------------------------------------------------------- internals
+    def _kv_room_for(self, req: Request) -> bool:
+        need = self.cost.state_tokens(req.prompt_len)
+        return self.view.kv_used_tokens + need <= self.view.kv_capacity_tokens
+
+    def _has_admissible_prefill(self) -> bool:
+        return any(self._kv_room_for(r) or r.prefill_start is not None
+                   for r in self.prefill_queue)
+
+    def _prefill_order(self, now: float) -> list[Request]:
+        """Queue order. 'fcfs' (the discipline of vLLM/Sarathi/DistServe and
+        the paper's Tropical). 'edf' is the beyond-paper SLO-aware order:
+        earliest-deadline-first among requests that can still make TTFT;
+        already-hopeless requests are served last (spending capacity on
+        them in deadline order buys no attainment)."""
+        if self.queue_discipline == "fcfs":
+            return list(self.prefill_queue)
+
+        def key(r: Request):
+            deadline = r.arrival_time + r.slo.ttft
+            t_exec = self.cost.prefill_time(r.remaining_prefill,
+                                            r.prefilled_tokens)
+            hopeless = now + t_exec > deadline
+            return (hopeless, deadline, r.rid)
+
+        return sorted(self.prefill_queue, key=key)
+
+    def _next_admissible_prefill(self, now: float) -> Optional[Request]:
+        for r in self._prefill_order(now):
+            if r.remaining_prefill > 0 and (
+                    r.prefill_start is not None or self._kv_room_for(r)):
+                return r
+        return None
+
+    def _peek_admissible_prefill(self, now: float) -> Optional[Request]:
+        return self._next_admissible_prefill(now)
+
+    def _start_prefill(self, req: Request, now: float) -> None:
+        if req.prefill_start is None:
+            req.prefill_start = now
+            req.phase = Phase.PREFILLING
+            self.queue_times[req.rid] = now - req.arrival_time
+            # reserve prompt KV on first chunk
+            self.view.kv_used_tokens += self.cost.state_tokens(req.prompt_len)
+
+    def _refresh_view(self) -> None:
+        v = self.view
+        v.queued_prefill_tokens = sum(r.remaining_prefill
+                                      for r in self.prefill_queue)
+        v.queued_requests = len(self.prefill_queue)
+        v.decode_batch = len(self.decode_running)
+        v.decode_sum_ctx = float(sum(r.context_len
+                                     for r in self.decode_running))
+        base_iter = self.cost.decode_iter_time(v.decode_batch,
+                                               v.decode_sum_ctx) \
+            if self.decode_running else 0.0
+        v.min_tpot_slack = min(
+            (r.effective_slack(base_iter) for r in self.decode_running),
+            default=float("inf"))
+
+    # -------------------------------------------------------------- failure
+    def fail(self) -> list[Request]:
+        """Worker dies: every held request must restart elsewhere."""
+        self.view.alive = False
+        lost = list(self.prefill_queue) + list(self.decode_running)
+        self.prefill_queue.clear()
+        self.decode_running.clear()
+        self.view.kv_used_tokens = 0.0
+        for r in lost:
+            r.restarts += 1
+            # KV/state lost: the full context must be re-prefilled
+            r.prefilled_tokens = 0
+            r.prompt_len = r.context_len
+            r.prefill_start = None
+            r.phase = Phase.QUEUED_PREFILL
+            r.worker = None
+        self._refresh_view()
+        return lost

@@ -1,0 +1,181 @@
+"""Executors: the clock sources behind the engine.
+
+* ``SimExecutor`` — the analytical cost model (default for benchmarks).
+* ``RealExecutor`` — actually runs the JAX model on this host: slot-based
+  batched cache, chunked prefill into per-slot cache views, batched decode
+  across slots. Iteration durations are measured wall-clock. This proves
+  the scheduler drives a real model end-to-end (examples + integration
+  tests use smoke-scale configs).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api as model_api
+from repro.serving.costmodel import CostModel
+from repro.serving.engine import IterationPlan, Worker
+
+
+class SimExecutor:
+    def __init__(self, cost: CostModel):
+        self.cost = cost
+
+    def duration_fn(self):
+        return lambda worker, plan: worker.plan_duration(plan)
+
+
+class RealExecutor:
+    """One executor per worker; owns params + a slotted cache."""
+
+    def __init__(self, cfg, rng, max_slots: int = 8, max_len: int = 256,
+                 params=None):
+        self.cfg = cfg
+        self.api = model_api.build(cfg)
+        self.params = params if params is not None else self.api.init(rng)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = self.api.init_cache(max_slots, max_len)
+        self.free_slots = list(range(max_slots))
+        self.slot_of: dict[int, int] = {}
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.prompts: dict[int, np.ndarray] = {}     # rid -> prompt tokens
+        self.generated: dict[int, list[int]] = {}
+        self.pending_logits: dict[int, np.ndarray] = {}
+        self._decode_fn = jax.jit(
+            lambda p, c, t, l: self.api.decode(p, c, t, l))
+
+    # ------------------------------------------------------------ requests
+    def register(self, req) -> None:
+        if req.rid not in self.prompts:
+            rng = np.random.default_rng(req.rid)
+            self.prompts[req.rid] = rng.integers(
+                0, self.cfg.vocab_size, size=req.prompt_len).astype(np.int32)
+            self.generated[req.rid] = []
+
+    def _slot(self, rid: int) -> int:
+        if rid not in self.slot_of:
+            if not self.free_slots:
+                raise MemoryError("no free slots")
+            self.slot_of[rid] = self.free_slots.pop()
+            self.lengths[self.slot_of[rid]] = 0
+        return self.slot_of[rid]
+
+    def release(self, rid: int) -> None:
+        slot = self.slot_of.pop(rid, None)
+        if slot is not None:
+            self.lengths[slot] = 0
+            self.free_slots.append(slot)
+
+    # ----------------------------------------------------------- execution
+    def _cache_view(self, slot: int):
+        return jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+
+    def _cache_write(self, slot: int, view) -> None:
+        self.cache = jax.tree.map(
+            lambda a, s: a.at[:, slot:slot + 1].set(s), self.cache, view)
+
+    def run_prefill_chunk(self, req, tokens_this_chunk: int) -> None:
+        self.register(req)
+        slot = self._slot(req.rid)
+        start = int(req.prefilled_tokens)
+        take = tokens_this_chunk
+        chunk = self.prompts[req.rid][start:start + take]
+        chunk_j = jnp.asarray(chunk[None, :], jnp.int32)
+        starts = jnp.asarray([start], jnp.int32)
+        view = self._cache_view(slot)
+        if self.api.prefill_chunk is not None:
+            logits, view = self.api.prefill_chunk(
+                self.params, view, chunk_j, starts)
+        else:
+            # stateful families: re-run full prefill up to this point
+            full = self.prompts[req.rid][: start + take]
+            view = self._fresh_view()
+            logits, view = self.api.prefill(
+                self.params, view, jnp.asarray(full[None, :], jnp.int32),
+                jnp.asarray([start + take], jnp.int32))
+        self._cache_write(slot, view)
+        self.lengths[slot] = start + take
+        if start + take >= req.prompt_len:
+            tok = int(jnp.argmax(logits[0]))
+            self.generated[req.rid].append(tok)
+
+    def _fresh_view(self):
+        one = self.api.init_cache(1, self.max_len)
+        return one
+
+    def run_decode_batch(self, reqs) -> None:
+        if not reqs:
+            return
+        slots = [self._slot(r.rid) for r in reqs]
+        tokens = np.zeros(self.max_slots, np.int32)
+        lengths = np.array(self.lengths)
+        for r, s in zip(reqs, slots):
+            tokens[s] = self.generated[r.rid][-1]
+        logits, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lengths))
+        logits = np.asarray(logits)
+        for r, s in zip(reqs, slots):
+            self.generated[r.rid].append(int(logits[s].argmax()))
+            self.lengths[s] += 1
+
+    def duration_fn(self):
+        """Measured-wall-clock duration_fn for the Simulator."""
+
+        def run(worker: Worker, plan: IterationPlan) -> float:
+            t0 = time.perf_counter()
+            for req, take in plan.prefill_parts:
+                self.run_prefill_chunk(req, take)
+            self.run_decode_batch(plan.decode_reqs)
+            jax.block_until_ready(self.cache)
+            return time.perf_counter() - t0
+
+        return run
+
+
+class ClusterRealExecutors:
+    """Per-worker RealExecutor registry + shared duration_fn dispatch."""
+
+    def __init__(self, cfg, n_workers: int, rng=None, max_slots=8,
+                 max_len=256):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        api = model_api.build(cfg)
+        params = api.init(rng)   # replicas share weights
+        self.execs = {
+            i: RealExecutor(cfg, rng, max_slots, max_len, params=params)
+            for i in range(n_workers)
+        }
+
+    def duration_fn(self):
+        def run(worker: Worker, plan: IterationPlan) -> float:
+            return self.execs[worker.wid].duration_fn()(worker, plan)
+        return run
+
+    def on_finish(self, req) -> None:
+        for e in self.execs.values():
+            e.release(req.rid)
+
+    def migrate(self, req, src: int, dst: int) -> None:
+        """Copy the request's tokens; the KV re-registers on the target
+        (cache content is re-derived — on TPU this is the ICI transfer)."""
+        se, de = self.execs[src], self.execs[dst]
+        de.prompts[req.rid] = se.prompts[req.rid]
+        de.generated[req.rid] = list(se.generated[req.rid])
+        # replay KV on the destination (simulating the transfer)
+        slot = de._slot(req.rid)
+        full = np.concatenate([
+            de.prompts[req.rid],
+            np.asarray(de.generated[req.rid][:-1], np.int32)]) \
+            if len(de.generated[req.rid]) > 1 else de.prompts[req.rid]
+        view = de._fresh_view()
+        _, view = de.api.prefill(
+            de.params, view, jnp.asarray(full[None, :], jnp.int32),
+            jnp.asarray([len(full)], jnp.int32))
+        de._cache_write(slot, view)
+        de.lengths[slot] = len(full)
+        se.release(req.rid)

@@ -1,0 +1,117 @@
+"""Paged KV-cache management.
+
+``BlockAllocator`` is the accounting layer the engine/toggle use for the
+HBM watermark (§IV-C: "the multiplexing toggle records the status of each
+worker, including monitoring the HBM watermark"). ``PagedKVStore`` is the
+physical page pool consumed by the Pallas paged_attention kernel — pages
+are allocated per request, the block table provides the indirection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class BlockAllocator:
+    """Free-list page allocator with watermark accounting."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = list(range(n_blocks - 1, -1, -1))
+        self.allocated: dict[int, list[int]] = {}   # rid -> pages
+
+    # ---------------------------------------------------------------- query
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_blocks / max(self.n_blocks, 1)
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def can_fit(self, tokens: int) -> bool:
+        return self.blocks_for(tokens) <= self.free_blocks
+
+    # ------------------------------------------------------------- mutation
+    def allocate(self, rid: int, tokens: int) -> Optional[list[int]]:
+        need = self.blocks_for(tokens) - len(self.allocated.get(rid, []))
+        if need > len(self._free):
+            return None
+        pages = self.allocated.setdefault(rid, [])
+        for _ in range(max(0, need)):
+            pages.append(self._free.pop())
+        return pages
+
+    def extend(self, rid: int, new_total_tokens: int) -> bool:
+        """Grow a request's allocation to cover ``new_total_tokens``."""
+        return self.allocate(rid, new_total_tokens) is not None
+
+    def release(self, rid: int) -> None:
+        for p in self.allocated.pop(rid, []):
+            self._free.append(p)
+
+    def table(self, rid: int, max_pages: int) -> np.ndarray:
+        pages = self.allocated.get(rid, [])
+        t = np.full((max_pages,), -1, np.int32)
+        t[: len(pages)] = pages[:max_pages]
+        return t
+
+
+@dataclasses.dataclass
+class PagedKVStore:
+    """Physical page pool: (L, n_pages, page_size, Hkv, D) per K and V.
+
+    Feeds kernels/paged_attention.py; append writes go through
+    ``write_tokens`` (host-side for the CPU real-executor; on TPU the
+    engine fuses the write into the decode step)."""
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+    allocator: BlockAllocator
+
+    @classmethod
+    def create(cls, num_layers: int, n_pages: int, page_size: int,
+               num_kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+        shape = (num_layers, n_pages, page_size, num_kv_heads, head_dim)
+        return cls(
+            k_pages=jnp.zeros(shape, dtype),
+            v_pages=jnp.zeros(shape, dtype),
+            allocator=BlockAllocator(n_pages, page_size),
+        )
+
+    def write_tokens(self, rid: int, pos: int, k: jax.Array, v: jax.Array):
+        """k/v: (L, T, Hkv, D) new tokens for request ``rid`` starting at
+        logical position ``pos``. Allocates pages as needed."""
+        t = k.shape[1]
+        ps = self.allocator.block_size
+        if not self.allocator.extend(rid, pos + t):
+            raise MemoryError(f"KV pool exhausted for rid={rid}")
+        pages = self.allocator.allocated[rid]
+        kp, vp = self.k_pages, self.v_pages
+        for i in range(t):
+            logical = pos + i
+            page = pages[logical // ps]
+            off = logical % ps
+            kp = kp.at[:, page, off].set(k[:, i])
+            vp = vp.at[:, page, off].set(v[:, i])
+        self.k_pages, self.v_pages = kp, vp
+
+    def gather_dense(self, rid: int, length: int):
+        """(L, length, Hkv, D) dense view for testing."""
+        ps = self.allocator.block_size
+        pages = self.allocator.allocated[rid]
+        k = jnp.concatenate([self.k_pages[:, p] for p in pages], axis=1)
+        v = jnp.concatenate([self.v_pages[:, p] for p in pages], axis=1)
+        return k[:, :length], v[:, :length]

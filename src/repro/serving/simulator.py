@@ -1,0 +1,209 @@
+"""Discrete-event cluster simulator.
+
+Drives Workers + a Policy over a request trace. The same Policy objects run
+unchanged against the real-JAX executor (serving/executor.py) — only the
+clock source differs, which is the point: the scheduler under test is the
+artifact, the executor is exchangeable.
+
+Events: request arrival, per-worker iteration completion, migration
+completion, worker failure/recovery (fault-tolerance experiments), elastic
+worker addition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Optional, Sequence
+
+from repro.core.metrics import ServeMetrics, compute_metrics
+from repro.core.policies import Policy
+from repro.core.request import Phase, Request
+from repro.core.toggle import Role
+from repro.serving.costmodel import CostModel
+from repro.serving.engine import Worker
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: object = dataclasses.field(compare=False, default=None)
+
+
+class Simulator:
+    def __init__(self, workers: Sequence[Worker], policy: Policy,
+                 duration_fn: Optional[Callable] = None):
+        """duration_fn(worker, plan) -> seconds; default = cost model."""
+        self.workers = {w.wid: w for w in workers}
+        self.policy = policy
+        self.duration_fn = duration_fn or (lambda w, p: w.plan_duration(p))
+        self.now = 0.0
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self.global_queue: list[Request] = []
+        self.requests: list[Request] = []
+        self._worker_busy: dict[int, bool] = {w.wid: False for w in workers}
+        self._failures: list[tuple[float, int]] = []
+        self.max_sim_time = float("inf")
+
+    # ----------------------------------------------------------------- api
+    def push(self, kind: str, time: float, payload=None) -> None:
+        heapq.heappush(self._heap, _Event(time, next(self._seq), kind, payload))
+
+    def add_trace(self, requests: Sequence[Request]) -> None:
+        for r in requests:
+            self.push("arrival", r.arrival_time, r)
+
+    def inject_failure(self, time: float, wid: int,
+                       recover_after: Optional[float] = None) -> None:
+        self.push("fail", time, (wid, recover_after))
+
+    def add_worker_at(self, time: float, worker: Worker) -> None:
+        self.push("add_worker", time, worker)
+
+    # ---------------------------------------------------------------- loop
+    def run(self, until: Optional[float] = None) -> ServeMetrics:
+        if until is not None:
+            self.max_sim_time = until
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.time > self.max_sim_time:
+                break
+            self.now = ev.time
+            getattr(self, f"_on_{ev.kind}")(ev)
+        return self.metrics()
+
+    def metrics(self) -> ServeMetrics:
+        qt, bt = {}, {}
+        for w in self.workers.values():
+            qt.update(w.queue_times)
+            bt.update(w.blocked_time)
+        return compute_metrics(self.requests, qt, bt)
+
+    # -------------------------------------------------------------- events
+    def _on_arrival(self, ev: _Event) -> None:
+        req: Request = ev.payload
+        self.requests.append(req)
+        self._try_dispatch(req)
+
+    def _try_dispatch(self, req: Request) -> None:
+        wid = self.policy.dispatch_prefill(req, self.now)
+        if wid is None or wid not in self.workers or \
+                not self.workers[wid].view.alive:
+            if req not in self.global_queue:
+                self.global_queue.append(req)
+            return
+        if req in self.global_queue:
+            self.global_queue.remove(req)
+        self.workers[wid].admit_prefill(req, self.now)
+        self._kick(wid)
+
+    def _kick(self, wid: int) -> None:
+        """Start an iteration on a now-idle worker if it has work."""
+        w = self.workers[wid]
+        if self._worker_busy[wid] or not w.view.alive:
+            return
+        head = w.prefill_queue[0] if w.prefill_queue else None
+        rule = self.policy.batch_rule(w.view, self.now, head)
+        plan = w.compose_iteration(rule, self.now)
+        if plan.empty:
+            return
+        dur = self.duration_fn(w, plan)
+        self._worker_busy[wid] = True
+        self.push("iter_done", self.now + dur, (wid, plan, dur))
+
+    def _on_iter_done(self, ev: _Event) -> None:
+        wid, plan, dur = ev.payload
+        w = self.workers[wid]
+        self._worker_busy[wid] = False
+        if not w.view.alive:
+            return
+        finished_prefills = w.complete_iteration(plan, self.now, dur)
+        for req in finished_prefills:
+            self._route_decode(w, req)
+        # retry the global queue now that state changed
+        for req in list(self.global_queue):
+            self._try_dispatch(req)
+        self._kick(wid)
+
+    def _route_decode(self, src: Worker, req: Request) -> None:
+        target = self.policy.dispatch_decode(req, self.now)
+        if target is None or target == src.wid:
+            src.admit_decode(req, self.now)
+            self._kick(src.wid)
+            return
+        # KV migration: src frees, target admits after transfer delay
+        req.migrations += 1
+        req.phase = Phase.MIGRATING
+        src.release(req)
+        delay = src.cost.migration_time(req.context_len)
+        self.push("migration_done", self.now + delay, (target, req))
+
+    def _on_migration_done(self, ev: _Event) -> None:
+        wid, req = ev.payload
+        w = self.workers.get(wid)
+        if w is None or not w.view.alive:
+            req.restarts += 1
+            req.prefilled_tokens = 0
+            req.prompt_len = req.context_len
+            req.prefill_start = None
+            req.phase = Phase.QUEUED_PREFILL
+            self._try_dispatch(req)
+            return
+        w.view.kv_used_tokens += w.cost.state_tokens(req.context_len)
+        w.admit_decode(req, self.now)
+        self._kick(wid)
+
+    def _on_fail(self, ev: _Event) -> None:
+        wid, recover_after = ev.payload
+        w = self.workers.get(wid)
+        if w is None:
+            return
+        lost = w.fail()
+        self.policy.on_worker_failure(wid)
+        for r in lost:
+            if r.phase != Phase.FINISHED:
+                self._try_dispatch(r)
+        if recover_after is not None:
+            self.push("recover", self.now + recover_after, wid)
+
+    def _on_recover(self, ev: _Event) -> None:
+        wid = ev.payload
+        w = self.workers.get(wid)
+        if w is None:
+            return
+        w.view.alive = True
+        for req in list(self.global_queue):
+            self._try_dispatch(req)
+        self._kick(wid)
+
+    def _on_add_worker(self, ev: _Event) -> None:
+        w: Worker = ev.payload
+        self.workers[w.wid] = w
+        self._worker_busy[w.wid] = False
+        self.policy.workers[w.wid] = w.view
+        if hasattr(self.policy, "toggle"):
+            self.policy.toggle.workers[w.wid] = w.view
+        for req in list(self.global_queue):
+            self._try_dispatch(req)
+
+
+def build_cluster(cfg, policy_name: str, n_workers: int = 4,
+                  worker_spec=None, predictor=None, **policy_kw):
+    """Convenience: workers + cost models + policy, wired together."""
+    from repro.core.predictor import AnalyticalPredictor
+    from repro.core.policies import make_policy
+    from repro.serving.costmodel import WorkerSpec
+
+    worker_spec = worker_spec or WorkerSpec()
+    cost = CostModel(cfg, worker_spec)
+    workers = [Worker(i, cost) for i in range(n_workers)]
+    predictor = predictor or AnalyticalPredictor(cost)
+    policy = make_policy(policy_name, [w.view for w in workers], predictor,
+                         **policy_kw)
+    for w in workers:
+        w.queue_discipline = policy.queue_discipline
+    sim = Simulator(workers, policy)
+    return sim, cost

@@ -1,0 +1,111 @@
+"""Checkpointing with cross-mesh resharding (elastic restart).
+
+Fault-tolerance contract:
+  * ``save`` writes params + optimizer state + step to a directory
+    (msgpack-framed raw buffers + a JSON manifest), atomically
+    (tmp + rename) so a mid-write crash never corrupts the latest.
+  * ``restore`` reads into ANY mesh/sharding — arrays are written as
+    full (unsharded) host buffers and re-placed with jax.device_put under
+    the new sharding, so a job can restart on a different topology
+    (elastic scale up/down).
+  * ``latest_step`` + retention rotation for restart loops.
+
+On a real multi-host cluster the full-gather save would be replaced by
+per-shard writes (tensorstore); the manifest/restore/resharding logic is
+the part under test here and is host-count independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat = _flatten(tree)
+    manifest = {}
+    with open(tmp / "arrays.bin", "wb") as f:
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            raw = arr.tobytes()
+            manifest[key] = {
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "offset": f.tell(), "nbytes": len(raw),
+            }
+            f.write(raw)
+    (tmp / "manifest.json").write_text(json.dumps(
+        {"step": step, "arrays": manifest}))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+    # retention
+    ckpts = sorted(p for p in ckpt_dir.iterdir()
+                   if p.name.startswith("step_"))
+    for old in ckpts[:-keep]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+             if p.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, target_tree: Any,
+            shardings: Any = None) -> Any:
+    """Read ``step`` into the structure of ``target_tree``; each leaf is
+    device_put under the matching ``shardings`` leaf (None = default
+    placement). Works across mesh shapes (full buffers on host)."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    meta = json.loads((d / "manifest.json").read_text())["arrays"]
+    data = (d / "arrays.bin").read_bytes()
+
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key, leaf in flat_target.items():
+        info = meta[key]
+        arr = np.frombuffer(
+            data, dtype=np.dtype(info["dtype"]), count=-1,
+            offset=info["offset"],
+        )[: int(np.prod(info["shape"])) if info["shape"] else 1]
+        arr = arr.reshape(info["shape"])
+        sh = flat_shard.get(key)
+        out[key] = jax.device_put(arr, sh) if sh is not None \
+            else jnp.asarray(arr)
+
+    # unflatten back into the target structure
+    leaves_paths = jax.tree_util.tree_flatten_with_path(target_tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in leaves_paths[0]]
+    new_leaves = [out[k] for k in keys]
+    return jax.tree_util.tree_unflatten(leaves_paths[1], new_leaves)

@@ -1,0 +1,131 @@
+"""AdamW in pure JAX with ZeRO-1-style sharded optimizer state.
+
+States (m, v, and the f32 master copy) inherit the parameter's
+PartitionSpec and additionally shard their largest replicated dimension
+over the data axis when divisible — the pjit formulation of optimizer-state
+sharding (ZeRO-1): each data-parallel rank owns a slice of the states, XLA
+inserts the reduce-scatter/all-gather pair around the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_state(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    }
+
+
+def state_specs(param_specs, params_shape=None, zero_axis: str = "data",
+                zero_size: int = 16):
+    """Optimizer-state PartitionSpecs (ZeRO-1): inherit the param spec and
+    additionally shard the first replicated *divisible* dim over
+    ``zero_axis`` — each data-parallel rank then owns a slice of m/v/master
+    and XLA places the corresponding reduce-scatter/all-gather around the
+    update. ``params_shape`` (matching pytree of shaped leaves) enables the
+    divisibility check; without it no widening happens."""
+
+    def _axes_used(spec):
+        used = set()
+        for p in spec:
+            if p is None:
+                continue
+            if isinstance(p, (tuple, list)):
+                used.update(p)
+            else:
+                used.add(p)
+        return used
+
+    def widen(spec, leaf=None):
+        if zero_axis is None or leaf is None or zero_axis in _axes_used(spec):
+            return spec
+        parts = list(spec)
+        for i, p in enumerate(parts):
+            if p is None and leaf.shape[i] % zero_size == 0 \
+                    and leaf.shape[i] > 0:
+                parts[i] = zero_axis
+                return P(*parts)
+        return spec
+
+    if params_shape is None:
+        wide = param_specs
+    else:
+        wide = jax.tree.map(widen, param_specs, params_shape,
+                            is_leaf=lambda x: isinstance(x, P))
+    return {
+        "step": P(),
+        "m": wide,
+        "v": wide,
+        "master": wide,
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state). Grads may be bf16; math is f32."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(cfg, state["step"])
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        gf = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mh = m / b1c
+        vh = v / b2c
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return m, v, new_master
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, {"step": step, "m": m, "v": v, "master": master}
+
+
+def make_train_step(loss_fn, cfg: AdamWConfig = AdamWConfig()):
+    """loss_fn(params, batch) -> scalar. Returns step(params, state, batch)
+    -> (params, state, loss)."""
+
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, state = apply_updates(params, grads, state, cfg)
+        return params, state, loss
+
+    return step

@@ -1,0 +1,55 @@
+"""MaskSpec properties: the lazy per-chunk masks must agree with their
+dense definitions and with each other at the seams the engine relies on."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import MaskSpec
+
+
+@given(sq=st.integers(1, 8), sk=st.integers(1, 16),
+       off=st.integers(0, 8))
+@settings(max_examples=25, deadline=None)
+def test_causal_mask_definition(sq, sk, off):
+    m = np.asarray(MaskSpec("causal").block(sq, sk, off))[0, 0]
+    for i in range(sq):
+        for j in range(sk):
+            assert m[i, j] == (j <= i + off)
+
+
+@given(sq=st.integers(1, 8), sk=st.integers(4, 16),
+       w=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_window_mask_band(sq, sk, w):
+    m = np.asarray(MaskSpec("causal", window=w).block(sq, sk, 0))[0, 0]
+    for i in range(sq):
+        for j in range(sk):
+            assert m[i, j] == (j <= i and j > i - w)
+
+
+@given(starts=st.lists(st.integers(0, 12), min_size=1, max_size=3),
+       sq=st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_chunk_mask_equals_shifted_causal(starts, sq):
+    """chunk mask with per-request start == causal mask with that offset."""
+    sk = 24
+    lengths = jnp.asarray(starts, jnp.int32)
+    chunk = np.asarray(MaskSpec("chunk").block(sq, sk, 0, lengths))
+    for b, s in enumerate(starts):
+        causal = np.asarray(MaskSpec("causal", q_offset=s).block(sq, sk, 0))
+        np.testing.assert_array_equal(chunk[b, 0], causal[0, 0])
+
+
+@given(lengths=st.lists(st.integers(0, 15), min_size=1, max_size=4))
+@settings(max_examples=25, deadline=None)
+def test_ring_mask_matches_lengths_before_wrap(lengths):
+    """Until the ring wraps (len+1 < size), ring == lengths mask."""
+    sk = 16
+    l = jnp.asarray(lengths, jnp.int32)
+    ring = np.asarray(MaskSpec("ring").block(1, sk, 0, l))
+    dense = np.asarray(MaskSpec("lengths").block(1, sk, 0, l))
+    for b, ln in enumerate(lengths):
+        if ln + 1 < sk:
+            np.testing.assert_array_equal(ring[b], dense[b])
+        else:
+            assert ring[b].all()   # wrapped: every slot valid

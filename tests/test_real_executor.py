@@ -1,0 +1,81 @@
+"""Real-JAX executor end-to-end: the same Tropical scheduler drives actual
+model execution (smoke config) — wall-clock durations, real KV caches."""
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.request import Phase, Request, SLOSpec
+from repro.serving.costmodel import CostModel, WorkerSpec
+from repro.serving.executor import ClusterRealExecutors, RealExecutor
+from repro.serving.simulator import build_cluster
+
+
+def _mk_trace(n=6, prompt=24, out=6):
+    slo = SLOSpec(ttft=30.0, tpot=5.0)   # generous: wall-clock CPU
+    return [Request(rid=i, arrival_time=0.05 * i, prompt_len=prompt,
+                    output_len=out, slo=slo) for i in range(n)]
+
+
+@pytest.mark.parametrize("policy", ["sarathi", "tropical"])
+def test_real_executor_end_to_end(policy):
+    cfg = get_smoke("deepseek-7b")
+    sim, _ = build_cluster(cfg, policy, n_workers=2,
+                           worker_spec=WorkerSpec(tp=1))
+    execs = ClusterRealExecutors(cfg, 2, max_slots=8, max_len=64)
+    sim.duration_fn = execs.duration_fn()
+    trace = _mk_trace()
+    sim.add_trace(trace)
+    m = sim.run(until=3000.0)
+    assert m.n_finished == m.n_total == len(trace)
+    # every request actually generated tokens through the real model
+    for r in trace:
+        wid = r.worker
+        gen = None
+        for e in execs.execs.values():
+            if r.rid in e.generated:
+                gen = e.generated[r.rid]
+        assert gen is not None and len(gen) >= r.output_len
+
+
+def test_real_executor_chunked_prefill_matches_full():
+    """Chunked prefill through the slot cache == one-shot prefill."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import api as model_api
+
+    cfg = get_smoke("qwen2-1.5b")
+    api = model_api.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0,
+                              cfg.vocab_size)
+    # one-shot
+    cache = api.init_cache(1, 48)
+    lengths = jnp.asarray([24], jnp.int32)
+    full_logits, _ = api.prefill(params, cache, toks, lengths)
+    # chunked: 3 chunks of 8
+    cache2 = api.init_cache(1, 48)
+    logits = None
+    for i in range(3):
+        chunk = toks[:, i * 8:(i + 1) * 8]
+        starts = jnp.asarray([i * 8], jnp.int32)
+        logits, cache2 = api.prefill_chunk(params, cache2, chunk, starts)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_real_executor_migration_preserves_generation():
+    cfg = get_smoke("deepseek-7b")
+    execs = ClusterRealExecutors(cfg, 2, max_slots=4, max_len=64)
+    req = Request(rid=0, arrival_time=0.0, prompt_len=16, output_len=8,
+                  slo=SLOSpec(30.0, 5.0))
+    src = execs.execs[0]
+    src.register(req)
+    src.run_prefill_chunk(req, 16)
+    req.prefilled_tokens = 16
+    src.run_decode_batch([req])
+    tokens_before = list(src.generated[0])
+    execs.migrate(req, 0, 1)
+    dst = execs.execs[1]
+    assert dst.generated[0] == tokens_before
+    dst.run_decode_batch([req])
+    assert len(dst.generated[0]) == len(tokens_before) + 1

@@ -1,0 +1,132 @@
+"""Discrete-event simulator integration tests: conservation, policy
+behaviours, fault tolerance, elastic scaling, KV accounting."""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.metrics import derive_slos
+from repro.core.request import Phase, Request
+from repro.serving.costmodel import CostModel, WorkerSpec
+from repro.serving.simulator import build_cluster
+from repro.serving.trace import MOONCAKE, generate_trace, sample_lengths
+
+
+CFG = get_config("internlm-20b")
+SPEC = WorkerSpec(tp=8)
+
+
+def _trace(rate=1.0, duration=60.0, seed=0):
+    cost = CostModel(CFG, SPEC)
+    return generate_trace(rate, duration, cost, seed=seed)
+
+
+@pytest.mark.parametrize("policy", ["vllm", "sarathi", "distserve",
+                                    "tropical", "tropical++"])
+def test_all_requests_finish(policy):
+    sim, _ = build_cluster(CFG, policy, n_workers=4, worker_spec=SPEC)
+    sim.add_trace(_trace())
+    m = sim.run(until=4000.0)
+    assert m.n_finished == m.n_total, (policy, m.n_finished, m.n_total)
+    # every finished request generated exactly its output_len
+    for r in sim.requests:
+        assert r.phase == Phase.FINISHED
+        assert r.generated_tokens == r.output_len
+        assert r.prefilled_tokens == r.prompt_len
+
+
+def test_kv_accounting_returns_to_zero():
+    sim, _ = build_cluster(CFG, "tropical", n_workers=4, worker_spec=SPEC)
+    sim.add_trace(_trace(rate=0.5))
+    sim.run(until=4000.0)
+    for w in sim.workers.values():
+        assert w.view.kv_used_tokens == pytest.approx(0.0, abs=1.0), w.wid
+        assert not w.decode_running and not w.prefill_queue
+
+
+def test_distserve_never_decodes_on_prefill_worker():
+    sim, _ = build_cluster(CFG, "distserve", n_workers=4, worker_spec=SPEC)
+    sim.add_trace(_trace())
+    sim.run(until=4000.0)
+    from repro.core.toggle import Role
+    for w in sim.workers.values():
+        if w.view.role == Role.PREFILL:
+            assert w.blocked_time == {} or all(
+                v == 0 for v in w.blocked_time.values())
+    # migrations happened for every request (P -> D handoff)
+    assert sum(r.migrations for r in sim.requests) >= len(sim.requests) * 0.9
+
+
+def test_vllm_decode_blocked_by_prefill():
+    """The interference mechanism: colocated exclusive prefill stalls
+    decodes (Fig 1b)."""
+    sim, _ = build_cluster(CFG, "vllm", n_workers=2, worker_spec=SPEC)
+    sim.add_trace(_trace(rate=2.0, duration=60.0))
+    sim.run(until=4000.0)
+    blocked = {}
+    for w in sim.workers.values():
+        blocked.update(w.blocked_time)
+    assert blocked and max(blocked.values()) > 0.0
+
+
+def test_worker_failure_requests_recover():
+    sim, _ = build_cluster(CFG, "tropical", n_workers=4, worker_spec=SPEC)
+    trace = _trace(rate=1.0, duration=60.0)
+    sim.add_trace(trace)
+    sim.inject_failure(20.0, wid=3, recover_after=30.0)
+    m = sim.run(until=6000.0)
+    assert m.n_finished == m.n_total
+    assert m.restarts > 0          # someone was on worker 3
+    for r in sim.requests:
+        assert r.generated_tokens == r.output_len
+
+
+def test_elastic_add_worker_improves_queueing():
+    results = {}
+    for scale in (False, True):
+        sim, cost = build_cluster(CFG, "tropical", n_workers=2,
+                                  worker_spec=SPEC)
+        sim.add_trace(copy.deepcopy(_trace(rate=2.0, duration=80.0)))
+        if scale:
+            from repro.serving.engine import Worker
+            sim.add_worker_at(10.0, Worker(10, cost))
+            sim.add_worker_at(10.0, Worker(11, cost))
+        m = sim.run(until=6000.0)
+        results[scale] = m
+        assert m.n_finished == m.n_total
+    assert results[True].queue_p90 <= results[False].queue_p90
+
+
+def test_migration_cost_charged():
+    cost = CostModel(CFG, SPEC)
+    t = cost.migration_time(8192)
+    assert t > cost.worker.hw.migration_latency
+    # monotone in context
+    assert cost.migration_time(16384) > t
+
+
+@given(rate=st.floats(0.2, 1.5), seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_property_conservation_under_random_load(rate, seed):
+    """No request is lost or duplicated under any load/policy mix."""
+    sim, _ = build_cluster(CFG, "tropical", n_workers=3, worker_spec=SPEC)
+    trace = _trace(rate=rate, duration=30.0, seed=seed)
+    sim.add_trace(trace)
+    m = sim.run(until=9000.0)
+    assert m.n_total == len(trace)
+    assert m.n_finished == m.n_total
+    rids = sorted(r.rid for r in sim.requests)
+    assert rids == sorted(r.rid for r in trace)
+
+
+def test_trace_statistics_longtail():
+    """Fig 3 reproduction: inputs must be long-tailed and far more dynamic
+    than outputs."""
+    rng = np.random.default_rng(0)
+    inp, out = sample_lengths(rng, 20000, MOONCAKE)
+    assert np.percentile(inp, 99) / np.median(inp) > 8    # long tail
+    in_cv = inp.std() / inp.mean()
+    out_cv = out.std() / out.mean()
+    assert in_cv > 1.5 * out_cv                           # input more dynamic
