@@ -1,0 +1,91 @@
+"""SLO attainment vs KV migration bandwidth (beyond-paper figure).
+
+The contended transfer engine (serving/transfer.py) makes the
+disaggregation penalty explicit: DistServe migrates *every* request P->D,
+so as per-link ICI bandwidth shrinks its post-migration inter-token
+latency blows through the TPOT SLO, while Tropical (decode-in-place for
+Path-②, transfer-aware dispatch for Path-①) and the non-disaggregated
+baselines (sarathi/vllm — zero migrations) stay comparatively flat.
+
+Also the regression guard on the cost model: with bandwidth effectively
+infinite, the contended engine must reproduce the legacy fixed-delay
+metrics for every policy (rows tagged ``check=infbw``).
+
+Usage: PYTHONPATH=src python -m benchmarks.fig_migration [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+from benchmarks.common import (MODEL, N_WORKERS, POLICIES, WORKER,
+                               cost_model, emit, make_trace)
+from repro.configs import get_config
+from repro.serving.simulator import build_cluster
+
+GB = 1e9
+# per-link bandwidth sweep; hardware default is 50 GB/s x 2 links
+BANDWIDTHS = (0.05 * GB, 0.2 * GB, 1 * GB, 5 * GB, 50 * GB)
+RATE = 3.0
+DURATION = 300.0
+
+
+def run_policy_bw(policy: str, trace, bw: float | None,
+                  use_engine: bool = True, until: float = 36000.0):
+    sim, _ = build_cluster(get_config(MODEL), policy, n_workers=N_WORKERS,
+                           worker_spec=WORKER, ici_bw=bw,
+                           use_transfer_engine=use_engine)
+    sim.add_trace(copy.deepcopy(trace))
+    m = sim.run(until=until)
+    return m, sim
+
+
+def main(bandwidths=BANDWIDTHS, rate=RATE, duration=DURATION) -> list[dict]:
+    cm = cost_model()
+    trace = make_trace(rate, duration, cm, seed=17)
+    rows = []
+    for bw in bandwidths:
+        for pol in POLICIES:
+            m, sim = run_policy_bw(pol, trace, bw)
+            rows.append({
+                "policy": pol, "ici_bw_gbps": round(bw / GB, 3),
+                "slo_attainment": round(m.slo_attainment, 3),
+                "ttft_attainment": round(m.ttft_attainment, 3),
+                "tpot_attainment": round(m.tpot_attainment, 3),
+                "migrations": m.migrations,
+                "migration_wait_avg": round(m.migration_wait_avg, 4),
+                "preemptions": m.preemptions,
+                "finished": m.n_finished, "total": m.n_total,
+            })
+
+    # regression guard: infinite bandwidth == legacy fixed-delay model
+    for pol in POLICIES:
+        m_new, _ = run_policy_bw(pol, trace, bw=1e21, use_engine=True)
+        m_old, _ = run_policy_bw(pol, trace, bw=1e21, use_engine=False)
+        drift = abs(m_new.slo_attainment - m_old.slo_attainment)
+        rows.append({
+            "policy": pol, "check": "infbw",
+            "engine_slo": round(m_new.slo_attainment, 4),
+            "legacy_slo": round(m_old.slo_attainment, 4),
+            "engine_ttft_avg": round(m_new.ttft_avg, 5),
+            "legacy_ttft_avg": round(m_old.ttft_avg, 5),
+            "drift": round(drift, 5),
+            "ok": drift < 1e-3 and m_new.migrations == m_old.migrations,
+        })
+        assert drift < 1e-3, (pol, m_new.slo_attainment, m_old.slo_attainment)
+        assert m_new.migrations == m_old.migrations, \
+            (pol, m_new.migrations, m_old.migrations)
+
+    emit("fig_migration", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    if a.quick:
+        main(bandwidths=(0.05 * GB, 1 * GB, 50 * GB), rate=2.0,
+             duration=60.0)
+    else:
+        main()

@@ -19,7 +19,7 @@ def main() -> None:
     from benchmarks import (fig3_workload, fig4_queue_vs_interference,
                             fig5_worker_allocation, fig8_slo_attainment,
                             fig9_latency, fig10_queueing, fig11_cdf,
-                            predictor_noise, roofline, scale)
+                            fig_migration, predictor_noise, roofline, scale)
     benches = {
         "fig3": fig3_workload.main,
         "fig4": fig4_queue_vs_interference.main,
@@ -29,6 +29,9 @@ def main() -> None:
         "fig9": fig9_latency.main,
         "fig10": fig10_queueing.main,
         "fig11": fig11_cdf.main,
+        "fig_migration": (lambda: fig_migration.main(
+            bandwidths=(0.05e9, 1e9, 50e9), rate=2.0, duration=60.0))
+        if args.quick else fig_migration.main,
         "scale": scale.main,
         "predictor_noise": predictor_noise.main,
         "roofline": roofline.main,

@@ -1,0 +1,85 @@
+"""Version-compatibility shims for the installed jax.
+
+The repo targets the modern jax API surface; older point releases moved a
+few symbols around. Every version-sensitive import goes through here so a
+jax upgrade/downgrade is a one-file audit:
+
+* ``shard_map`` — top-level ``jax.shard_map`` (jax >= 0.6) vs
+  ``jax.experimental.shard_map.shard_map`` (<= 0.5.x). The experimental
+  version also spells the replication-check kwarg ``check_rep`` instead of
+  ``check_vma``; the wrapper translates.
+* ``tree_map`` — ``jax.tree.map`` (>= 0.4.25) vs ``jax.tree_util.tree_map``.
+* ``make_mesh``/``set_mesh``/``AxisType`` — the explicit-sharding mesh API
+  (jax >= 0.5/0.6). Older jax has ``jax.make_mesh`` without ``axis_types``
+  and no ambient-mesh setter; ``Auto`` axis semantics are the only
+  behaviour those versions have, so dropping the kwarg is faithful.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+
+import jax
+
+try:                                    # jax >= 0.6
+    from jax import shard_map as _shard_map
+    _NEEDS_KWARG_TRANSLATION = False
+except ImportError:                     # jax <= 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NEEDS_KWARG_TRANSLATION = True
+
+
+def shard_map(f=None, /, **kwargs):
+    """``jax.shard_map`` with the modern kwarg spelling on any jax."""
+    if _NEEDS_KWARG_TRANSLATION and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if f is None:                       # used as shard_map(mesh=...)(f)
+        return lambda g: _shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):   # jax >= 0.4.25
+    tree_map = jax.tree.map
+    tree_leaves = jax.tree.leaves
+else:                                   # pragma: no cover - older jax
+    tree_map = jax.tree_util.tree_map
+    tree_leaves = jax.tree_util.tree_leaves
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):          # placeholder matching >=0.5 names
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = "axis_types" in inspect.signature(
+    jax.make_mesh).parameters
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """``jax.make_mesh`` accepting ``axis_types`` on any jax version."""
+    if axis_types is not None and _MAKE_MESH_HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):     # pragma: no cover - 0.5.x
+    def set_mesh(mesh):
+        """0.5.x only has the context-manager form; enter it for the
+        process lifetime to match ``jax.set_mesh`` statement semantics
+        (call sites use it as a bare statement, never exiting)."""
+        cm = jax.sharding.use_mesh(mesh)
+        cm.__enter__()
+        return cm
+else:
+    def set_mesh(mesh):
+        """No ambient-mesh API on this jax: the repo always passes the mesh
+        explicitly (shard_map(mesh=...), in_shardings), so an inert context
+        is sufficient."""
+        return contextlib.nullcontext(mesh)

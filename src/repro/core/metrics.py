@@ -34,13 +34,15 @@ class ServeMetrics:
     blocked_time_avg: float        # decode blocked by prefill (interference)
     migrations: int
     restarts: int
+    preemptions: int               # KV watermark/pool evictions
+    migration_wait_avg: float      # seconds a migrated request sat on links
 
     def row(self) -> dict:
         return {k: getattr(self, k) for k in (
             "n_total", "n_finished", "slo_attainment", "ttft_attainment",
             "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg",
             "tpot_p90", "queue_avg", "queue_p90", "blocked_time_avg",
-            "migrations", "restarts")}
+            "migrations", "restarts", "preemptions", "migration_wait_avg")}
 
 
 def compute_metrics(requests: Iterable[Request],
@@ -56,6 +58,7 @@ def compute_metrics(requests: Iterable[Request],
     n = max(len(reqs), 1)
     queues = list((queue_times or {}).values())
     blocked = list((blocked_times or {}).values())
+    waits = [r.migration_wait for r in reqs if r.migrations > 0]
     return ServeMetrics(
         n_total=len(reqs),
         n_finished=len(fin),
@@ -74,6 +77,8 @@ def compute_metrics(requests: Iterable[Request],
         blocked_time_avg=float(np.mean(blocked)) if blocked else 0.0,
         migrations=sum(r.migrations for r in reqs),
         restarts=sum(r.restarts for r in reqs),
+        preemptions=sum(r.preemptions for r in reqs),
+        migration_wait_avg=float(np.mean(waits)) if waits else 0.0,
     )
 
 

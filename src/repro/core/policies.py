@@ -39,6 +39,15 @@ class Policy:
     def __init__(self, workers: Sequence[WorkerView], predictor: Predictor):
         self.workers = {w.wid: w for w in workers}
         self.predictor = predictor
+        self.transfer = None          # set via attach_transfer
+
+    def attach_transfer(self, transfer, kv_bytes_fn,
+                        state_tokens_fn=None) -> None:
+        """Give the policy visibility into the contended KV transfer engine
+        (queue depths on worker links) and the cost model's HBM-footprint
+        conversion. Baselines ignore it — DistServe's blind migration is
+        exactly the cost the paper charges it."""
+        self.transfer = transfer
 
     # --- dispatch ----------------------------------------------------------
     def dispatch_prefill(self, req: Request, now: float) -> Optional[int]:
@@ -140,6 +149,13 @@ class TropicalPolicy(Policy):
         for i, w in enumerate(ws):
             w.role = Role.PREFILL if i < n_p else Role.MULTIPLEX
         self.toggle = MultiplexingToggle(ws, predictor, toggle_config)
+
+    def attach_transfer(self, transfer, kv_bytes_fn,
+                        state_tokens_fn=None) -> None:
+        super().attach_transfer(transfer, kv_bytes_fn, state_tokens_fn)
+        self.toggle.transfer = transfer
+        self.toggle.kv_bytes_fn = kv_bytes_fn
+        self.toggle.state_tokens_fn = state_tokens_fn
 
     def dispatch_prefill(self, req, now):
         return self.toggle.dispatch_prefill(req, now)

@@ -49,7 +49,11 @@ class Request:
     decode_time: float = 0.0              # accumulated decode-phase seconds
     tpot_slack: float = 0.0               # paper §IV-B accumulated slack
     migrations: int = 0
+    migration_wait: float = 0.0           # seconds spent MIGRATING on links
     restarts: int = 0                     # fault-tolerance: re-prefills
+    preemptions: int = 0                  # KV evictions (watermark/pool)
+    prior_tokens: int = 0                 # tokens streamed before KV loss
+    stall_start: Optional[float] = None   # stream stalled (KV lost) at
 
     # ------------------------------------------------------------------ SLO
     @property
@@ -60,15 +64,26 @@ class Request:
     def remaining_prefill(self) -> int:
         return max(0, self.prompt_len - self.prefilled_tokens)
 
+    @property
+    def streamed_tokens(self) -> int:
+        """Tokens delivered to the user across KV losses (restarts fold
+        generated tokens into ``prior_tokens``; the stream itself never
+        rewinds — the user keeps what was sent)."""
+        return self.prior_tokens + self.generated_tokens
+
+    @property
+    def remaining_output(self) -> int:
+        return max(0, self.output_len - self.streamed_tokens)
+
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
 
     def tpot(self) -> Optional[float]:
-        if self.finish_time is None or self.generated_tokens <= 1:
+        if self.finish_time is None or self.streamed_tokens <= 1:
             return 0.0 if self.finish_time is not None else None
-        return self.decode_time / (self.generated_tokens - 1)
+        return self.decode_time / (self.streamed_tokens - 1)
 
     def ttft_ok(self) -> bool:
         t = self.ttft()
@@ -90,13 +105,23 @@ class Request:
         self.tpot_slack += self.slo.tpot - duration
 
     def record_first_token(self, now: float) -> None:
-        self.first_token_time = now
-        self.generated_tokens = 1
-        # one iteration of initial credit: TPOT is measured per *generated*
-        # token, so the budget of the first decode iteration is available
-        # the moment the request enters decode (paper Fig. 7 banks slack
-        # from the first tokens before admitting a prefill).
-        self.tpot_slack = self.slo.tpot
+        self.generated_tokens = 1    # the prefill's forward pass emits it
+        if self.first_token_time is None:
+            self.first_token_time = now
+            # one iteration of initial credit: TPOT is measured per
+            # *generated* token, so the budget of the first decode iteration
+            # is available the moment the request enters decode (paper
+            # Fig. 7 banks slack from the first tokens before admitting a
+            # prefill).
+            self.tpot_slack = self.slo.tpot
+        else:
+            # resumed stream after KV loss: TTFT was already achieved; the
+            # stall since eviction is inter-token latency the user saw
+            if self.stall_start is not None:
+                gap = now - self.stall_start
+                self.decode_time += gap
+                self.tpot_slack = self.slo.tpot - gap
+                self.stall_start = None
 
     def effective_slack(self, base_iter: float, horizon: int = 4) -> float:
         """Delay this request can absorb NOW without its final TPOT
@@ -104,11 +129,28 @@ class Request:
         rate, so early/remaining tokens bank budget). banked slack plus a
         bounded forward credit over the next ``horizon`` iterations at the
         current base decode rate."""
-        remaining = max(0, self.output_len - self.generated_tokens)
-        credit = max(0.0, (self.slo.tpot - base_iter)) * min(remaining,
-                                                             horizon)
+        credit = max(0.0, (self.slo.tpot - base_iter)) \
+            * min(self.remaining_output, horizon)
         return self.tpot_slack + credit
 
     def ttft_deadline_slack(self, now: float) -> float:
         """Remaining TTFT budget at ``now`` (before any predicted costs)."""
         return self.slo.ttft - (now - self.arrival_time)
+
+    def reset_for_reprefill(self, now: Optional[float] = None) -> None:
+        """KV/state was lost (worker failure, page eviction, failed
+        migration placement): the full context re-prefills wherever
+        dispatch next places the request, then the stream resumes — only
+        ``remaining_output`` tokens are still owed (what was streamed
+        stays streamed). Callers bump the counter that names the cause
+        (``restarts``/``preemptions``)."""
+        self.prompt_len = self.context_len   # generated tokens fold in
+        self.prior_tokens += self.generated_tokens
+        self.generated_tokens = 0
+        self.prefilled_tokens = 0
+        self.prefill_start = None
+        self.phase = Phase.QUEUED_PREFILL
+        self.worker = None
+        if now is not None and self.prior_tokens > 0 \
+                and self.stall_start is None:
+            self.stall_start = now           # mid-stream: stall clock runs

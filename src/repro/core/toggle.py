@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import Optional, Sequence
 
 from repro.core.predictor import Predictor
@@ -43,14 +44,32 @@ class WorkerView:
     decode_batch: int = 0                   # running decode requests
     decode_sum_ctx: float = 0.0
     min_tpot_slack: float = float("inf")    # min over running decodes
-    # memory
+    # memory — token-level (legacy) and page-level (paged KV accounting)
     kv_used_tokens: float = 0.0
     kv_capacity_tokens: float = 1.0
+    total_pages: int = 0                    # 0 = worker has no page pool
+    free_pages: int = 0
+    page_size: int = 16
     alive: bool = True
 
     @property
     def hbm_util(self) -> float:
+        if self.total_pages > 0:
+            return 1.0 - self.free_pages / self.total_pages
         return self.kv_used_tokens / max(self.kv_capacity_tokens, 1.0)
+
+    def pages_for(self, tokens: float) -> int:
+        from repro.serving.kvcache import pages_for
+        return pages_for(int(tokens), self.page_size)
+
+    def page_headroom_for(self, tokens: float, watermark: float = 1.0) -> bool:
+        """Would admitting ``tokens`` keep page usage under ``watermark``?
+        True when the worker reports no page pool (token check governs)."""
+        if self.total_pages <= 0:
+            return True
+        used_after = (self.total_pages - self.free_pages
+                      + self.pages_for(tokens))
+        return used_after <= watermark * self.total_pages
 
     @property
     def unfinished_tokens(self) -> float:
@@ -66,6 +85,9 @@ class ToggleConfig:
     decode_iter_guard: float = 0.8      # don't multiplex when decode iter
                                         # time > guard * TPOT_SLO (§IV-C)
     chunk_tokens: int = 2048            # chunked prefill on M workers
+    migrate_stall_budget: float = 4.0   # TPOT budgets a migration stall may
+                                        # burn (beyond banked slack) before
+                                        # decode-in-place wins
     slack_chunking: bool = False        # beyond-paper: size chunk by slack
     min_chunk: int = 256
     queue_violation_window: int = 16    # dispatches between role reviews
@@ -74,10 +96,20 @@ class ToggleConfig:
 
 class MultiplexingToggle:
     def __init__(self, workers: Sequence[WorkerView], predictor: Predictor,
-                 config: ToggleConfig = ToggleConfig()):
+                 config: ToggleConfig = ToggleConfig(),
+                 transfer=None, kv_bytes_fn=None):
         self.workers = {w.wid: w for w in workers}
         self.predictor = predictor
         self.cfg = config
+        # optional contended-transfer awareness (serving/transfer.py):
+        # dispatch_decode penalises destinations whose migration would sit
+        # behind deep link queues. kv_bytes_fn(ctx_tokens) -> bytes to move.
+        self.transfer = transfer
+        self.kv_bytes_fn = kv_bytes_fn
+        # ctx tokens -> HBM-token footprint (sliding-window archs hold less
+        # than their raw context); engines reserve pages in these units, so
+        # the admission gates must too. None = identity (dense).
+        self.state_tokens_fn = None
         self._ttft_pressure = 0           # recent Path-① slack violations
         self._dispatches = 0
 
@@ -112,8 +144,14 @@ class MultiplexingToggle:
             return False
         if w.hbm_util > cfg.hbm_admission:
             return False
-        if (w.kv_used_tokens + req.prompt_len + req.output_len
+        footprint = req.prompt_len + req.remaining_output
+        if (w.kv_used_tokens + footprint
                 > cfg.hbm_watermark * w.kv_capacity_tokens):
+            return False
+        # page-granular headroom: block rounding + fragmentation can exhaust
+        # allocatable pages well before the token counter says so
+        if not w.page_headroom_for(self._kv_need_tokens(footprint),
+                                   cfg.hbm_watermark):
             return False
         chunk = min(self.chunk_for(w, req.slo.tpot), req.remaining_prefill
                     or req.prompt_len)
@@ -187,18 +225,65 @@ class MultiplexingToggle:
         pick = min(ok or cands, key=lambda c: c[0])
         return pick[1]
 
+    def _kv_need_tokens(self, ctx_tokens: float) -> float:
+        """Raw context tokens -> HBM-token footprint, matching the units
+        the engine's PageAccountant reserves in."""
+        if self.state_tokens_fn is None:
+            return ctx_tokens
+        return self.state_tokens_fn(int(ctx_tokens))
+
+    def _transfer_stall(self, src_wid: Optional[int], dst: WorkerView,
+                        req: Request, now: float) -> float:
+        """Predicted seconds the migrated KV sits on the wire behind the
+        source's egress queue and ``dst``'s ingress queue."""
+        if self.transfer is None or self.kv_bytes_fn is None \
+                or src_wid is None or src_wid == dst.wid:
+            return 0.0
+        nbytes = self.kv_bytes_fn(req.context_len)
+        return self.transfer.predict_transfer_time(src_wid, dst.wid, nbytes,
+                                                   now=now)
+
     def dispatch_decode(self, req: Request, now: float) -> Optional[int]:
         """After Path-① prefill completes: pick a multiplexing worker for the
-        decode phase (KV migrates). InFaaS least-unfinished-tokens."""
-        need = req.context_len + (req.output_len - req.generated_tokens)
+        decode phase (KV migrates). InFaaS least-unfinished-tokens, tempered
+        by predicted transfer time: a destination whose links are backed up
+        stalls the first decode tokens however idle its batch is, so stall
+        (quantised to TPOT budgets — the granularity at which it burns
+        slack) ranks ahead of queue depth."""
+        need = req.context_len + req.remaining_output
         cands = [w for w in self._alive(Role.MULTIPLEX)
                  if w.kv_used_tokens + need
-                 <= self.cfg.hbm_watermark * w.kv_capacity_tokens]
+                 <= self.cfg.hbm_watermark * w.kv_capacity_tokens
+                 and w.page_headroom_for(self._kv_need_tokens(need),
+                                         self.cfg.hbm_watermark)]
         if not cands:
-            cands = self._alive(Role.MULTIPLEX)
+            # every M worker is page/watermark-full: migrating would pay the
+            # wire transfer only for admit_migrated to reject it (restart +
+            # full re-prefill). Decode in place while the source lives — it
+            # still holds the request's pages at dispatch time.
+            src = self.workers.get(req.worker) \
+                if req.worker is not None else None
+            if src is not None and src.alive:
+                return None
+            cands = self._alive(Role.MULTIPLEX)   # src dead: least-bad
         if not cands:
             return None
-        return min(cands, key=lambda w: w.unfinished_tokens).wid
+        tpot = max(req.slo.tpot, 1e-6)
+        best_key, best_w, best_stall = None, None, 0.0
+        for w in cands:
+            stall = self._transfer_stall(req.worker, w, req, now)
+            bucket = stall / tpot if math.isinf(stall) else int(stall / tpot)
+            key = (bucket, w.unfinished_tokens, w.wid)
+            if best_key is None or key < best_key:
+                best_key, best_w, best_stall = key, w, stall
+        # §IV asymmetry: when even the best link queue would burn more TPOT
+        # budget than the request has banked (plus a bounded forward
+        # credit), keep decoding in place — the source worker multiplexes
+        # the decode rather than drowning it on the wire
+        if req.worker is not None and best_stall > \
+                req.tpot_slack + self.cfg.migrate_stall_budget * tpot:
+            return None
+        return best_w.wid
 
     # ------------------------------------------------------ role management
     def review_roles(self, now: float) -> None:

@@ -7,25 +7,25 @@ import to obtain placeholder devices.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
+    return make_mesh(
         shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        axis_types=(AxisType.Auto,) * len(axes),
     )
 
 
 def make_worker_mesh(tp: int = 4):
     """Mesh for one serving worker (TP-only sub-slice)."""
-    return jax.make_mesh((1, tp), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, tp), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU tests/examples."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)

@@ -37,8 +37,25 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fail-worker", type=int, default=None,
                     help="inject a worker failure at duration/2")
+    ap.add_argument("--ici-bw", type=float, default=None, metavar="GBPS",
+                    help="per-link KV migration bandwidth in GB/s "
+                         "(default: hardware spec, 50 GB/s on v5e)")
+    ap.add_argument("--ici-links", type=int, default=None,
+                    help="usable P2P links per worker (default 2)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV block granularity in tokens")
+    ap.add_argument("--no-transfer-engine", action="store_true",
+                    help="legacy fixed-delay migrations (no link contention)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+    if args.ici_bw is not None and args.ici_bw <= 0:
+        ap.error("--ici-bw must be > 0 (migrated KV can never arrive "
+                 "over a zero-bandwidth link)")
+    if args.ici_links is not None and args.ici_links <= 0:
+        ap.error("--ici-links must be > 0 (zero links stall every "
+                 "migration forever)")
+    if args.page_size <= 0:
+        ap.error("--page-size must be a positive token count")
 
     from repro.configs import get_config, get_smoke
     from repro.serving.costmodel import CostModel, WorkerSpec
@@ -52,8 +69,11 @@ def main() -> None:
         cfg = get_config(args.arch)
         spec = WorkerSpec(tp=args.tp)
 
-    sim, cost = build_cluster(cfg, args.policy, n_workers=args.workers,
-                              worker_spec=spec)
+    sim, cost = build_cluster(
+        cfg, args.policy, n_workers=args.workers, worker_spec=spec,
+        use_transfer_engine=not args.no_transfer_engine,
+        ici_bw=args.ici_bw * 1e9 if args.ici_bw is not None else None,
+        ici_links=args.ici_links, page_size=args.page_size)
     trace = generate_trace(args.rate, args.duration, cost, seed=args.seed)
     if args.mode == "real":
         from repro.serving.executor import ClusterRealExecutors
@@ -72,6 +92,9 @@ def main() -> None:
     row = m.row()
     row.update(policy=args.policy, arch=cfg.name, mode=args.mode,
                rate=args.rate, workers=args.workers)
+    if sim.transfer is not None:
+        row.update(kv_bytes_migrated=sim.transfer.bytes_moved,
+                   transfer_seconds=sim.transfer.total_transfer_seconds)
     if args.json:
         print(json.dumps(row, indent=1, default=float))
     else:

@@ -155,13 +155,19 @@ class WorkerSpec:
 class CostModel:
     """Iteration-time + capacity model for one (model, worker) pair."""
 
-    def __init__(self, cfg: ModelConfig, worker: WorkerSpec = WorkerSpec()):
+    def __init__(self, cfg: ModelConfig, worker: WorkerSpec = WorkerSpec(),
+                 page_size: int = 16):
         self.cfg = cfg
         self.spec = build_cost_spec(cfg)
         self.worker = worker
+        self.page_size = page_size          # KV block granularity (tokens)
         self.params_bytes = self.spec.n_params * self.spec.bytes_per_weight
 
     # ------------------------------------------------------------ capacity
+    def kv_capacity_pages(self, reserve_frac: float = 0.1) -> int:
+        """Allocatable KV pages per worker (page = ``page_size`` tokens)."""
+        return max(1, self.kv_capacity_tokens(reserve_frac) // self.page_size)
+
     def kv_capacity_tokens(self, reserve_frac: float = 0.1) -> int:
         free = self.worker.hbm_bytes * (1 - reserve_frac) - self.params_bytes
         if self.spec.kv_bytes_per_token <= 0:
@@ -227,9 +233,15 @@ class CostModel:
         return self.iteration_time(n_decode, sum_ctx)
 
     # ----------------------------------------------------------- migration
-    def migration_time(self, ctx_tokens: int) -> float:
-        hw = self.worker.hw
-        kv_bytes = self.spec.kv_bytes_per_token * self.state_tokens(ctx_tokens) \
+    def kv_transfer_bytes(self, ctx_tokens: int) -> float:
+        """Bytes of KV/state that must cross the ICI links to migrate a
+        request with context ``ctx_tokens``."""
+        return self.spec.kv_bytes_per_token * self.state_tokens(ctx_tokens) \
             + self.spec.state_bytes
+
+    def migration_time(self, ctx_tokens: int) -> float:
+        """Uncontended lower bound (the seed's fixed-delay model); the
+        contended path lives in serving/transfer.py."""
+        hw = self.worker.hw
         bw = hw.ici_bw * hw.ici_links
-        return hw.migration_latency + kv_bytes / bw
+        return hw.migration_latency + self.kv_transfer_bytes(ctx_tokens) / bw

@@ -12,10 +12,13 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
+import math
+
 from repro.core.policies import BatchRule, Policy
 from repro.core.request import Phase, Request
 from repro.core.toggle import Role, WorkerView
 from repro.serving.costmodel import CostModel
+from repro.serving.kvcache import PageAccountant
 
 
 @dataclasses.dataclass
@@ -35,21 +38,32 @@ class IterationPlan:
 
 class Worker:
     def __init__(self, wid: int, cost: CostModel, role: Role = Role.MULTIPLEX,
-                 queue_discipline: str = "fcfs"):
+                 queue_discipline: str = "fcfs",
+                 kv_preempt_watermark: float = 0.98):
         self.wid = wid
         self.cost = cost
         self.queue_discipline = queue_discipline   # fcfs | edf
+        # page-granular HBM accounting: admission and growth gate on real
+        # allocatable pages; crossing the watermark evicts decodes (which
+        # pay a re-prefill on readmission)
+        self.pages = PageAccountant(cost.kv_capacity_pages(), cost.page_size)
+        self.kv_preempt_watermark = kv_preempt_watermark
         self.view = WorkerView(
             wid=wid, role=role,
             kv_capacity_tokens=float(max(cost.kv_capacity_tokens(), 1)),
+            total_pages=self.pages.total_pages,
+            free_pages=self.pages.total_pages,
+            page_size=self.pages.page_size,
         )
         self.prefill_queue: deque[Request] = deque()
         self.decode_running: list[Request] = []
+        self.preempted: list[Request] = []       # drained by the simulator
         self.busy = False
         # metrics
         self.blocked_time: dict[int, float] = {}
         self.queue_times: dict[int, float] = {}
         self.busy_time = 0.0
+        self.preemption_count = 0
 
     # ------------------------------------------------------------- admission
     def admit_prefill(self, req: Request, now: float) -> None:
@@ -62,6 +76,16 @@ class Worker:
         req.phase = Phase.DECODING
         self.decode_running.append(req)
         self._refresh_view()
+
+    def admit_migrated(self, req: Request, now: float) -> bool:
+        """Admit a request whose KV just arrived over the links. False when
+        the page pool cannot hold the migrated context (caller restarts the
+        request elsewhere — the re-prefill cost of a failed placement)."""
+        if not self.pages.reserve(req.rid, self._page_need(req.context_len)):
+            return False
+        self.view.kv_used_tokens += self.cost.state_tokens(req.context_len)
+        self.admit_decode(req, now)
+        return True
 
     # ------------------------------------------------------------- planning
     def compose_iteration(self, rule: BatchRule, now: float) -> IterationPlan:
@@ -81,7 +105,8 @@ class Worker:
                 take = min(req.remaining_prefill, budget)
                 if take < req.remaining_prefill and prefill_parts:
                     break       # don't split a second prompt mid-iteration
-                self._start_prefill(req, now)
+                if not self._start_prefill(req, now):
+                    break       # page pool can't hold the prompt yet
                 prefill_parts.append((req, take))
                 taken.add(req.rid)
                 budget -= take
@@ -90,9 +115,8 @@ class Worker:
                 decode_reqs = list(self.decode_running)
             if budget > 0 and self._has_admissible_prefill():
                 req = self._peek_admissible_prefill(now)
-                if req is not None:
+                if req is not None and self._start_prefill(req, now):
                     take = min(req.remaining_prefill, budget)
-                    self._start_prefill(req, now)
                     prefill_parts.append((req, take))
 
         sum_ctx = float(sum(r.context_len for r in decode_reqs))
@@ -122,15 +146,31 @@ class Worker:
             if plan.n_decode else 0.0
         interference = max(0.0, duration - pure_decode)
         for r in plan.decode_reqs:
+            if r.phase != Phase.DECODING or r not in self.decode_running:
+                continue        # evicted mid-compose (page preemption)
             r.record_decode_iteration(duration)
             self.view.kv_used_tokens += 1
             if plan.prefill_tokens > 0:
                 self.blocked_time[r.rid] = \
                     self.blocked_time.get(r.rid, 0.0) + interference
-            if r.generated_tokens >= r.output_len:
+            if r.remaining_output == 0:
                 r.phase = Phase.FINISHED
                 r.finish_time = now
                 self.release(r)
+        # page growth for the tokens just written; evict newest decodes
+        # when the pool can't supply it, then enforce the watermark
+        for r in plan.decode_reqs:
+            if r.phase != Phase.DECODING or r not in self.decode_running:
+                continue
+            need = self._page_need(r.context_len)
+            while not self.pages.reserve(r.rid, need):
+                if not self._preempt_one(now, keep=r):
+                    self._preempt(r, now)      # nobody else to evict
+                    break
+        while (self.pages.utilization > self.kv_preempt_watermark
+               and len(self.decode_running) > 1):
+            if not self._preempt_one(now):
+                break
         # decode requests stalled behind an exclusive prefill count as blocked
         if plan.exclusive_prefill:
             for r in self.decode_running:
@@ -143,7 +183,7 @@ class Worker:
             req.prefilled_tokens += tokens
             if req.remaining_prefill == 0:
                 req.record_first_token(now)
-                if req.output_len <= 1:
+                if req.remaining_output == 0:
                     req.phase = Phase.FINISHED
                     req.finish_time = now
                     self.release(req)
@@ -158,14 +198,45 @@ class Worker:
         """Free KV held by a finished/migrated request."""
         self.view.kv_used_tokens = max(
             0.0, self.view.kv_used_tokens - self.cost.state_tokens(req.context_len))
+        self.pages.release(req.rid)
         if req in self.decode_running:
             self.decode_running.remove(req)
         self._refresh_view()
 
+    # ------------------------------------------------------------ preemption
+    def _preempt(self, req: Request, now: float) -> None:
+        """Evict a decode's KV pages; the request re-prefills its whole
+        context (the §IV-B eviction cost) wherever dispatch next places it."""
+        req.preemptions += 1
+        self.preemption_count += 1
+        self.release(req)
+        req.reset_for_reprefill(now)
+        self.preempted.append(req)
+
+    def _preempt_one(self, now: float, keep: Optional[Request] = None) -> bool:
+        """Evict the most recently admitted decode (least sunk prefill work,
+        vLLM-style LIFO recomputation). Returns False when there is no
+        eligible victim."""
+        for victim in reversed(self.decode_running):
+            if victim is not keep:
+                self._preempt(victim, now)
+                return True
+        return False
+
+    def drain_preempted(self) -> list[Request]:
+        out, self.preempted = self.preempted, []
+        return out
+
     # ------------------------------------------------------------- internals
+    def _page_need(self, ctx_tokens: int) -> int:
+        return int(math.ceil(self.cost.state_tokens(ctx_tokens)))
+
     def _kv_room_for(self, req: Request) -> bool:
-        need = self.cost.state_tokens(req.prompt_len)
-        return self.view.kv_used_tokens + need <= self.view.kv_capacity_tokens
+        if not self.pages.can_fit(self._page_need(req.prompt_len),
+                                  rid=req.rid):
+            return False
+        return self.view.kv_used_tokens + self.cost.state_tokens(req.prompt_len) \
+            <= self.view.kv_capacity_tokens
 
     def _has_admissible_prefill(self) -> bool:
         return any(self._kv_room_for(r) or r.prefill_start is not None
@@ -199,13 +270,20 @@ class Worker:
     def _peek_admissible_prefill(self, now: float) -> Optional[Request]:
         return self._next_admissible_prefill(now)
 
-    def _start_prefill(self, req: Request, now: float) -> None:
+    def _start_prefill(self, req: Request, now: float) -> bool:
+        """Reserve prompt KV and mark the prefill started. False (state
+        untouched) when the page pool can't hold the prompt — unreachable
+        behind the ``_kv_room_for`` admission gate, kept as the contract
+        for callers."""
         if req.prefill_start is None:
+            if not self.pages.reserve(req.rid,
+                                      self._page_need(req.prompt_len)):
+                return False
             req.prefill_start = now
             req.phase = Phase.PREFILLING
             self.queue_times[req.rid] = now - req.arrival_time
-            # reserve prompt KV on first chunk
             self.view.kv_used_tokens += self.cost.state_tokens(req.prompt_len)
+        return True
 
     def _refresh_view(self) -> None:
         v = self.view
@@ -221,22 +299,21 @@ class Worker:
         v.min_tpot_slack = min(
             (r.effective_slack(base_iter) for r in self.decode_running),
             default=float("inf"))
+        v.total_pages = self.pages.total_pages
+        v.free_pages = self.pages.free_pages
+        v.page_size = self.pages.page_size
 
     # -------------------------------------------------------------- failure
-    def fail(self) -> list[Request]:
+    def fail(self, now: Optional[float] = None) -> list[Request]:
         """Worker dies: every held request must restart elsewhere."""
         self.view.alive = False
         lost = list(self.prefill_queue) + list(self.decode_running)
         self.prefill_queue.clear()
         self.decode_running.clear()
         self.view.kv_used_tokens = 0.0
+        self.pages.reset()
         for r in lost:
             r.restarts += 1
-            # KV/state lost: the full context must be re-prefilled
-            r.prefilled_tokens = 0
-            r.prompt_len = r.context_len
-            r.prefill_start = None
-            r.phase = Phase.QUEUED_PREFILL
-            r.worker = None
+            r.reset_for_reprefill(now)
         self._refresh_view()
         return lost

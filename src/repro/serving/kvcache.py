@@ -16,6 +16,82 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages covering ``tokens`` (ceil-div) — THE page-rounding rule.
+    Every admission gate and allocator must share it, or the scheduler
+    admits what the pool then rejects."""
+    return -(-max(int(tokens), 0) // max(int(page_size), 1))
+
+
+class PageAccountant:
+    """Counts-only page-granular KV accounting for scheduler admission.
+
+    ``BlockAllocator`` below hands out physical page *ids* for the Pallas
+    kernel's block tables; the scheduler does not need ids, only truthful
+    arithmetic: how many pages a request pins (ceil of its token footprint),
+    how many remain allocatable, and how much of the pool is internal
+    fragmentation (allocated-but-unwritten page tails). The engine keeps one
+    accountant per worker so the toggle's §IV-B admission checks gate on
+    real allocatable pages rather than a token counter that ignores block
+    rounding."""
+
+    def __init__(self, total_pages: int, page_size: int):
+        self.total_pages = int(total_pages)
+        self.page_size = int(page_size)
+        self._pages: dict[int, int] = {}    # rid -> pages held
+        self._tokens: dict[int, int] = {}   # rid -> tokens covered
+
+    # ---------------------------------------------------------------- query
+    @property
+    def used_pages(self) -> int:
+        return sum(self._pages.values())
+
+    @property
+    def free_pages(self) -> int:
+        return self.total_pages - self.used_pages
+
+    @property
+    def utilization(self) -> float:
+        return self.used_pages / max(self.total_pages, 1)
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of *used* pool bytes that are allocated page tails no
+        token occupies (0 when every page is exactly full)."""
+        used_tok = self.used_pages * self.page_size
+        if used_tok == 0:
+            return 0.0
+        return 1.0 - sum(self._tokens.values()) / used_tok
+
+    def pages_for(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def can_fit(self, tokens: int, rid: Optional[int] = None) -> bool:
+        held = self._pages.get(rid, 0) if rid is not None else 0
+        return self.pages_for(tokens) - held <= self.free_pages
+
+    # ------------------------------------------------------------- mutation
+    def reserve(self, rid: int, tokens: int) -> bool:
+        """Grow ``rid``'s allocation to cover ``tokens`` total. False (and
+        no state change) when the pool cannot supply the growth."""
+        tokens = max(int(tokens), 0)
+        need = self.pages_for(tokens) - self._pages.get(rid, 0)
+        if need > self.free_pages:
+            return False
+        self._pages[rid] = self._pages.get(rid, 0) + max(0, need)
+        self._tokens[rid] = max(self._tokens.get(rid, 0), tokens)
+        return True
+
+    def release(self, rid: int) -> int:
+        """Free every page held by ``rid``; returns the page count."""
+        self._tokens.pop(rid, None)
+        return self._pages.pop(rid, 0)
+
+    def reset(self) -> None:
+        self._pages.clear()
+        self._tokens.clear()
+
+
 class BlockAllocator:
     """Free-list page allocator with watermark accounting."""
 

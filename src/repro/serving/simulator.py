@@ -22,6 +22,7 @@ from repro.core.request import Phase, Request
 from repro.core.toggle import Role
 from repro.serving.costmodel import CostModel
 from repro.serving.engine import Worker
+from repro.serving.transfer import LinkSpec, TransferEngine
 
 
 @dataclasses.dataclass(order=True)
@@ -34,11 +35,20 @@ class _Event:
 
 class Simulator:
     def __init__(self, workers: Sequence[Worker], policy: Policy,
-                 duration_fn: Optional[Callable] = None):
-        """duration_fn(worker, plan) -> seconds; default = cost model."""
+                 duration_fn: Optional[Callable] = None,
+                 transfer: Optional[TransferEngine] = None):
+        """duration_fn(worker, plan) -> seconds; default = cost model.
+
+        ``transfer``: bandwidth-contended KV migration engine. None keeps
+        the legacy fixed-delay ``CostModel.migration_time`` path."""
         self.workers = {w.wid: w for w in workers}
         self.policy = policy
         self.duration_fn = duration_fn or (lambda w, p: w.plan_duration(p))
+        self.transfer = transfer
+        if transfer is not None:
+            for w in workers:
+                transfer.add_worker(
+                    w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
         self.now = 0.0
         self._heap: list[_Event] = []
         self._seq = itertools.count()
@@ -123,6 +133,9 @@ class Simulator:
         finished_prefills = w.complete_iteration(plan, self.now, dur)
         for req in finished_prefills:
             self._route_decode(w, req)
+        # watermark evictions re-enter global dispatch (re-prefill cost)
+        for req in w.drain_preempted():
+            self._try_dispatch(req)
         # retry the global queue now that state changed
         for req in list(self.global_queue):
             self._try_dispatch(req)
@@ -134,26 +147,54 @@ class Simulator:
             src.admit_decode(req, self.now)
             self._kick(src.wid)
             return
-        # KV migration: src frees, target admits after transfer delay
+        # KV migration: src frees; target admits when the bytes have crossed
+        # the (possibly contended) ICI links
         req.migrations += 1
         req.phase = Phase.MIGRATING
         src.release(req)
-        delay = src.cost.migration_time(req.context_len)
-        self.push("migration_done", self.now + delay, (target, req))
+        if self.transfer is None:
+            delay = src.cost.migration_time(req.context_len)
+            self.push("migration_done", self.now + delay,
+                      (target, req, self.now))
+            return
+        nbytes = src.cost.kv_transfer_bytes(req.context_len)
+        self.transfer.start(src.wid, target, nbytes, self.now,
+                            payload=(target, req, self.now))
+        self._schedule_transfer_tick()
+
+    # -------------------------------------------------- contended transfers
+    def _schedule_transfer_tick(self) -> None:
+        t = self.transfer.next_completion()
+        if t is not None:
+            self.push("transfer_tick", max(t, self.now),
+                      self.transfer.version)
+
+    def _on_transfer_tick(self, ev: _Event) -> None:
+        if ev.payload != self.transfer.version:
+            return                           # rates changed since scheduling
+        for flow in self.transfer.pop_completed(self.now):
+            latency = self.transfer.delivery_latency(flow.src)
+            self.push("migration_done", self.now + latency, flow.payload)
+        self._schedule_transfer_tick()
 
     def _on_migration_done(self, ev: _Event) -> None:
-        wid, req = ev.payload
+        wid, req, started = ev.payload
+        wait = self.now - started
+        req.migration_wait += wait
+        if req.generated_tokens > 0:
+            # the user is mid-stream: time on the wire is inter-token
+            # latency — it burns TPOT budget exactly like a stalled
+            # iteration (this is the D->P/P->D asymmetry cost the paper's
+            # toggle avoids by keeping decodes in place)
+            req.decode_time += wait
+            req.tpot_slack -= wait
         w = self.workers.get(wid)
-        if w is None or not w.view.alive:
+        if w is None or not w.view.alive or \
+                not w.admit_migrated(req, self.now):
             req.restarts += 1
-            req.prefilled_tokens = 0
-            req.prompt_len = req.context_len
-            req.prefill_start = None
-            req.phase = Phase.QUEUED_PREFILL
+            req.reset_for_reprefill(self.now)
             self._try_dispatch(req)
             return
-        w.view.kv_used_tokens += w.cost.state_tokens(req.context_len)
-        w.admit_decode(req, self.now)
         self._kick(wid)
 
     def _on_fail(self, ev: _Event) -> None:
@@ -161,8 +202,17 @@ class Simulator:
         w = self.workers.get(wid)
         if w is None:
             return
-        lost = w.fail()
+        lost = w.fail(self.now)
         self.policy.on_worker_failure(wid)
+        if self.transfer is not None:
+            # KV in flight to OR from the dead worker is lost: restart
+            for flow in self.transfer.drop_flows_touching(wid, self.now):
+                _, req, started = flow.payload
+                req.migration_wait += self.now - started
+                req.restarts += 1
+                req.reset_for_reprefill(self.now)
+                lost.append(req)
+            self._schedule_transfer_tick()
         for r in lost:
             if r.phase != Phase.FINISHED:
                 self._try_dispatch(r)
@@ -183,6 +233,9 @@ class Simulator:
         w: Worker = ev.payload
         self.workers[w.wid] = w
         self._worker_busy[w.wid] = False
+        if self.transfer is not None:
+            self.transfer.add_worker(
+                w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
         self.policy.workers[w.wid] = w.view
         if hasattr(self.policy, "toggle"):
             self.policy.toggle.workers[w.wid] = w.view
@@ -191,19 +244,37 @@ class Simulator:
 
 
 def build_cluster(cfg, policy_name: str, n_workers: int = 4,
-                  worker_spec=None, predictor=None, **policy_kw):
-    """Convenience: workers + cost models + policy, wired together."""
+                  worker_spec=None, predictor=None,
+                  use_transfer_engine: bool = True,
+                  ici_bw: Optional[float] = None,
+                  ici_links: Optional[int] = None,
+                  page_size: int = 16, **policy_kw):
+    """Convenience: workers + cost models + policy, wired together.
+
+    ``ici_bw``/``ici_links`` override the per-worker migration link model
+    (bytes/s per link, link count); ``use_transfer_engine=False`` reverts
+    to the seed's fixed uncontended ``migration_time`` delay."""
     from repro.core.predictor import AnalyticalPredictor
     from repro.core.policies import make_policy
     from repro.serving.costmodel import WorkerSpec
 
     worker_spec = worker_spec or WorkerSpec()
-    cost = CostModel(cfg, worker_spec)
+    if ici_bw is not None or ici_links is not None:
+        hw = dataclasses.replace(
+            worker_spec.hw,
+            ici_bw=ici_bw if ici_bw is not None else worker_spec.hw.ici_bw,
+            ici_links=(ici_links if ici_links is not None
+                       else worker_spec.hw.ici_links))
+        worker_spec = dataclasses.replace(worker_spec, hw=hw)
+    cost = CostModel(cfg, worker_spec, page_size=page_size)
     workers = [Worker(i, cost) for i in range(n_workers)]
     predictor = predictor or AnalyticalPredictor(cost)
     policy = make_policy(policy_name, [w.view for w in workers], predictor,
                          **policy_kw)
+    transfer = TransferEngine() if use_transfer_engine else None
+    policy.attach_transfer(transfer, cost.kv_transfer_bytes,
+                           cost.state_tokens)
     for w in workers:
         w.queue_discipline = policy.queue_discipline
-    sim = Simulator(workers, policy)
+    sim = Simulator(workers, policy, transfer=transfer)
     return sim, cost

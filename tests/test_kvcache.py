@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.paged_attention import paged_attention
-from repro.serving.kvcache import BlockAllocator, PagedKVStore
+from repro.serving.kvcache import BlockAllocator, PageAccountant, PagedKVStore
 
 
 def test_allocator_watermark_and_release():
@@ -68,3 +68,56 @@ def test_pool_exhaustion_raises():
     k = jnp.zeros((1, 17, 1, 8), jnp.float32)
     with pytest.raises(MemoryError):
         store.write_tokens(0, 0, k, k)
+
+
+# ----------------------------------------------- scheduler page accounting
+
+def test_page_accountant_never_overallocates():
+    a = PageAccountant(total_pages=10, page_size=16)
+    assert a.reserve(1, 100)            # 7 pages
+    assert a.used_pages == 7 and a.free_pages == 3
+    assert not a.reserve(2, 100)        # needs 7, only 3 left
+    assert a.used_pages == 7            # failed reserve left no residue
+    assert a.reserve(2, 48)             # exactly the last 3 pages
+    assert a.free_pages == 0
+    assert not a.reserve(3, 1)
+
+
+def test_page_accountant_growth_is_incremental():
+    a = PageAccountant(total_pages=10, page_size=16)
+    a.reserve(1, 10)
+    assert a.used_pages == 1
+    a.reserve(1, 16)                    # same page covers it
+    assert a.used_pages == 1
+    a.reserve(1, 17)
+    assert a.used_pages == 2
+    a.reserve(1, 5)                     # shrinking request: no-op
+    assert a.used_pages == 2
+
+
+def test_page_accountant_release_restores_free_pages():
+    a = PageAccountant(total_pages=10, page_size=16)
+    a.reserve(1, 100)                   # 7 pages
+    a.reserve(2, 20)                    # 2 pages
+    assert a.free_pages == 10 - 7 - 2
+    assert a.release(1) == 7
+    assert a.free_pages == 8
+    a.release(2)
+    assert a.free_pages == 10 and a.used_pages == 0
+    assert a.fragmentation == 0.0
+
+
+def test_page_accountant_fragmentation():
+    a = PageAccountant(total_pages=8, page_size=16)
+    a.reserve(1, 17)                    # 2 pages, 15 tail tokens unwritten
+    assert a.fragmentation == pytest.approx(15 / 32)
+    a.reserve(1, 32)                    # tail fills in
+    assert a.fragmentation == 0.0
+
+
+def test_page_accountant_can_fit_counts_held_pages():
+    a = PageAccountant(total_pages=4, page_size=16)
+    a.reserve(1, 48)                    # 3 pages
+    assert a.can_fit(64, rid=1)         # growth of 1 page fits
+    assert not a.can_fit(64)            # a fresh request would need 4
+    assert a.can_fit(16)

@@ -2,7 +2,7 @@
 dense definitions and with each other at the seams the engine relies on."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.layers import MaskSpec
 

@@ -1,6 +1,8 @@
 """EP shard_map path vs dense reference oracle — runs in a subprocess with
 8 forced host devices (the main pytest process must keep 1 device)."""
 import json
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -11,12 +13,13 @@ SCRIPT = textwrap.dedent("""
     import json
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.compat import AxisType, make_mesh, set_mesh
     from repro.models.layers import ModelConfig
     from repro.models import moe as M
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.set_mesh(mesh)
+    mesh = make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    set_mesh(mesh)
     cfg = ModelConfig(name="moe-test", family="moe", num_layers=1,
                       d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
                       d_ff=96, vocab_size=128, num_experts=6, top_k=2,
@@ -50,9 +53,13 @@ SCRIPT = textwrap.dedent("""
 
 
 def test_ep_matches_reference():
+    # the subprocess doesn't see pytest's pyproject pythonpath insertion
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     res = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=420,
+        timeout=420, env=env,
     )
     assert res.returncode == 0, res.stderr[-2000:]
     data = json.loads(res.stdout.strip().splitlines()[-1])

@@ -4,7 +4,7 @@ import copy
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.metrics import derive_slos
@@ -33,7 +33,7 @@ def test_all_requests_finish(policy):
     # every finished request generated exactly its output_len
     for r in sim.requests:
         assert r.phase == Phase.FINISHED
-        assert r.generated_tokens == r.output_len
+        assert r.streamed_tokens == r.output_len
         assert r.prefilled_tokens == r.prompt_len
 
 
@@ -80,7 +80,7 @@ def test_worker_failure_requests_recover():
     assert m.n_finished == m.n_total
     assert m.restarts > 0          # someone was on worker 3
     for r in sim.requests:
-        assert r.generated_tokens == r.output_len
+        assert r.streamed_tokens == r.output_len
 
 
 def test_elastic_add_worker_improves_queueing():
@@ -97,6 +97,28 @@ def test_elastic_add_worker_improves_queueing():
         results[scale] = m
         assert m.n_finished == m.n_total
     assert results[True].queue_p90 <= results[False].queue_p90
+
+
+def test_page_pressure_preempts_and_recovers():
+    """Shrunken page pools force watermark evictions; every evicted decode
+    re-prefills and still finishes, and the pools drain back to empty."""
+    from repro.serving.kvcache import PageAccountant
+    sim, cost = build_cluster(CFG, "tropical", n_workers=2, worker_spec=SPEC)
+    trace = _trace(rate=2.0, duration=60.0, seed=2)
+    for r in trace:
+        r.prompt_len = min(max(r.prompt_len, 1024), 2048)
+        r.output_len = min(max(r.output_len, 128), 512)
+    for w in sim.workers.values():
+        w.pages = PageAccountant(total_pages=500, page_size=16)  # 8k tokens
+        w.kv_preempt_watermark = 0.9
+        w._refresh_view()
+    sim.add_trace(trace)
+    m = sim.run(until=200000.0)
+    assert m.n_finished == m.n_total
+    assert m.preemptions > 0
+    for w in sim.workers.values():
+        assert w.pages.used_pages == 0
+        assert w.view.free_pages == w.view.total_pages
 
 
 def test_migration_cost_charged():

@@ -1,0 +1,167 @@
+"""KV transfer engine: link-contention arithmetic, max-min fairness,
+prediction, and simulator-level bandwidth monotonicity."""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.serving.costmodel import CostModel, WorkerSpec
+from repro.serving.simulator import build_cluster
+from repro.serving.trace import generate_trace
+from repro.serving.transfer import LinkSpec, TransferEngine
+
+
+GB = 1e9
+
+
+def _engine(n=4, bw=10 * GB, latency=0.0):
+    spec = LinkSpec(egress_bw=bw, ingress_bw=bw, latency=latency)
+    return TransferEngine({i: spec for i in range(n)})
+
+
+# ------------------------------------------------------------- contention
+
+def test_single_flow_runs_at_line_rate():
+    e = _engine()
+    e.start(src=0, dst=1, nbytes=10 * GB, now=0.0)
+    assert e.next_completion() == pytest.approx(1.0)
+
+
+def test_two_concurrent_migrations_take_twice_as_long():
+    """Two flows out of one worker split its egress: each takes ~2x the
+    solo transfer time."""
+    e = _engine()
+    e.start(0, 1, 10 * GB, now=0.0)
+    e.start(0, 2, 10 * GB, now=0.0)          # same source, distinct dsts
+    assert e.next_completion() == pytest.approx(2.0)
+    done = e.pop_completed(2.0)
+    assert len(done) == 2
+
+
+def test_disjoint_flows_do_not_contend():
+    e = _engine()
+    e.start(0, 1, 10 * GB, now=0.0)
+    e.start(2, 3, 10 * GB, now=0.0)
+    assert e.next_completion() == pytest.approx(1.0)
+
+
+def test_ingress_contention_shares_destination():
+    """Two sources into one destination split its ingress capacity."""
+    e = _engine()
+    e.start(0, 2, 10 * GB, now=0.0)
+    e.start(1, 2, 10 * GB, now=0.0)
+    assert e.next_completion() == pytest.approx(2.0)
+
+
+def test_maxmin_releases_bandwidth_of_bottlenecked_sibling():
+    """Flow A (0->2) shares dst-2 ingress with B (1->2); B is alone on its
+    source. A's sibling C (0->3) must pick up the egress A cannot use:
+    max-min gives A and B 5 GB/s on the shared ingress, and C the
+    remaining 5 GB/s of worker 0's egress... then A finishing frees C up
+    to line rate. Waterfilling, not naive equal split."""
+    e = _engine()
+    a = e.start(0, 2, 5 * GB, now=0.0)
+    b = e.start(1, 2, 5 * GB, now=0.0)
+    c = e.start(0, 3, 10 * GB, now=0.0)
+    # ingress of 2 is the bottleneck for a,b: 5 GB/s each; c gets the
+    # remaining 5 GB/s of 0's egress
+    assert a.rate == pytest.approx(5 * GB)
+    assert b.rate == pytest.approx(5 * GB)
+    assert c.rate == pytest.approx(5 * GB)
+    done = e.pop_completed(1.0)              # a and b drain together
+    assert {f.fid for f in done} == {a.fid, b.fid}
+    assert c.rate == pytest.approx(10 * GB)  # c inherits the freed egress
+    assert e.next_completion() == pytest.approx(1.5)
+
+
+def test_late_joiner_reshapes_rates():
+    e = _engine()
+    a = e.start(0, 1, 10 * GB, now=0.0)
+    e.advance(0.5)                           # a drained 5 GB so far
+    b = e.start(0, 2, 10 * GB, now=0.5)
+    assert a.rate == b.rate == pytest.approx(5 * GB)
+    # a has 5 GB left at 5 GB/s -> finishes at 1.5
+    assert e.next_completion() == pytest.approx(1.5)
+
+
+def test_infinite_bandwidth_completes_immediately():
+    e = TransferEngine({0: LinkSpec(float("inf"), float("inf")),
+                        1: LinkSpec(float("inf"), float("inf"))})
+    e.start(0, 1, 100 * GB, now=3.0)
+    assert e.next_completion() == pytest.approx(3.0)
+    assert len(e.pop_completed(3.0)) == 1
+
+
+def test_predict_transfer_time_monotone_in_queue_depth():
+    e = _engine(latency=0.001)
+    t0 = e.predict_transfer_time(0, 1, GB)
+    e.start(0, 2, 10 * GB, now=0.0)          # backlog on 0's egress
+    t1 = e.predict_transfer_time(0, 1, GB)
+    e.start(0, 3, 10 * GB, now=0.0)
+    t2 = e.predict_transfer_time(0, 1, GB)
+    assert t0 < t1 < t2
+
+
+def test_drop_flows_touching_dead_worker():
+    e = _engine()
+    e.start(0, 1, 10 * GB, now=0.0)
+    e.start(0, 2, 10 * GB, now=0.0)
+    dead = e.drop_flows_touching(1, now=0.5)
+    assert len(dead) == 1
+    # survivor drained 2.5 GB at its pre-failure 5 GB/s share, then
+    # reclaims the full 10 GB/s egress: 7.5 GB left -> done at 1.25
+    assert e.next_completion() == pytest.approx(1.25)
+    # flows OUT of a dead worker are lost too (its HBM held the KV)
+    e2 = _engine()
+    e2.start(0, 1, 10 * GB, now=0.0)
+    assert len(e2.drop_flows_touching(0, now=0.0)) == 1
+    assert e2.active_flows == 0
+
+
+# ------------------------------------------------- simulator-level checks
+
+CFG = get_config("internlm-20b")
+SPEC = WorkerSpec(tp=8)
+
+
+def _run(policy, bw_per_link, rate=1.5, duration=40.0, seed=3):
+    sim, cost = build_cluster(CFG, policy, n_workers=4, worker_spec=SPEC,
+                              ici_bw=bw_per_link)
+    trace = generate_trace(rate, duration, cost, seed=seed)
+    sim.add_trace(copy.deepcopy(trace))
+    return sim.run(until=100000.0)
+
+
+def test_migration_burst_wait_monotone_with_bandwidth():
+    """distserve migrates every request; shrinking the per-link bandwidth
+    must monotonically raise the time migrated KV sits on the wire and
+    the inter-token latency right after migration (TPOT component)."""
+    waits, tpots = [], []
+    for bw in (0.25 * GB, 2 * GB, 50 * GB):
+        m = _run("distserve", bw)
+        assert m.n_finished == m.n_total
+        waits.append(m.migration_wait_avg)
+        tpots.append(m.tpot_avg)
+    assert waits[0] > waits[1] > waits[2]
+    assert tpots[0] > tpots[1] >= tpots[2]
+
+
+def test_infinite_bandwidth_matches_legacy_fixed_model():
+    """Regression guard on the cost model: with effectively infinite link
+    bandwidth the contended engine must reproduce the seed's fixed-delay
+    migration metrics for every policy."""
+    for policy in ("distserve", "tropical"):
+        rows = {}
+        for engine_on in (True, False):
+            sim, cost = build_cluster(CFG, policy, n_workers=4,
+                                      worker_spec=SPEC, ici_bw=1e21,
+                                      use_transfer_engine=engine_on)
+            trace = generate_trace(1.0, 30.0, cost, seed=0)
+            sim.add_trace(copy.deepcopy(trace))
+            rows[engine_on] = sim.run(until=50000.0)
+        a, b = rows[True], rows[False]
+        assert a.n_finished == b.n_finished == a.n_total
+        assert a.migrations == b.migrations
+        assert a.ttft_avg == pytest.approx(b.ttft_avg, rel=1e-6)
+        assert a.tpot_avg == pytest.approx(b.tpot_avg, rel=1e-6)
+        assert a.slo_attainment == pytest.approx(b.slo_attainment)
