@@ -33,7 +33,8 @@ def main() -> None:
             bandwidths=(0.05e9, 1e9, 50e9), rate=2.0, duration=60.0))
         if args.quick else fig_migration.main,
         "scale": scale.main,
-        "predictor_noise": predictor_noise.main,
+        "predictor_noise": (lambda: predictor_noise.main(quick=True))
+        if args.quick else predictor_noise.main,
         "roofline": roofline.main,
     }
     for name, fn in benches.items():

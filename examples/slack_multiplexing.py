@@ -3,17 +3,19 @@ a multiplexing worker without breaking the decode SLO.
 
     PYTHONPATH=src python examples/slack_multiplexing.py
 """
+from typing import Optional, Sequence
+
 from repro.configs import get_config
 from repro.core.predictor import AnalyticalPredictor
 from repro.core.request import Request, SLOSpec
-from repro.core.toggle import MultiplexingToggle, Role, ToggleConfig, WorkerView
+from repro.core.toggle import Role
 from repro.serving.costmodel import CostModel, WorkerSpec
 from repro.serving.engine import Worker
 from repro.core.policies import TropicalPolicy
 from repro.serving.simulator import Simulator
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     cfg = get_config("internlm-20b")
     cost = CostModel(cfg, WorkerSpec(tp=8))
     slo = SLOSpec(ttft=5.0, tpot=0.05)

@@ -1,9 +1,10 @@
 """Scheduling policies: Tropical + the paper's three baselines.
 
 A policy owns (a) worker role assignment, (b) global dispatch, and (c) the
-per-iteration batch-composition rule its workers follow. The engine asks the
-policy what to run each iteration; executors (sim or real JAX) are
-orthogonal.
+per-iteration batch-composition rule its workers follow. The unified
+``repro.sched.ClusterScheduler`` consults the policy at every dispatch and
+iteration boundary; execution backends (sim cost model or real JAX) are
+orthogonal — see ``repro.sched.backend.ExecutionBackend``.
 
   vllm       — non-disaggregated, prefill-prioritised full-prompt iterations
                (decode stalls behind prefill: the interference regime).
@@ -35,6 +36,9 @@ class BatchRule:
 class Policy:
     name = "base"
     queue_discipline = "fcfs"     # what the real systems do; see engine
+    toggle = None                 # policies owning a MultiplexingToggle set
+                                  # this; the ClusterScheduler keys role
+                                  # rebalancing and worker registration on it
 
     def __init__(self, workers: Sequence[WorkerView], predictor: Predictor):
         self.workers = {w.wid: w for w in workers}

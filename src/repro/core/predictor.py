@@ -10,6 +10,12 @@ worker". Two implementations share the interface:
 * ``ProfiledPredictor`` — piecewise-linear interpolation over an offline
   profile table {(tokens, ctx) -> seconds}, the way a real deployment
   profiles its worker; built by ``profile_worker`` from any executor.
+
+``OnlinePredictor`` wraps either of them and closes the §IV-C loop: the
+scheduler feeds every observed iteration duration back in, and per-phase
+EWMA correction factors pull a biased/stale offline profile toward what
+the executor actually delivers (wall-clock on the real backend, injected
+noise in robustness sims) while preserving the base safety margin.
 """
 from __future__ import annotations
 
@@ -44,6 +50,22 @@ class AnalyticalPredictor(Predictor):
 
     def predict_migration(self, ctx_tokens: int) -> float:
         return self.cost.migration_time(ctx_tokens) * self.safety
+
+
+class BiasedPredictor(AnalyticalPredictor):
+    """Systematically ``bias``×-miscalibrated analytical predictor — a
+    stale or wrong-hardware offline profile. Robustness benchmarks and the
+    OnlinePredictor convergence tests inject known error through this."""
+
+    def __init__(self, cost: CostModel, bias: float, safety: float = 1.1):
+        super().__init__(cost, safety=safety)
+        self.bias = bias
+
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
+        return super().predict_prefill(tokens, ctx_offset) * self.bias
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
+        return super().predict_decode_iter(n_decode, sum_ctx) * self.bias
 
 
 class ProfiledPredictor(Predictor):
@@ -85,6 +107,92 @@ class ProfiledPredictor(Predictor):
 
     def predict_migration(self, ctx_tokens: int) -> float:
         return self.migration_coeff * ctx_tokens * self.safety
+
+
+class OnlinePredictor(Predictor):
+    """Online feedback wrapper: per-phase multiplicative EWMA correction.
+
+    Let ``raw`` be the base predictor's estimate (which already includes
+    its conservative ``safety`` margin). After each observed iteration the
+    matching phase's scale moves toward ``observed * margin / raw`` — so an
+    unbiased base converges to scale 1.0 (the safety margin is *kept*, not
+    regressed away), and a k×-biased base converges to scale 1/k, restoring
+    calibrated-but-conservative predictions. Mixed decode+prefill
+    iterations split the observed time proportionally to the current
+    corrected per-phase estimates.
+    """
+
+    def __init__(self, base: Predictor, alpha: float = 0.2,
+                 clip: tuple[float, float] = (0.125, 8.0)):
+        self.base = base
+        self.alpha = alpha
+        self.clip = clip
+        # preserve the base's deliberate conservatism as the convergence
+        # target; a margin-free base converges to exact calibration
+        self.margin = float(getattr(base, "safety", 1.0))
+        self.prefill_scale = 1.0
+        self.decode_scale = 1.0
+        self.prefill_observations = 0
+        self.decode_observations = 0
+
+    # ----------------------------------------------------------- predictions
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
+        return self.base.predict_prefill(tokens, ctx_offset) \
+            * self.prefill_scale
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
+        return self.base.predict_decode_iter(n_decode, sum_ctx) \
+            * self.decode_scale
+
+    def predict_migration(self, ctx_tokens: int) -> float:
+        return self.base.predict_migration(ctx_tokens)
+
+    # ------------------------------------------------------------- feedback
+    def _ewma(self, scale: float, ratio: float) -> float:
+        lo, hi = self.clip
+        ratio = min(max(ratio, lo), hi)
+        return (1.0 - self.alpha) * scale + self.alpha * ratio
+
+    def observe_prefill(self, tokens: int, ctx_offset: int,
+                        observed: float) -> None:
+        if tokens <= 0:
+            return
+        raw = self.base.predict_prefill(tokens, ctx_offset)
+        if raw > 0.0 and observed > 0.0:
+            self.prefill_scale = self._ewma(
+                self.prefill_scale, observed * self.margin / raw)
+            self.prefill_observations += 1
+
+    def observe_decode(self, n_decode: int, sum_ctx: float,
+                       observed: float) -> None:
+        if n_decode <= 0:
+            return
+        raw = self.base.predict_decode_iter(n_decode, sum_ctx)
+        if raw > 0.0 and observed > 0.0:
+            self.decode_scale = self._ewma(
+                self.decode_scale, observed * self.margin / raw)
+            self.decode_observations += 1
+
+    def observe_iteration(self, n_decode: int, sum_ctx: float,
+                          prefill_tokens: int, ctx_offset: float,
+                          observed: float) -> None:
+        """ClusterScheduler hook: one finished iteration's composition and
+        its observed duration (simulated or wall-clock)."""
+        has_p = prefill_tokens > 0
+        has_d = n_decode > 0
+        if has_p and has_d:
+            cp = self.predict_prefill(prefill_tokens, int(ctx_offset))
+            cd = self.predict_decode_iter(n_decode, sum_ctx)
+            if cp + cd <= 0.0:
+                return
+            share = cp / (cp + cd)
+            self.observe_prefill(prefill_tokens, int(ctx_offset),
+                                 observed * share)
+            self.observe_decode(n_decode, sum_ctx, observed * (1.0 - share))
+        elif has_p:
+            self.observe_prefill(prefill_tokens, int(ctx_offset), observed)
+        elif has_d:
+            self.observe_decode(n_decode, sum_ctx, observed)
 
 
 def profile_worker(step_fn: Callable[[int, float, int], float],

@@ -12,6 +12,10 @@ Responsibilities (Fig. 6):
     Transitions only change *admission* — running decodes drain in place,
     so there is no migration/recompute overhead (the paper's asymmetry
     argument: D->P switching is the expensive direction and is avoided).
+    Under the unified ClusterScheduler the event-driven, windowed
+    ``repro.sched.rebalance.RoleRebalancer`` owns this lifecycle and the
+    dispatch-count ``review_roles`` here is disabled
+    (``ToggleConfig.role_transitions=False``).
 
 The toggle is executor-agnostic: it sees ``WorkerView`` state snapshots and
 returns dispatch decisions; the engine (serving/engine.py) owns execution.
@@ -91,7 +95,11 @@ class ToggleConfig:
     slack_chunking: bool = False        # beyond-paper: size chunk by slack
     min_chunk: int = 256
     queue_violation_window: int = 16    # dispatches between role reviews
-    role_transitions: bool = True
+    role_transitions: bool = True       # dispatch-count review_roles. The
+                                        # ClusterScheduler turns this off
+                                        # when its event-driven windowed
+                                        # RoleRebalancer owns role lifecycle
+                                        # (repro.sched.rebalance)
 
 
 class MultiplexingToggle:

@@ -4,9 +4,16 @@ Two modes:
   * ``--mode sim`` (default): cluster-scale discrete-event run with the
     analytical v5e executor — the configuration used for the paper-figure
     benchmarks; scales to hundreds of workers.
-  * ``--mode real``: drives the same policies against REAL JAX model
-    execution on this host (reduced config), proving the scheduler is
-    executor-agnostic end to end.
+  * ``--mode real``: drives the same ``ClusterScheduler`` against REAL JAX
+    model execution on this host (reduced config) through the
+    ``RealJaxBackend``, proving the scheduler is executor-agnostic end to
+    end.
+
+``--json`` prints one stable, versioned metrics object on stdout
+(``schema_version`` bumps on breaking changes; keys are sorted) so scripts
+can parse runs without scraping the human-readable table. ``--seed``
+drives trace synthesis AND real-executor weight init, making whole runs
+reproducible.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm-20b \
@@ -17,13 +24,13 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
+from typing import Optional, Sequence
 
-import jax
+METRICS_SCHEMA_VERSION = 1
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm-20b")
     ap.add_argument("--policy", default="tropical",
@@ -34,7 +41,8 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=120.0)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--tp", type=int, default=8)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="trace synthesis + real-executor init seed")
     ap.add_argument("--fail-worker", type=int, default=None,
                     help="inject a worker failure at duration/2")
     ap.add_argument("--ici-bw", type=float, default=None, metavar="GBPS",
@@ -46,8 +54,19 @@ def main() -> None:
                     help="KV block granularity in tokens")
     ap.add_argument("--no-transfer-engine", action="store_true",
                     help="legacy fixed-delay migrations (no link contention)")
+    ap.add_argument("--online-predictor", action="store_true",
+                    help="EWMA-correct the §IV-C predictor from observed "
+                         "iteration durations (wall-clock in --mode real)")
+    ap.add_argument("--no-rebalance", action="store_true",
+                    help="keep the legacy dispatch-count role review "
+                         "instead of windowed-attainment rebalancing")
     ap.add_argument("--json", action="store_true")
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    ap = build_parser()
+    args = ap.parse_args(argv)
     if args.ici_bw is not None and args.ici_bw <= 0:
         ap.error("--ici-bw must be > 0 (migrated KV can never arrive "
                  "over a zero-bandwidth link)")
@@ -58,7 +77,7 @@ def main() -> None:
         ap.error("--page-size must be a positive token count")
 
     from repro.configs import get_config, get_smoke
-    from repro.serving.costmodel import CostModel, WorkerSpec
+    from repro.serving.costmodel import WorkerSpec
     from repro.serving.simulator import build_cluster
     from repro.serving.trace import generate_trace
 
@@ -73,16 +92,20 @@ def main() -> None:
         cfg, args.policy, n_workers=args.workers, worker_spec=spec,
         use_transfer_engine=not args.no_transfer_engine,
         ici_bw=args.ici_bw * 1e9 if args.ici_bw is not None else None,
-        ici_links=args.ici_links, page_size=args.page_size)
+        ici_links=args.ici_links, page_size=args.page_size,
+        online_predictor=args.online_predictor,
+        role_rebalance=False if args.no_rebalance else "auto")
     trace = generate_trace(args.rate, args.duration, cost, seed=args.seed)
     if args.mode == "real":
+        import jax
         from repro.serving.executor import ClusterRealExecutors
         for r in trace:   # shrink to smoke scale
             r.prompt_len = min(r.prompt_len, 48)
             r.output_len = min(r.output_len, 16)
         execs = ClusterRealExecutors(cfg, args.workers, max_slots=8,
-                                     max_len=128)
-        sim.duration_fn = execs.duration_fn()
+                                     max_len=128,
+                                     rng=jax.random.PRNGKey(args.seed))
+        sim.sched.backend = execs.as_backend(clock="wall")
     sim.add_trace(trace)
     if args.fail_worker is not None:
         sim.inject_failure(args.duration / 2, args.fail_worker,
@@ -91,15 +114,23 @@ def main() -> None:
 
     row = m.row()
     row.update(policy=args.policy, arch=cfg.name, mode=args.mode,
-               rate=args.rate, workers=args.workers)
+               rate=args.rate, workers=args.workers, seed=args.seed,
+               schema_version=METRICS_SCHEMA_VERSION)
     if sim.transfer is not None:
         row.update(kv_bytes_migrated=sim.transfer.bytes_moved,
                    transfer_seconds=sim.transfer.total_transfer_seconds)
+    pred = sim.policy.predictor
+    if hasattr(pred, "prefill_scale"):
+        row.update(predictor_prefill_scale=round(pred.prefill_scale, 4),
+                   predictor_decode_scale=round(pred.decode_scale, 4))
+    if sim.sched.rebalancer is not None:
+        row.update(role_transitions=len(sim.sched.rebalancer.transitions))
     if args.json:
-        print(json.dumps(row, indent=1, default=float))
+        print(json.dumps(row, indent=1, sort_keys=True, default=float))
     else:
         for k, v in row.items():
             print(f"{k:>22}: {v}")
+    return row
 
 
 if __name__ == "__main__":

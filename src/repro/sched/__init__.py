@@ -1,0 +1,21 @@
+"""Unified scheduling core.
+
+One SLO-aware ``ClusterScheduler`` owns dispatch, the global queue,
+iteration planning, decode routing and role lifecycle; clock/compute
+sources (the discrete-event ``Simulator``, the real-JAX executor) drive it
+through the narrow ``ExecutionBackend`` protocol, so every execution
+substrate exercises the *same* scheduling code path.
+"""
+from repro.sched.backend import (CallableBackend, CostModelBackend,
+                                 ExecutionBackend)
+from repro.sched.core import ClusterScheduler
+from repro.sched.rebalance import RebalanceConfig, RoleRebalancer
+
+__all__ = [
+    "CallableBackend",
+    "ClusterScheduler",
+    "CostModelBackend",
+    "ExecutionBackend",
+    "RebalanceConfig",
+    "RoleRebalancer",
+]

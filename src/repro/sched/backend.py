@@ -1,0 +1,79 @@
+"""ExecutionBackend — the narrow seam between scheduling and execution.
+
+The ``ClusterScheduler`` never runs compute and never reads a wall clock;
+it asks its backend to execute one composed iteration and report how long
+it took (simulated or measured), and notifies it of the few lifecycle
+events an execution substrate must mirror (request teardown, KV
+migration). Everything else — dispatch, queueing, routing, role changes —
+is backend-agnostic scheduler code.
+
+Implementations:
+
+* ``CostModelBackend`` — the analytical roofline clock (discrete-event
+  simulation; default).
+* ``CallableBackend`` — adapts a bare ``duration_fn(worker, plan)`` (the
+  legacy ``Simulator.duration_fn`` hook, noise-injection experiments).
+* ``RealJaxBackend`` (serving/executor.py) — actually runs the JAX model
+  and measures wall-clock, or runs it under the cost-model clock for
+  decision-parity tests against the simulator.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol, runtime_checkable
+
+from repro.core.request import Request
+from repro.serving.engine import IterationPlan, Worker
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
+        """Execute (or simulate) one iteration; return its duration in
+        seconds of the driving clock."""
+        ...
+
+    def on_finish(self, req: Request) -> None:
+        """Request left the cluster (finished, or restarting from scratch
+        after KV loss): release any per-request execution state."""
+        ...
+
+    def on_migrate(self, req: Request, src_wid: int, dst_wid: int) -> None:
+        """The request's KV just crossed the links: materialise it on the
+        destination so decode can continue there."""
+        ...
+
+
+class CostModelBackend:
+    """Pure simulation: durations from the worker's analytical cost model."""
+
+    def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
+        return worker.plan_duration(plan)
+
+    def on_finish(self, req: Request) -> None:
+        pass
+
+    def on_migrate(self, req: Request, src_wid: int, dst_wid: int) -> None:
+        pass
+
+
+class CallableBackend:
+    """Wrap a bare ``duration_fn(worker, plan) -> seconds``."""
+
+    def __init__(self, duration_fn: Callable[[Worker, IterationPlan], float],
+                 base: ExecutionBackend | None = None):
+        self.duration_fn = duration_fn
+        # lifecycle hooks forward to the backend being wrapped (if any), so
+        # ``sim.duration_fn = noisy_fn`` layered over a real backend keeps
+        # slot teardown/migration working
+        self.base = base
+
+    def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
+        return self.duration_fn(worker, plan)
+
+    def on_finish(self, req: Request) -> None:
+        if self.base is not None:
+            self.base.on_finish(req)
+
+    def on_migrate(self, req: Request, src_wid: int, dst_wid: int) -> None:
+        if self.base is not None:
+            self.base.on_migrate(req, src_wid, dst_wid)

@@ -1,0 +1,299 @@
+"""ClusterScheduler — the one scheduling code path behind every executor.
+
+Owns dispatch, the global overflow queue, per-worker iteration planning,
+decode routing/KV migration, failure/recovery/elastic-add lifecycle, the
+§IV-C predictor feedback loop and event-driven role rebalancing. It is
+clock-free: a *driver* (the discrete-event ``Simulator``, or any real-time
+loop) owns time, feeds events in via ``handle(kind, now, payload)`` and
+lends the scheduler a ``defer(kind, time, payload)`` callback for the
+events the scheduler itself originates (iteration completions, migration
+arrivals, transfer ticks, rebalance reviews). Compute lives behind the
+``ExecutionBackend`` protocol.
+
+Event kinds (payloads):
+  arrival         Request
+  iter_done       (wid, IterationPlan, duration)
+  migration_done  (dst_wid, Request, started_at, src_wid)
+  transfer_tick   transfer-engine version stamp
+  fail            (wid, recover_after | None)
+  recover         wid
+  add_worker      Worker
+  rebalance       None
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from repro.core.metrics import ServeMetrics, compute_metrics
+from repro.core.policies import Policy
+from repro.core.request import Phase, Request
+from repro.sched.backend import CostModelBackend, ExecutionBackend
+from repro.sched.rebalance import RoleRebalancer
+from repro.serving.engine import IterationPlan, Worker
+from repro.serving.transfer import LinkSpec
+
+
+class ClusterScheduler:
+    def __init__(self, workers: Sequence[Worker], policy: Policy,
+                 backend: Optional[ExecutionBackend] = None,
+                 transfer=None,
+                 rebalancer: Optional[RoleRebalancer] = None,
+                 record_decisions: bool = False):
+        self.workers: dict[int, Worker] = {w.wid: w for w in workers}
+        self.policy = policy
+        self.backend = backend or CostModelBackend()
+        self.transfer = transfer
+        if transfer is not None:
+            for w in workers:
+                transfer.add_worker(
+                    w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
+        self.rebalancer = rebalancer
+        self.global_queue: list[Request] = []
+        self.requests: list[Request] = []
+        self._busy: dict[int, bool] = {w.wid: False for w in workers}
+        # decision log: dispatch targets, batch compositions, decode routes.
+        # The backend-parity test replays one trace through two backends and
+        # asserts these are identical — the guarantee that simulator and
+        # real executor share one scheduling brain.
+        self.decisions: Optional[list[tuple]] = [] if record_decisions else None
+        self._defer: Optional[Callable[[str, float, object], None]] = None
+        self._rebalance_armed = False
+
+    # ------------------------------------------------------------- driver api
+    def bind(self, defer: Callable[[str, float, object], None]) -> None:
+        """Give the scheduler its driver's event sink."""
+        self._defer = defer
+
+    def handle(self, kind: str, now: float, payload=None) -> None:
+        getattr(self, f"_on_{kind}")(now, payload)
+
+    def metrics(self) -> ServeMetrics:
+        qt, bt = {}, {}
+        for w in self.workers.values():
+            qt.update(w.queue_times)
+            bt.update(w.blocked_time)
+        return compute_metrics(self.requests, qt, bt)
+
+    # --------------------------------------------------------------- events
+    def _on_arrival(self, now: float, req: Request) -> None:
+        self.requests.append(req)
+        self._try_dispatch(req, now)
+        self._arm_rebalance(now)
+
+    def _try_dispatch(self, req: Request, now: float) -> None:
+        wid = self.policy.dispatch_prefill(req, now)
+        ok = wid is not None and wid in self.workers \
+            and self.workers[wid].view.alive
+        if self.decisions is not None:
+            self.decisions.append(("dispatch", req.rid, wid if ok else None))
+        if not ok:
+            if req not in self.global_queue:
+                self.global_queue.append(req)
+            return
+        if req in self.global_queue:
+            self.global_queue.remove(req)
+        self.workers[wid].admit_prefill(req, now)
+        self._kick(wid, now)
+
+    def _drain_global_queue(self, now: float) -> None:
+        for req in list(self.global_queue):
+            self._try_dispatch(req, now)
+
+    def _kick(self, wid: int, now: float) -> None:
+        """Start an iteration on a now-idle worker if it has work."""
+        w = self.workers[wid]
+        if self._busy[wid] or not w.view.alive:
+            return
+        head = w.prefill_queue[0] if w.prefill_queue else None
+        rule = self.policy.batch_rule(w.view, now, head)
+        plan = w.compose_iteration(rule, now)
+        if plan.empty:
+            return
+        if self.decisions is not None:
+            self.decisions.append((
+                "iter", wid,
+                tuple(r.rid for r in plan.decode_reqs),
+                tuple((r.rid, t) for r, t in plan.prefill_parts)))
+        dur = self.backend.run_iteration(w, plan)
+        self._busy[wid] = True
+        self._defer("iter_done", now + dur, (wid, plan, dur))
+
+    def _on_iter_done(self, now: float, payload) -> None:
+        wid, plan, dur = payload
+        w = self.workers[wid]
+        self._busy[wid] = False
+        if not w.view.alive:
+            return
+        self._observe(plan, dur)
+        finished_prefills = w.complete_iteration(plan, now, dur)
+        self._record_outcomes(plan, finished_prefills)
+        for req in finished_prefills:
+            self._route_decode(w, req, now)
+        # watermark evictions re-enter global dispatch (re-prefill cost)
+        for req in w.drain_preempted():
+            self.backend.on_finish(req)      # execution state restarts too
+            self._try_dispatch(req, now)
+        self._drain_global_queue(now)
+        self._kick(wid, now)
+        self._arm_rebalance(now)
+
+    def _route_decode(self, src: Worker, req: Request, now: float) -> None:
+        target = self.policy.dispatch_decode(req, now)
+        if self.decisions is not None:
+            self.decisions.append(("route", req.rid, src.wid, target))
+        if target is None or target == src.wid:
+            src.admit_decode(req, now)
+            self._kick(src.wid, now)
+            return
+        # KV migration: src frees; target admits when the bytes have crossed
+        # the (possibly contended) ICI links
+        req.migrations += 1
+        req.phase = Phase.MIGRATING
+        src.release(req)
+        if self.transfer is None:
+            delay = src.cost.migration_time(req.context_len)
+            self._defer("migration_done", now + delay,
+                        (target, req, now, src.wid))
+            return
+        nbytes = src.cost.kv_transfer_bytes(req.context_len)
+        self.transfer.start(src.wid, target, nbytes, now,
+                            payload=(target, req, now, src.wid))
+        self._schedule_transfer_tick(now)
+
+    # -------------------------------------------------- contended transfers
+    def _schedule_transfer_tick(self, now: float) -> None:
+        t = self.transfer.next_completion()
+        if t is not None:
+            self._defer("transfer_tick", max(t, now), self.transfer.version)
+
+    def _on_transfer_tick(self, now: float, version) -> None:
+        if version != self.transfer.version:
+            return                           # rates changed since scheduling
+        for flow in self.transfer.pop_completed(now):
+            latency = self.transfer.delivery_latency(flow.src)
+            self._defer("migration_done", now + latency, flow.payload)
+        self._schedule_transfer_tick(now)
+
+    def _on_migration_done(self, now: float, payload) -> None:
+        wid, req, started, src_wid = payload
+        wait = now - started
+        req.migration_wait += wait
+        if req.generated_tokens > 0:
+            # the user is mid-stream: time on the wire is inter-token
+            # latency — it burns TPOT budget exactly like a stalled
+            # iteration (the D->P/P->D asymmetry cost the paper's toggle
+            # avoids by keeping decodes in place)
+            req.decode_time += wait
+            req.tpot_slack -= wait
+        w = self.workers.get(wid)
+        if w is None or not w.view.alive or \
+                not w.admit_migrated(req, now):
+            self.backend.on_finish(req)
+            req.restarts += 1
+            req.reset_for_reprefill(now)
+            self._try_dispatch(req, now)
+            return
+        self.backend.on_migrate(req, src_wid, wid)
+        self._kick(wid, now)
+        self._arm_rebalance(now)
+
+    # ------------------------------------------------------ fault tolerance
+    def _on_fail(self, now: float, payload) -> None:
+        wid, recover_after = payload
+        w = self.workers.get(wid)
+        if w is None:
+            return
+        lost = w.fail(now)
+        self.policy.on_worker_failure(wid)
+        if self.transfer is not None:
+            # KV in flight to OR from the dead worker is lost: restart
+            for flow in self.transfer.drop_flows_touching(wid, now):
+                _, req, started, _src = flow.payload
+                req.migration_wait += now - started
+                req.restarts += 1
+                req.reset_for_reprefill(now)
+                lost.append(req)
+            self._schedule_transfer_tick(now)
+        for r in lost:
+            if r.phase != Phase.FINISHED:
+                self.backend.on_finish(r)
+                self._try_dispatch(r, now)
+        if recover_after is not None:
+            self._defer("recover", now + recover_after, wid)
+
+    def _on_recover(self, now: float, wid: int) -> None:
+        w = self.workers.get(wid)
+        if w is None:
+            return
+        w.view.alive = True
+        self._drain_global_queue(now)
+        self._kick(wid, now)
+        self._arm_rebalance(now)
+
+    def _on_add_worker(self, now: float, w: Worker) -> None:
+        self.workers[w.wid] = w
+        self._busy[w.wid] = False
+        if self.transfer is not None:
+            self.transfer.add_worker(
+                w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
+        self.policy.workers[w.wid] = w.view
+        if getattr(self.policy, "toggle", None) is not None:
+            self.policy.toggle.workers[w.wid] = w.view
+        self._drain_global_queue(now)
+        self._arm_rebalance(now)
+
+    # --------------------------------------------------- feedback + roles
+    def _observe(self, plan: IterationPlan, dur: float) -> None:
+        """Close the §IV-C loop: feed the observed iteration duration back
+        to the predictor (OnlinePredictor EWMA-corrects; others ignore)."""
+        observe = getattr(self.policy.predictor, "observe_iteration", None)
+        if observe is not None:
+            observe(plan.n_decode, plan.sum_ctx, plan.prefill_tokens,
+                    plan.prefill_ctx_offset, dur)
+
+    def _record_outcomes(self, plan: IterationPlan,
+                         finished_prefills: list[Request]) -> None:
+        finished = [r for r in plan.decode_reqs if r.phase == Phase.FINISHED]
+        finished += [r for r, _ in plan.prefill_parts
+                     if r.phase == Phase.FINISHED]
+        for r in finished:
+            self.backend.on_finish(r)
+        if self.rebalancer is None:
+            return
+        for r in finished_prefills:
+            self.rebalancer.record_first_token(r)
+        for r, _ in plan.prefill_parts:
+            if r.phase == Phase.FINISHED and r not in finished_prefills:
+                self.rebalancer.record_first_token(r)   # 0-decode requests
+        for r in finished:
+            self.rebalancer.record_finish(r)
+
+    def _arm_rebalance(self, now: float) -> None:
+        if self.rebalancer is None or self._rebalance_armed:
+            return
+        self._rebalance_armed = True
+        self._defer("rebalance", now + self.rebalancer.cfg.interval, None)
+
+    def _on_rebalance(self, now: float, _payload) -> None:
+        self._rebalance_armed = False
+        action = self.rebalancer.step(
+            {wid: w.view for wid, w in self.workers.items()}, now)
+        if action is not None:
+            # roles changed: queued work may have new admissible homes
+            self._drain_global_queue(now)
+            for wid in list(self.workers):
+                self._kick(wid, now)
+        if self._progress_pending():
+            self._arm_rebalance(now)
+
+    def _progress_pending(self) -> bool:
+        """True when some non-rebalance event is still coming (an iteration
+        or a transfer in flight). Queued-but-stuck work alone must NOT keep
+        the review timer alive: with nothing else in flight no review can
+        make progress, and perpetual self-re-arming would keep the driver's
+        heap non-empty forever (an unbounded ``run()`` would never return).
+        Any later arrival/completion/recovery re-arms the timer."""
+        if any(self._busy.values()):
+            return True
+        return (self.transfer is not None
+                and self.transfer.next_completion() is not None)

@@ -1,0 +1,104 @@
+"""Event-driven elastic role rebalancing.
+
+The toggle's §IV-C role review originally ran as a side effect of
+``dispatch_prefill`` (every N-th dispatch), which couples role lifecycle to
+arrival timing: a quiet cluster never reviews, a bursty one reviews at the
+worst moments, and the signal (a dispatch-failure counter) says nothing
+about what users actually experienced. The ``RoleRebalancer`` instead runs
+on scheduler-clock events and decides from *windowed SLO attainment*: the
+scheduler records every first-token (TTFT) and every finish (TPOT) outcome,
+and at each review the rebalancer promotes/demotes PREFILL / MULTIPLEX
+workers toward whichever phase is missing its SLO — falling back to the
+paper's HBM-watermark rule, which stays load-bearing under memory pressure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.core.request import Request
+from repro.core.toggle import Role, WorkerView
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceConfig:
+    interval: float = 5.0         # seconds between reviews
+    window: int = 64              # outcomes per sliding window
+    min_samples: int = 12         # don't act on thinner evidence
+    ttft_target: float = 0.9      # windowed attainment floors
+    tpot_target: float = 0.9
+    cooldown: float = 10.0        # seconds between role changes
+    demote_hbm_max: float = 0.5   # only turn an M into a P below this util
+    hbm_watermark: float = 0.90   # paper rule: all M above -> P becomes M
+
+
+class RoleRebalancer:
+    """Windowed-attainment role controller. The scheduler feeds it outcome
+    events; ``step`` applies at most one role change per review."""
+
+    def __init__(self, config: RebalanceConfig = RebalanceConfig()):
+        self.cfg = config
+        self.ttft_window: deque[bool] = deque(maxlen=config.window)
+        self.tpot_window: deque[bool] = deque(maxlen=config.window)
+        self._last_change = float("-inf")
+        self.transitions: list[tuple[float, int, Role]] = []   # audit trail
+
+    # ------------------------------------------------------------- signals
+    def record_first_token(self, req: Request) -> None:
+        self.ttft_window.append(req.ttft_ok())
+
+    def record_finish(self, req: Request) -> None:
+        self.tpot_window.append(req.tpot_ok())
+
+    @staticmethod
+    def _attainment(window: deque) -> Optional[float]:
+        return sum(window) / len(window) if window else None
+
+    # -------------------------------------------------------------- review
+    def step(self, workers: dict[int, WorkerView], now: float) -> Optional[str]:
+        """Review roles; mutate at most one ``WorkerView.role``. Returns a
+        human-readable action description, or None."""
+        cfg = self.cfg
+        alive = [w for w in workers.values() if w.alive]
+        m = [w for w in alive if w.role == Role.MULTIPLEX]
+        p = [w for w in alive if w.role == Role.PREFILL]
+
+        # paper §IV-C memory-pressure rule first: every multiplexing worker
+        # above the HBM watermark starves decode admission cluster-wide
+        if m and p and all(w.hbm_util > cfg.hbm_watermark for w in m):
+            conv = min(p, key=lambda w: w.queued_prefill_tokens)
+            return self._apply(conv, Role.MULTIPLEX, now, "hbm-pressure")
+
+        if now - self._last_change < cfg.cooldown:
+            return None
+
+        ttft_att = self._attainment(self.ttft_window)
+        tpot_att = self._attainment(self.tpot_window)
+        ttft_bad = (len(self.ttft_window) >= cfg.min_samples
+                    and ttft_att < cfg.ttft_target)
+        tpot_bad = (len(self.tpot_window) >= cfg.min_samples
+                    and tpot_att < cfg.tpot_target)
+
+        if ttft_bad and not tpot_bad and len(m) > 1:
+            # prefill capacity starved while decode is healthy: flip the
+            # least decode-committed multiplexer (cheap direction — running
+            # decodes drain in place, no migration)
+            cands = [w for w in m if w.hbm_util < cfg.demote_hbm_max]
+            if cands:
+                conv = min(cands, key=lambda w: (w.decode_batch,
+                                                 w.decode_sum_ctx))
+                return self._apply(conv, Role.PREFILL, now, "ttft-window")
+        if tpot_bad and not ttft_bad and p:
+            # decode capacity starved: the least-queued prefill worker
+            # starts multiplexing (admission-only change)
+            conv = min(p, key=lambda w: w.queued_prefill_tokens)
+            return self._apply(conv, Role.MULTIPLEX, now, "tpot-window")
+        return None
+
+    def _apply(self, w: WorkerView, role: Role, now: float,
+               reason: str) -> str:
+        w.role = role
+        self._last_change = now
+        self.transitions.append((now, w.wid, role))
+        return f"{reason}: worker {w.wid} -> {role.value}"

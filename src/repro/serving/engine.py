@@ -3,7 +3,8 @@
 A Worker owns: a local prefill queue, the running decode batch, KV/state
 accounting, and iteration composition (driven by the policy's BatchRule).
 It is executor-agnostic: ``compose_iteration`` returns the work description;
-the simulator (or real executor) supplies the duration; ``complete_iteration``
+the ClusterScheduler's ``ExecutionBackend`` (cost model or real JAX —
+``repro.sched.backend``) supplies the duration; ``complete_iteration``
 applies state transitions + SLO bookkeeping.
 """
 from __future__ import annotations

@@ -6,6 +6,11 @@
   across slots. Iteration durations are measured wall-clock. This proves
   the scheduler drives a real model end-to-end (examples + integration
   tests use smoke-scale configs).
+* ``RealJaxBackend`` — the ``ExecutionBackend`` adapter that plugs a
+  ``ClusterRealExecutors`` registry into the unified ``ClusterScheduler``:
+  real compute + wall-clock durations (``clock="wall"``), or real compute
+  under the cost-model clock (``clock="model"``) so scheduling decisions
+  are bit-identical to the pure simulator — the backend-parity guarantee.
 """
 from __future__ import annotations
 
@@ -160,6 +165,9 @@ class ClusterRealExecutors:
         for e in self.execs.values():
             e.release(req.rid)
 
+    def as_backend(self, clock: str = "wall") -> "RealJaxBackend":
+        return RealJaxBackend(self, clock=clock)
+
     def migrate(self, req, src: int, dst: int) -> None:
         """Copy the request's tokens; the KV re-registers on the target
         (cache content is re-derived — on TPU this is the ICI transfer)."""
@@ -179,3 +187,38 @@ class ClusterRealExecutors:
         de._cache_write(slot, view)
         de.lengths[slot] = len(full)
         se.release(req.rid)
+
+
+class RealJaxBackend:
+    """ExecutionBackend over per-worker RealExecutors.
+
+    ``clock="wall"``   — report measured wall-clock durations (the real
+                         serving configuration; feeds OnlinePredictor with
+                         genuine execution times).
+    ``clock="model"``  — run the real compute but report the analytical
+                         cost-model duration. Scheduling then sees exactly
+                         the timings the pure simulator sees, which makes
+                         decision logs comparable across backends.
+    """
+
+    def __init__(self, execs: ClusterRealExecutors, clock: str = "wall"):
+        if clock not in ("wall", "model"):
+            raise ValueError(f"clock must be 'wall' or 'model', got {clock!r}")
+        self.execs = execs
+        self.clock = clock
+
+    def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
+        e = self.execs.execs[worker.wid]
+        t0 = time.perf_counter()
+        for req, take in plan.prefill_parts:
+            e.run_prefill_chunk(req, take)
+        e.run_decode_batch(plan.decode_reqs)
+        jax.block_until_ready(e.cache)
+        measured = time.perf_counter() - t0
+        return measured if self.clock == "wall" else worker.plan_duration(plan)
+
+    def on_finish(self, req) -> None:
+        self.execs.on_finish(req)
+
+    def on_migrate(self, req, src_wid: int, dst_wid: int) -> None:
+        self.execs.migrate(req, src_wid, dst_wid)

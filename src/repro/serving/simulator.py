@@ -1,13 +1,15 @@
-"""Discrete-event cluster simulator.
+"""Discrete-event driver for the unified ClusterScheduler.
 
-Drives Workers + a Policy over a request trace. The same Policy objects run
-unchanged against the real-JAX executor (serving/executor.py) — only the
-clock source differs, which is the point: the scheduler under test is the
-artifact, the executor is exchangeable.
+The Simulator owns exactly two things: the event heap and the clock. Every
+scheduling decision — dispatch, batch composition, decode routing, role
+lifecycle, predictor feedback — lives in ``repro.sched.ClusterScheduler``
+and is byte-for-byte the code path the real-JAX executor drives (see
+``repro.sched.backend.ExecutionBackend``); only the backend's notion of an
+iteration duration differs. ``tests/test_sched_core.py`` pins that parity.
 
 Events: request arrival, per-worker iteration completion, migration
-completion, worker failure/recovery (fault-tolerance experiments), elastic
-worker addition.
+completion, transfer ticks, worker failure/recovery, elastic worker
+addition, role-rebalance reviews.
 """
 from __future__ import annotations
 
@@ -16,13 +18,13 @@ import heapq
 import itertools
 from typing import Callable, Optional, Sequence
 
-from repro.core.metrics import ServeMetrics, compute_metrics
+from repro.core.metrics import ServeMetrics
 from repro.core.policies import Policy
-from repro.core.request import Phase, Request
-from repro.core.toggle import Role
-from repro.serving.costmodel import CostModel
+from repro.core.request import Request
+from repro.sched.backend import CallableBackend, ExecutionBackend
+from repro.sched.core import ClusterScheduler
+from repro.sched.rebalance import RebalanceConfig, RoleRebalancer
 from repro.serving.engine import Worker
-from repro.serving.transfer import LinkSpec, TransferEngine
 
 
 @dataclasses.dataclass(order=True)
@@ -36,27 +38,63 @@ class _Event:
 class Simulator:
     def __init__(self, workers: Sequence[Worker], policy: Policy,
                  duration_fn: Optional[Callable] = None,
-                 transfer: Optional[TransferEngine] = None):
-        """duration_fn(worker, plan) -> seconds; default = cost model.
+                 transfer=None,
+                 backend: Optional[ExecutionBackend] = None,
+                 rebalancer: Optional[RoleRebalancer] = None,
+                 record_decisions: bool = False):
+        """``backend`` supplies iteration durations (and execution, for the
+        real-JAX backend); default = the analytical cost model.
+        ``duration_fn(worker, plan) -> seconds`` is the legacy hook and
+        wraps into a ``CallableBackend`` over ``backend``.
 
         ``transfer``: bandwidth-contended KV migration engine. None keeps
         the legacy fixed-delay ``CostModel.migration_time`` path."""
-        self.workers = {w.wid: w for w in workers}
-        self.policy = policy
-        self.duration_fn = duration_fn or (lambda w, p: w.plan_duration(p))
-        self.transfer = transfer
-        if transfer is not None:
-            for w in workers:
-                transfer.add_worker(
-                    w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
+        if duration_fn is not None:
+            backend = CallableBackend(duration_fn, base=backend)
+        self.sched = ClusterScheduler(
+            workers, policy, backend=backend, transfer=transfer,
+            rebalancer=rebalancer, record_decisions=record_decisions)
+        self.sched.bind(self.push)
         self.now = 0.0
         self._heap: list[_Event] = []
         self._seq = itertools.count()
-        self.global_queue: list[Request] = []
-        self.requests: list[Request] = []
-        self._worker_busy: dict[int, bool] = {w.wid: False for w in workers}
-        self._failures: list[tuple[float, int]] = []
         self.max_sim_time = float("inf")
+
+    # ------------------------------------------------- scheduler passthrough
+    @property
+    def workers(self) -> dict[int, Worker]:
+        return self.sched.workers
+
+    @property
+    def policy(self) -> Policy:
+        return self.sched.policy
+
+    @property
+    def transfer(self):
+        return self.sched.transfer
+
+    @property
+    def requests(self) -> list[Request]:
+        return self.sched.requests
+
+    @property
+    def global_queue(self) -> list[Request]:
+        return self.sched.global_queue
+
+    @property
+    def decisions(self):
+        return self.sched.decisions
+
+    @property
+    def duration_fn(self) -> Callable:
+        backend = self.sched.backend
+        return lambda worker, plan: backend.run_iteration(worker, plan)
+
+    @duration_fn.setter
+    def duration_fn(self, fn: Callable) -> None:
+        # layer the raw clock over the current backend so lifecycle hooks
+        # (slot teardown, KV materialisation) keep firing
+        self.sched.backend = CallableBackend(fn, base=self.sched.backend)
 
     # ----------------------------------------------------------------- api
     def push(self, kind: str, time: float, payload=None) -> None:
@@ -82,165 +120,11 @@ class Simulator:
             if ev.time > self.max_sim_time:
                 break
             self.now = ev.time
-            getattr(self, f"_on_{ev.kind}")(ev)
+            self.sched.handle(ev.kind, self.now, ev.payload)
         return self.metrics()
 
     def metrics(self) -> ServeMetrics:
-        qt, bt = {}, {}
-        for w in self.workers.values():
-            qt.update(w.queue_times)
-            bt.update(w.blocked_time)
-        return compute_metrics(self.requests, qt, bt)
-
-    # -------------------------------------------------------------- events
-    def _on_arrival(self, ev: _Event) -> None:
-        req: Request = ev.payload
-        self.requests.append(req)
-        self._try_dispatch(req)
-
-    def _try_dispatch(self, req: Request) -> None:
-        wid = self.policy.dispatch_prefill(req, self.now)
-        if wid is None or wid not in self.workers or \
-                not self.workers[wid].view.alive:
-            if req not in self.global_queue:
-                self.global_queue.append(req)
-            return
-        if req in self.global_queue:
-            self.global_queue.remove(req)
-        self.workers[wid].admit_prefill(req, self.now)
-        self._kick(wid)
-
-    def _kick(self, wid: int) -> None:
-        """Start an iteration on a now-idle worker if it has work."""
-        w = self.workers[wid]
-        if self._worker_busy[wid] or not w.view.alive:
-            return
-        head = w.prefill_queue[0] if w.prefill_queue else None
-        rule = self.policy.batch_rule(w.view, self.now, head)
-        plan = w.compose_iteration(rule, self.now)
-        if plan.empty:
-            return
-        dur = self.duration_fn(w, plan)
-        self._worker_busy[wid] = True
-        self.push("iter_done", self.now + dur, (wid, plan, dur))
-
-    def _on_iter_done(self, ev: _Event) -> None:
-        wid, plan, dur = ev.payload
-        w = self.workers[wid]
-        self._worker_busy[wid] = False
-        if not w.view.alive:
-            return
-        finished_prefills = w.complete_iteration(plan, self.now, dur)
-        for req in finished_prefills:
-            self._route_decode(w, req)
-        # watermark evictions re-enter global dispatch (re-prefill cost)
-        for req in w.drain_preempted():
-            self._try_dispatch(req)
-        # retry the global queue now that state changed
-        for req in list(self.global_queue):
-            self._try_dispatch(req)
-        self._kick(wid)
-
-    def _route_decode(self, src: Worker, req: Request) -> None:
-        target = self.policy.dispatch_decode(req, self.now)
-        if target is None or target == src.wid:
-            src.admit_decode(req, self.now)
-            self._kick(src.wid)
-            return
-        # KV migration: src frees; target admits when the bytes have crossed
-        # the (possibly contended) ICI links
-        req.migrations += 1
-        req.phase = Phase.MIGRATING
-        src.release(req)
-        if self.transfer is None:
-            delay = src.cost.migration_time(req.context_len)
-            self.push("migration_done", self.now + delay,
-                      (target, req, self.now))
-            return
-        nbytes = src.cost.kv_transfer_bytes(req.context_len)
-        self.transfer.start(src.wid, target, nbytes, self.now,
-                            payload=(target, req, self.now))
-        self._schedule_transfer_tick()
-
-    # -------------------------------------------------- contended transfers
-    def _schedule_transfer_tick(self) -> None:
-        t = self.transfer.next_completion()
-        if t is not None:
-            self.push("transfer_tick", max(t, self.now),
-                      self.transfer.version)
-
-    def _on_transfer_tick(self, ev: _Event) -> None:
-        if ev.payload != self.transfer.version:
-            return                           # rates changed since scheduling
-        for flow in self.transfer.pop_completed(self.now):
-            latency = self.transfer.delivery_latency(flow.src)
-            self.push("migration_done", self.now + latency, flow.payload)
-        self._schedule_transfer_tick()
-
-    def _on_migration_done(self, ev: _Event) -> None:
-        wid, req, started = ev.payload
-        wait = self.now - started
-        req.migration_wait += wait
-        if req.generated_tokens > 0:
-            # the user is mid-stream: time on the wire is inter-token
-            # latency — it burns TPOT budget exactly like a stalled
-            # iteration (this is the D->P/P->D asymmetry cost the paper's
-            # toggle avoids by keeping decodes in place)
-            req.decode_time += wait
-            req.tpot_slack -= wait
-        w = self.workers.get(wid)
-        if w is None or not w.view.alive or \
-                not w.admit_migrated(req, self.now):
-            req.restarts += 1
-            req.reset_for_reprefill(self.now)
-            self._try_dispatch(req)
-            return
-        self._kick(wid)
-
-    def _on_fail(self, ev: _Event) -> None:
-        wid, recover_after = ev.payload
-        w = self.workers.get(wid)
-        if w is None:
-            return
-        lost = w.fail(self.now)
-        self.policy.on_worker_failure(wid)
-        if self.transfer is not None:
-            # KV in flight to OR from the dead worker is lost: restart
-            for flow in self.transfer.drop_flows_touching(wid, self.now):
-                _, req, started = flow.payload
-                req.migration_wait += self.now - started
-                req.restarts += 1
-                req.reset_for_reprefill(self.now)
-                lost.append(req)
-            self._schedule_transfer_tick()
-        for r in lost:
-            if r.phase != Phase.FINISHED:
-                self._try_dispatch(r)
-        if recover_after is not None:
-            self.push("recover", self.now + recover_after, wid)
-
-    def _on_recover(self, ev: _Event) -> None:
-        wid = ev.payload
-        w = self.workers.get(wid)
-        if w is None:
-            return
-        w.view.alive = True
-        for req in list(self.global_queue):
-            self._try_dispatch(req)
-        self._kick(wid)
-
-    def _on_add_worker(self, ev: _Event) -> None:
-        w: Worker = ev.payload
-        self.workers[w.wid] = w
-        self._worker_busy[w.wid] = False
-        if self.transfer is not None:
-            self.transfer.add_worker(
-                w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
-        self.policy.workers[w.wid] = w.view
-        if hasattr(self.policy, "toggle"):
-            self.policy.toggle.workers[w.wid] = w.view
-        for req in list(self.global_queue):
-            self._try_dispatch(req)
+        return self.sched.metrics()
 
 
 def build_cluster(cfg, policy_name: str, n_workers: int = 4,
@@ -248,15 +132,29 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   use_transfer_engine: bool = True,
                   ici_bw: Optional[float] = None,
                   ici_links: Optional[int] = None,
-                  page_size: int = 16, **policy_kw):
-    """Convenience: workers + cost models + policy, wired together.
+                  page_size: int = 16,
+                  online_predictor: bool = False,
+                  role_rebalance: str | bool = "auto",
+                  rebalance_config: Optional[RebalanceConfig] = None,
+                  record_decisions: bool = False,
+                  backend: Optional[ExecutionBackend] = None,
+                  **policy_kw):
+    """Convenience: workers + cost models + policy + scheduler, wired.
 
     ``ici_bw``/``ici_links`` override the per-worker migration link model
     (bytes/s per link, link count); ``use_transfer_engine=False`` reverts
-    to the seed's fixed uncontended ``migration_time`` delay."""
-    from repro.core.predictor import AnalyticalPredictor
+    to the seed's fixed uncontended ``migration_time`` delay.
+
+    ``online_predictor=True`` wraps the predictor in an ``OnlinePredictor``
+    so observed iteration durations EWMA-correct its estimates.
+    ``role_rebalance``: "auto" (windowed-attainment rebalancing for
+    policies that own a toggle, i.e. tropical), True (same, but a
+    ValueError on policies without role lifecycle), or False (keep the
+    legacy dispatch-count ``review_roles`` side effect)."""
+    from repro.core.predictor import AnalyticalPredictor, OnlinePredictor
     from repro.core.policies import make_policy
-    from repro.serving.costmodel import WorkerSpec
+    from repro.serving.costmodel import CostModel, WorkerSpec
+    from repro.serving.transfer import TransferEngine
 
     worker_spec = worker_spec or WorkerSpec()
     if ici_bw is not None or ici_links is not None:
@@ -269,6 +167,8 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
     cost = CostModel(cfg, worker_spec, page_size=page_size)
     workers = [Worker(i, cost) for i in range(n_workers)]
     predictor = predictor or AnalyticalPredictor(cost)
+    if online_predictor and not hasattr(predictor, "observe_iteration"):
+        predictor = OnlinePredictor(predictor)
     policy = make_policy(policy_name, [w.view for w in workers], predictor,
                          **policy_kw)
     transfer = TransferEngine() if use_transfer_engine else None
@@ -276,5 +176,21 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                            cost.state_tokens)
     for w in workers:
         w.queue_discipline = policy.queue_discipline
-    sim = Simulator(workers, policy, transfer=transfer)
+
+    rebalancer = None
+    has_toggle = getattr(policy, "toggle", None) is not None
+    if role_rebalance is True and not has_toggle:
+        raise ValueError(
+            f"role_rebalance=True requires a policy with role lifecycle "
+            f"(a MultiplexingToggle); {policy.name!r} has none")
+    if has_toggle and (role_rebalance is True or role_rebalance == "auto"):
+        rebalancer = RoleRebalancer(rebalance_config or RebalanceConfig(
+            hbm_watermark=policy.toggle.cfg.hbm_watermark))
+        # role lifecycle is now event-driven at the scheduler: turn off the
+        # toggle's dispatch-count review side effect
+        policy.toggle.cfg = dataclasses.replace(
+            policy.toggle.cfg, role_transitions=False)
+
+    sim = Simulator(workers, policy, transfer=transfer, backend=backend,
+                    rebalancer=rebalancer, record_decisions=record_decisions)
     return sim, cost

@@ -1,0 +1,26 @@
+"""Examples must keep running against the refactored API (importable
+``main(argv)`` smoke at reduced scale)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                       / "examples"))
+
+import serve_cluster          # noqa: E402
+import slack_multiplexing     # noqa: E402
+
+
+def test_serve_cluster_example_smoke(capsys):
+    serve_cluster.main(["--rate", "1.0", "--duration", "15"])
+    out = capsys.readouterr().out
+    for pol in ("vllm", "sarathi", "distserve", "tropical", "tropical++"):
+        assert pol in out
+    assert "fault tolerance" in out
+    assert "tropical+failure" in out
+
+
+def test_slack_multiplexing_example_smoke(capsys):
+    slack_multiplexing.main([])
+    out = capsys.readouterr().out
+    assert "attainment=" in out
+    assert "multiplexing worker" in out

@@ -1,0 +1,116 @@
+"""§IV-C predictors: profiled interpolation bounds, safety-margin
+consistency, and OnlinePredictor convergence under injected bias."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.predictor import (AnalyticalPredictor, BiasedPredictor,
+                                  OnlinePredictor, ProfiledPredictor,
+                                  profile_worker)
+from repro.serving.costmodel import CostModel, WorkerSpec
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return CostModel(get_config("internlm-20b"), WorkerSpec(tp=8))
+
+
+@pytest.fixture(scope="module")
+def profiled(cost):
+    return profile_worker(lambda nd, ctx, pt: cost.iteration_time(nd, ctx, pt))
+
+
+# ----------------------------------------------------------------- profiled
+
+def test_profiled_interpolation_stays_within_point_bounds(profiled):
+    """Piecewise-linear interpolation between profiled points can never
+    leave the bracketing points' value range (no overshoot)."""
+    pts = profiled.prefill_points
+    for (x0, y0), (x1, y1) in zip(pts, pts[1:]):
+        for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+            x = int(x0 + frac * (x1 - x0))
+            got = profiled.predict_prefill(x) / profiled.safety
+            assert min(y0, y1) - 1e-12 <= got <= max(y0, y1) + 1e-12, x
+    dec = [(b, t) for b, t, _ in profiled.decode_points]
+    for (b0, y0), (b1, y1) in zip(dec, dec[1:]):
+        mid = (b0 + b1) // 2
+        got = profiled.predict_decode_iter(mid, 0.0) / profiled.safety
+        assert min(y0, y1) - 1e-12 <= got <= max(y0, y1) + 1e-12, mid
+
+
+def test_profiled_predictions_monotone_in_tokens(profiled):
+    xs = [128, 300, 512, 1200, 2048, 5000, 8192]
+    ys = [profiled.predict_prefill(x) for x in xs]
+    assert all(b >= a for a, b in zip(ys, ys[1:]))
+
+
+def test_safety_margin_consistent_across_predictors(cost, profiled):
+    """Both predictor families apply ``safety`` as the same multiplicative
+    factor on every phase."""
+    for s in (1.0, 1.3):
+        ana = AnalyticalPredictor(cost, safety=s)
+        assert ana.predict_prefill(2048) == \
+            pytest.approx(cost.prefill_time(2048) * s)
+        assert ana.predict_decode_iter(8, 4096.0) == \
+            pytest.approx(cost.decode_iter_time(8, 4096.0) * s)
+        assert ana.predict_migration(2048) == \
+            pytest.approx(cost.migration_time(2048) * s)
+    base = profiled.predict_prefill(512) / profiled.safety
+    prof13 = ProfiledPredictor(profiled.prefill_points,
+                               profiled.decode_points, profiled.ctx_coeff,
+                               profiled.migration_coeff, safety=1.3)
+    assert prof13.predict_prefill(512) == pytest.approx(base * 1.3)
+
+
+# ------------------------------------------------------------------- online
+
+@pytest.mark.parametrize("bias", [2.0, 0.5])
+def test_online_predictor_converges_under_bias(cost, bias):
+    pred = OnlinePredictor(BiasedPredictor(cost, bias))
+    for _ in range(60):
+        pred.observe_prefill(2048, 0, cost.prefill_time(2048))
+        pred.observe_decode(16, 16 * 2048.0,
+                            cost.decode_iter_time(16, 16 * 2048.0))
+    # converged prediction == safety * truth (margin restored, bias gone)
+    want_p = cost.prefill_time(2048) * 1.1
+    want_d = cost.decode_iter_time(16, 16 * 2048.0) * 1.1
+    assert pred.predict_prefill(2048) == pytest.approx(want_p, rel=0.1)
+    assert pred.predict_decode_iter(16, 16 * 2048.0) == \
+        pytest.approx(want_d, rel=0.1)
+    assert pred.prefill_scale == pytest.approx(1.0 / bias, rel=0.1)
+
+
+def test_online_predictor_unbiased_base_is_fixed_point(cost):
+    pred = OnlinePredictor(AnalyticalPredictor(cost))
+    for _ in range(40):
+        pred.observe_prefill(1024, 0, cost.prefill_time(1024))
+    assert pred.prefill_scale == pytest.approx(1.0, abs=1e-6)
+
+
+def test_online_predictor_mixed_iteration_split(cost):
+    """Hybrid decode+chunk iterations still feed both phases."""
+    pred = OnlinePredictor(BiasedPredictor(cost, 2.0))
+    n, ctx, toks = 8, 8 * 2048.0, 512
+    true_iter = cost.iteration_time(n, ctx, toks)
+    for _ in range(80):
+        pred.observe_iteration(n, ctx, toks, 0.0, true_iter)
+    assert pred.prefill_observations == pred.decode_observations == 80
+    # corrected composite prediction lands near safety * truth
+    got = pred.predict_prefill(toks) + pred.predict_decode_iter(n, ctx)
+    assert got == pytest.approx(true_iter * 1.1, rel=0.25)
+
+
+def test_online_predictor_clips_outliers(cost):
+    pred = OnlinePredictor(AnalyticalPredictor(cost), alpha=1.0)
+    pred.observe_prefill(1024, 0, cost.prefill_time(1024) * 1e6)
+    assert pred.prefill_scale <= pred.clip[1]
+    pred.observe_prefill(1024, 0, cost.prefill_time(1024) * 1e-6)
+    assert pred.prefill_scale >= pred.clip[0]
+
+
+def test_online_predictor_ignores_degenerate_observations(cost):
+    pred = OnlinePredictor(AnalyticalPredictor(cost))
+    pred.observe_prefill(0, 0, 0.5)        # zero-token prediction
+    pred.observe_decode(4, 4096.0, 0.0)    # zero observed time
+    assert pred.prefill_observations == 0
+    assert pred.decode_observations == 0
+    assert pred.prefill_scale == 1.0 and pred.decode_scale == 1.0

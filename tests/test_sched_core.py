@@ -1,0 +1,237 @@
+"""Unified scheduling core: backend parity (simulator vs real JAX through
+one ClusterScheduler), online predictor feedback, role rebalancing."""
+import copy
+
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.core.predictor import (AnalyticalPredictor, BiasedPredictor,
+                                  OnlinePredictor)
+from repro.core.request import Phase, Request, SLOSpec
+from repro.core.toggle import Role, WorkerView
+from repro.sched import (ClusterScheduler, CostModelBackend, RebalanceConfig,
+                         RoleRebalancer)
+from repro.serving.costmodel import CostModel, WorkerSpec
+from repro.serving.simulator import Simulator, build_cluster
+from repro.serving.trace import generate_trace
+
+
+def _smoke_trace(n=6, prompt=24, out=5):
+    slo = SLOSpec(ttft=30.0, tpot=5.0)
+    return [Request(rid=i, arrival_time=0.05 * i, prompt_len=prompt,
+                    output_len=out, slo=slo) for i in range(n)]
+
+
+# ------------------------------------------------------------ backend parity
+
+@pytest.mark.parametrize("policy", ["tropical", "distserve"])
+def test_sim_and_real_backend_make_identical_decisions(policy):
+    """The acceptance guarantee of the sched/ refactor: the discrete-event
+    simulator and the real-JAX executor drive the *same* ClusterScheduler
+    code path. With the real backend running under the cost-model clock
+    (identical durations), every dispatch target, batch composition and
+    decode route must be bit-identical."""
+    from repro.serving.executor import ClusterRealExecutors
+
+    cfg = get_smoke("deepseek-7b")
+    spec = WorkerSpec(tp=1)
+    trace = _smoke_trace()
+
+    sim_a, _ = build_cluster(cfg, policy, n_workers=2, worker_spec=spec,
+                             record_decisions=True)
+    sim_a.add_trace(copy.deepcopy(trace))
+    m_a = sim_a.run(until=3000.0)
+
+    execs = ClusterRealExecutors(cfg, 2, max_slots=8, max_len=64)
+    sim_b, _ = build_cluster(cfg, policy, n_workers=2, worker_spec=spec,
+                             record_decisions=True,
+                             backend=execs.as_backend(clock="model"))
+    sim_b.add_trace(copy.deepcopy(trace))
+    m_b = sim_b.run(until=3000.0)
+
+    assert m_a.n_finished == m_b.n_finished == len(trace)
+    assert sim_a.decisions, "decision log must be non-trivial"
+    assert sim_a.decisions == sim_b.decisions
+    kinds = {d[0] for d in sim_a.decisions}
+    assert {"dispatch", "iter", "route"} <= kinds
+    # the real backend actually generated tokens while agreeing on decisions
+    for r in trace:
+        gen = [e.generated[r.rid] for e in execs.execs.values()
+               if r.rid in e.generated]
+        assert gen and max(len(g) for g in gen) >= r.output_len
+
+
+def test_simulator_is_a_thin_driver():
+    """No scheduling logic may live in the Simulator: it owns the heap and
+    the clock, the ClusterScheduler owns every decision."""
+    for fossil in ("_kick", "_route_decode", "_try_dispatch", "_on_iter_done",
+                   "_on_migration_done", "_on_fail"):
+        assert not hasattr(Simulator, fossil), fossil
+    cfg = get_config("internlm-20b")
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2,
+                           worker_spec=WorkerSpec(tp=8))
+    assert isinstance(sim.sched, ClusterScheduler)
+    assert isinstance(sim.sched.backend, CostModelBackend)
+
+
+def test_legacy_simulator_ctor_and_duration_fn_shims():
+    """Pre-refactor entry points keep working: positional (workers, policy)
+    construction and the settable ``duration_fn`` hook."""
+    from repro.core.policies import make_policy
+    from repro.serving.engine import Worker
+
+    cfg = get_config("internlm-20b")
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    workers = [Worker(i, cost) for i in range(2)]
+    policy = make_policy("sarathi", [w.view for w in workers],
+                         AnalyticalPredictor(cost))
+    sim = Simulator(workers, policy)
+    calls = []
+
+    def spy_fn(worker, plan):
+        calls.append(worker.wid)
+        return worker.plan_duration(plan)
+
+    sim.duration_fn = spy_fn
+    trace = generate_trace(1.0, 20.0, cost, seed=4)
+    sim.add_trace(trace)
+    m = sim.run(until=2000.0)
+    assert m.n_finished == m.n_total == len(trace)
+    assert calls, "custom duration_fn must supply the clock"
+
+
+# ----------------------------------------------------- online predictor loop
+
+def test_scheduler_feeds_online_predictor_and_corrects_bias():
+    cfg = get_config("internlm-20b")
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    pred = OnlinePredictor(BiasedPredictor(cost, 2.0))
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2,
+                           worker_spec=WorkerSpec(tp=8), predictor=pred)
+    sim.add_trace(generate_trace(1.0, 60.0, cost, seed=7))
+    m = sim.run(until=4000.0)
+    assert m.n_finished == m.n_total
+    assert pred.prefill_observations > 0 and pred.decode_observations > 0
+    # the 2x overestimate must be substantially corrected toward 0.5
+    assert pred.prefill_scale < 0.7
+    assert pred.decode_scale < 0.7
+
+
+def test_online_predictor_unbiased_base_keeps_margin():
+    cfg = get_config("internlm-20b")
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    pred = OnlinePredictor(AnalyticalPredictor(cost))
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2,
+                           worker_spec=WorkerSpec(tp=8), predictor=pred)
+    sim.add_trace(generate_trace(1.0, 60.0, cost, seed=7))
+    sim.run(until=4000.0)
+    # exact executor => scales hover at 1.0 (safety margin preserved)
+    assert pred.prefill_scale == pytest.approx(1.0, abs=0.15)
+    assert pred.decode_scale == pytest.approx(1.0, abs=0.15)
+
+
+# --------------------------------------------------------- role rebalancing
+
+def _views(roles):
+    return {i: WorkerView(wid=i, role=r, kv_capacity_tokens=100000.0)
+            for i, r in enumerate(roles)}
+
+
+def test_rebalancer_promotes_multiplexer_on_ttft_window():
+    rb = RoleRebalancer(RebalanceConfig(min_samples=8))
+    views = _views([Role.PREFILL, Role.MULTIPLEX, Role.MULTIPLEX])
+    views[1].decode_batch = 4
+    views[2].decode_batch = 1           # least decode-committed -> flips
+    for ok in [False] * 12:
+        rb.ttft_window.append(ok)
+    for ok in [True] * 12:
+        rb.tpot_window.append(ok)
+    action = rb.step(views, now=100.0)
+    assert action is not None and "ttft-window" in action
+    assert views[2].role == Role.PREFILL
+    assert views[1].role == Role.MULTIPLEX
+
+
+def test_rebalancer_demotes_prefill_on_tpot_window():
+    rb = RoleRebalancer(RebalanceConfig(min_samples=8))
+    views = _views([Role.PREFILL, Role.PREFILL, Role.MULTIPLEX])
+    views[0].queued_prefill_tokens = 10
+    views[1].queued_prefill_tokens = 5000
+    for ok in [True] * 12:
+        rb.ttft_window.append(ok)
+    for ok in [False] * 12:
+        rb.tpot_window.append(ok)
+    action = rb.step(views, now=100.0)
+    assert action is not None and "tpot-window" in action
+    assert views[0].role == Role.MULTIPLEX       # least-queued P converts
+
+
+def test_rebalancer_hbm_pressure_rule_and_cooldown():
+    rb = RoleRebalancer(RebalanceConfig(min_samples=8, cooldown=50.0))
+    views = _views([Role.PREFILL, Role.MULTIPLEX])
+    views[1].kv_used_tokens = 0.95 * views[1].kv_capacity_tokens
+    action = rb.step(views, now=0.0)
+    assert action is not None and "hbm-pressure" in action
+    assert views[0].role == Role.MULTIPLEX
+    # windowed actions respect the cooldown that change started
+    views2 = _views([Role.PREFILL, Role.MULTIPLEX, Role.MULTIPLEX])
+    for ok in [False] * 12:
+        rb.ttft_window.append(ok)
+    for ok in [True] * 12:
+        rb.tpot_window.append(ok)
+    assert rb.step(views2, now=10.0) is None      # inside cooldown
+    assert rb.step(views2, now=100.0) is not None  # after cooldown
+
+
+def test_rebalancer_needs_evidence():
+    rb = RoleRebalancer(RebalanceConfig(min_samples=8))
+    views = _views([Role.PREFILL, Role.MULTIPLEX, Role.MULTIPLEX])
+    rb.ttft_window.extend([False] * 3)            # too thin
+    assert rb.step(views, now=100.0) is None
+    assert views[0].role == Role.PREFILL
+
+
+def test_cluster_run_drives_windowed_rebalancer():
+    """End-to-end: build_cluster('tropical') wires the rebalancer, the
+    scheduler feeds it outcome windows, and the toggle's dispatch-count
+    review is retired."""
+    cfg = get_config("internlm-20b")
+    sim, cost = build_cluster(cfg, "tropical", n_workers=4,
+                              worker_spec=WorkerSpec(tp=8))
+    assert sim.sched.rebalancer is not None
+    assert sim.policy.toggle.cfg.role_transitions is False
+    sim.add_trace(generate_trace(2.0, 60.0, cost, seed=5))
+    m = sim.run(until=4000.0)
+    assert m.n_finished == m.n_total
+    rb = sim.sched.rebalancer
+    assert len(rb.ttft_window) > 0 and len(rb.tpot_window) > 0
+
+    # opting out restores the legacy dispatch-time review
+    sim2, _ = build_cluster(cfg, "tropical", n_workers=4,
+                            worker_spec=WorkerSpec(tp=8),
+                            role_rebalance=False)
+    assert sim2.sched.rebalancer is None
+    assert sim2.policy.toggle.cfg.role_transitions is True
+
+
+def test_force_rebalance_without_role_lifecycle_is_an_error():
+    cfg = get_config("internlm-20b")
+    with pytest.raises(ValueError, match="role_rebalance"):
+        build_cluster(cfg, "distserve", n_workers=2,
+                      worker_spec=WorkerSpec(tp=8), role_rebalance=True)
+
+
+def test_unbounded_run_terminates_when_no_progress_is_possible():
+    """Regression: the rebalance review must not re-arm itself forever
+    over queued-but-stuck work — ``run()`` without ``until`` has to drain
+    the heap and return, exactly like the pre-sched/ simulator."""
+    cfg = get_config("internlm-20b")
+    sim, cost = build_cluster(cfg, "tropical", n_workers=2,
+                              worker_spec=WorkerSpec(tp=8))
+    sim.inject_failure(0.0, 0)
+    sim.inject_failure(0.0, 1)          # whole cluster dead, no recovery
+    trace = generate_trace(1.0, 10.0, cost, seed=3)
+    sim.add_trace(trace)
+    m = sim.run()                       # unbounded: must still terminate
+    assert m.n_finished == 0
+    assert len(sim.global_queue) == len(trace)

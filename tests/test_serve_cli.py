@@ -1,0 +1,61 @@
+"""launch/serve.py end-to-end smoke (sim mode) + stable JSON schema."""
+import json
+
+import pytest
+
+from repro.launch import serve
+
+REQUIRED_KEYS = {
+    "schema_version", "policy", "arch", "mode", "rate", "workers", "seed",
+    "n_total", "n_finished", "slo_attainment", "ttft_attainment",
+    "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg", "tpot_p90",
+    "queue_avg", "queue_p90", "blocked_time_avg", "migrations", "restarts",
+    "preemptions", "migration_wait_avg",
+}
+
+
+def _run(extra=()):
+    return serve.main(["--mode", "sim", "--rate", "1.0",
+                       "--duration", "15", "--json", *extra])
+
+
+def test_serve_sim_json_schema(capsys):
+    row = _run(["--seed", "1"])
+    out = capsys.readouterr().out
+    data = json.loads(out)          # stdout is exactly one JSON object
+    assert data["schema_version"] == serve.METRICS_SCHEMA_VERSION == 1
+    assert REQUIRED_KEYS <= set(data)
+    assert data["mode"] == "sim" and data["seed"] == 1
+    assert data["n_total"] > 0
+    assert data["n_finished"] == data["n_total"]
+    assert row["n_total"] == data["n_total"]
+    # transfer engine on by default -> migration accounting present
+    assert "kv_bytes_migrated" in data and "transfer_seconds" in data
+
+
+def test_serve_seed_reproducible(capsys):
+    a = _run(["--seed", "5"])
+    b = _run(["--seed", "5"])
+    c = _run(["--seed", "6"])
+    capsys.readouterr()
+    assert a == b
+    strip = lambda row: {k: v for k, v in row.items() if k != "seed"}
+    assert strip(a) != strip(c)
+
+
+def test_serve_online_predictor_flag(capsys):
+    row = _run(["--online-predictor"])
+    capsys.readouterr()
+    assert "predictor_prefill_scale" in row
+    assert "predictor_decode_scale" in row
+    assert "role_transitions" in row      # windowed rebalancer active
+
+
+def test_serve_rejects_bad_link_flags(capsys):
+    with pytest.raises(SystemExit):
+        serve.main(["--ici-bw", "0"])
+    with pytest.raises(SystemExit):
+        serve.main(["--ici-links", "-1"])
+    with pytest.raises(SystemExit):
+        serve.main(["--page-size", "0"])
+    capsys.readouterr()
