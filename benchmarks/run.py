@@ -19,7 +19,8 @@ def main() -> None:
     from benchmarks import (fig3_workload, fig4_queue_vs_interference,
                             fig5_worker_allocation, fig8_slo_attainment,
                             fig9_latency, fig10_queueing, fig11_cdf,
-                            fig_migration, predictor_noise, roofline, scale)
+                            fig_migration, fig_multitenant, predictor_noise,
+                            roofline, scale)
     benches = {
         "fig3": fig3_workload.main,
         "fig4": fig4_queue_vs_interference.main,
@@ -32,7 +33,12 @@ def main() -> None:
         "fig_migration": (lambda: fig_migration.main(
             bandwidths=(0.05e9, 1e9, 50e9), rate=2.0, duration=60.0))
         if args.quick else fig_migration.main,
-        "scale": scale.main,
+        "fig_multitenant": (lambda: fig_multitenant.main(
+            rates=(2.0,), duration=60.0, ref_rate=2.0))
+        if args.quick else fig_multitenant.main,
+        "scale": (lambda: scale.main(scales=[(4, 4.0), (16, 16.0)],
+                                     duration=60.0))
+        if args.quick else scale.main,
         "predictor_noise": (lambda: predictor_noise.main(quick=True))
         if args.quick else predictor_noise.main,
         "roofline": roofline.main,

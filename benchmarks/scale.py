@@ -4,46 +4,85 @@ scheduler must hold SLO attainment as workers and load scale together
 
 Checks (a) attainment stays flat under proportional scaling (no
 centralised-scheduler collapse), (b) simulated-cluster throughput, (c)
-scheduler decision cost per request stays O(workers).
+scheduler decision cost per request stays O(workers), and (d) the
+proportional role-rebalancer (ceil(deficit x workers) moves per review
+with two-window hysteresis, ``rebalance=proportional`` rows) keeps pace
+with breaches the legacy one-worker-per-review controller chases at
+100+-worker scale; its attainment must stay >= flat-minus-noise of the
+legacy rows.
+
+Usage: PYTHONPATH=src python -m benchmarks.scale [--quick]
 """
 from __future__ import annotations
 
+import argparse
 import copy
 import time
 
 from benchmarks.common import MODEL, WORKER, cost_model, emit, make_trace
 from repro.configs import get_config
+from repro.sched.rebalance import RebalanceConfig
 from repro.serving.simulator import build_cluster
 
 SCALES = [(4, 4.0), (16, 16.0), (64, 64.0)]
 DURATION = 120.0
 
 
-def main() -> list[dict]:
+def _run(cm, pol, n_workers, rate, duration, rebalance_config=None):
+    trace = make_trace(rate, duration, cm, seed=5)
+    sim, _ = build_cluster(get_config(MODEL), pol, n_workers=n_workers,
+                           worker_spec=WORKER,
+                           rebalance_config=rebalance_config)
+    sim.add_trace(copy.deepcopy(trace))
+    t0 = time.perf_counter()
+    m = sim.run(until=duration * 6)
+    wall = time.perf_counter() - t0
+    transitions = len(sim.sched.rebalancer.transitions) \
+        if sim.sched.rebalancer is not None else 0
+    return m, wall, transitions
+
+
+def main(scales=SCALES, duration=DURATION) -> list[dict]:
     cm = cost_model()
     rows = []
-    for n_workers, rate in SCALES:
-        trace = make_trace(rate, DURATION, cm, seed=5)
-        for pol in ("tropical", "tropical++"):
-            sim, _ = build_cluster(get_config(MODEL), pol,
-                                   n_workers=n_workers, worker_spec=WORKER)
-            sim.add_trace(copy.deepcopy(trace))
-            t0 = time.perf_counter()
-            m = sim.run(until=DURATION * 6)
-            wall = time.perf_counter() - t0
+    proportional = RebalanceConfig(confirm_windows=2, max_move_frac=0.25)
+    for n_workers, rate in scales:
+        for pol, rb_cfg, tag in (
+                ("tropical", None, "legacy"),
+                ("tropical++", None, "legacy"),
+                ("tropical", proportional, "proportional")):
+            m, wall, transitions = _run(cm, pol, n_workers, rate, duration,
+                                        rebalance_config=rb_cfg)
             rows.append({
-                "policy": pol, "workers": n_workers, "rate": rate,
+                "policy": pol, "rebalance": tag,
+                "workers": n_workers, "rate": rate,
                 "chips": n_workers * WORKER.tp,
                 "requests": m.n_total,
                 "slo_attainment": round(m.slo_attainment, 3),
                 "ttft_p90_s": round(m.ttft_p90, 2),
                 "tpot_p90_s": round(m.tpot_p90, 4),
+                "role_transitions": transitions,
                 "sim_wall_s": round(wall, 2),
                 "req_per_sim_sec": round(m.n_total / max(wall, 1e-9), 0),
             })
+    # hysteresis must not cost attainment at any scale: proportional rows
+    # stay within noise of the matching legacy tropical rows
+    by = {(r["rebalance"], r["workers"]): r for r in rows
+          if r["policy"] == "tropical"}
+    for n_workers, _ in scales:
+        legacy = by[("legacy", n_workers)]["slo_attainment"]
+        prop = by[("proportional", n_workers)]["slo_attainment"]
+        assert prop >= legacy - 0.02, \
+            (n_workers, prop, legacy)
     emit("scale", rows)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    if a.quick:
+        main(scales=[(4, 4.0), (16, 16.0)], duration=60.0)
+    else:
+        main()

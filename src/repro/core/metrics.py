@@ -16,6 +16,28 @@ def percentile(xs: Sequence[float], p: float) -> float:
 
 
 @dataclasses.dataclass
+class ClassMetrics:
+    """Attainment + latency tails for one SLO class (multi-tenant view)."""
+    name: str
+    weight: float
+    n_total: int
+    n_finished: int
+    slo_attainment: float
+    ttft_attainment: float
+    tpot_attainment: float
+    ttft_avg: float
+    ttft_p90: float
+    tpot_avg: float
+    tpot_p90: float
+
+    def row(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "weight", "n_total", "n_finished", "slo_attainment",
+            "ttft_attainment", "tpot_attainment", "ttft_avg", "ttft_p90",
+            "tpot_avg", "tpot_p90")}
+
+
+@dataclasses.dataclass
 class ServeMetrics:
     n_total: int
     n_finished: int
@@ -36,13 +58,42 @@ class ServeMetrics:
     restarts: int
     preemptions: int               # KV watermark/pool evictions
     migration_wait_avg: float      # seconds a migrated request sat on links
+    # multi-tenant view: one ClassMetrics per SLO class seen in the run and
+    # the class-weight-normalised attainment Σ w_c·A_c / Σ w_c (equals
+    # slo_attainment when every request shares one class)
+    per_class: dict = dataclasses.field(default_factory=dict)
+    weighted_attainment: float = float("nan")
 
     def row(self) -> dict:
         return {k: getattr(self, k) for k in (
             "n_total", "n_finished", "slo_attainment", "ttft_attainment",
             "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg",
             "tpot_p90", "queue_avg", "queue_p90", "blocked_time_avg",
-            "migrations", "restarts", "preemptions", "migration_wait_avg")}
+            "migrations", "restarts", "preemptions", "migration_wait_avg",
+            "weighted_attainment")}
+
+    def per_class_rows(self) -> dict:
+        """{class_name: flat metric dict} — the JSON-facing projection."""
+        return {name: cm.row() for name, cm in sorted(self.per_class.items())}
+
+
+def _class_metrics(name: str, weight: float,
+                   reqs: Sequence[Request]) -> ClassMetrics:
+    fin = [r for r in reqs if r.phase == Phase.FINISHED]
+    ttfts = [r.ttft() for r in fin]
+    tpots = [r.tpot() for r in fin]
+    n = max(len(reqs), 1)
+    return ClassMetrics(
+        name=name, weight=weight,
+        n_total=len(reqs), n_finished=len(fin),
+        slo_attainment=sum(1 for r in fin if r.slo_ok()) / n,
+        ttft_attainment=sum(1 for r in fin if r.ttft_ok()) / n,
+        tpot_attainment=sum(1 for r in fin if r.tpot_ok()) / n,
+        ttft_avg=float(np.mean(ttfts)) if ttfts else float("nan"),
+        ttft_p90=percentile(ttfts, 90),
+        tpot_avg=float(np.mean(tpots)) if tpots else float("nan"),
+        tpot_p90=percentile(tpots, 90),
+    )
 
 
 def compute_metrics(requests: Iterable[Request],
@@ -50,6 +101,17 @@ def compute_metrics(requests: Iterable[Request],
                     blocked_times: Optional[dict] = None) -> ServeMetrics:
     reqs = list(requests)
     fin = [r for r in reqs if r.phase == Phase.FINISHED]
+    by_class: dict[str, list[Request]] = {}
+    weights: dict[str, float] = {}
+    for r in reqs:
+        by_class.setdefault(r.slo.name, []).append(r)
+        weights[r.slo.name] = getattr(r.slo, "weight", 1.0)
+    per_class = {name: _class_metrics(name, weights[name], rs)
+                 for name, rs in by_class.items()}
+    w_sum = sum(cm.weight for cm in per_class.values())
+    weighted = sum(cm.weight * cm.slo_attainment
+                   for cm in per_class.values()) / w_sum \
+        if w_sum > 0 else float("nan")
     ttfts = [r.ttft() for r in fin]
     tpots = [r.tpot() for r in fin]
     ok_ttft = [r for r in fin if r.ttft_ok()]
@@ -79,6 +141,8 @@ def compute_metrics(requests: Iterable[Request],
         restarts=sum(r.restarts for r in reqs),
         preemptions=sum(r.preemptions for r in reqs),
         migration_wait_avg=float(np.mean(waits)) if waits else 0.0,
+        per_class=per_class,
+        weighted_attainment=weighted,
     )
 
 

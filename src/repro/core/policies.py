@@ -141,8 +141,13 @@ class DistServePolicy(Policy):
 
 
 class TropicalPolicy(Policy):
-    """SLO-aware multiplexing (the paper's contribution)."""
+    """SLO-aware multiplexing (the paper's contribution). The 'slack'
+    queue discipline adds multi-tenant class-awareness: heterogeneous
+    prefill queues serve tightest-relative-TTFT-slack first, while a
+    single-class queue keeps the paper's exact FCFS order (decision
+    parity with the pre-SLO-class scheduler)."""
     name = "tropical"
+    queue_discipline = "slack"
     prefill_token_budget = 16384
 
     def __init__(self, workers, predictor, n_prefill: Optional[int] = None,
@@ -153,6 +158,21 @@ class TropicalPolicy(Policy):
         for i, w in enumerate(ws):
             w.role = Role.PREFILL if i < n_p else Role.MULTIPLEX
         self.toggle = MultiplexingToggle(ws, predictor, toggle_config)
+        # per-class typical TTFT SLO (EWMA over dispatched requests): live
+        # multi-tenant traffic makes long loose-class prefills run chunked
+        # so a tight-class arrival mid-iteration waits one chunk, not one
+        # long-context prompt. Keyed by class NAME — per-request SLO
+        # variation inside one class never triggers it, so single-class
+        # runs keep the paper's full-prompt budget bit-exactly. An EWMA,
+        # not a lifetime min: one short-prompt outlier with a derived
+        # per-request SLO must not permanently ratchet the class's
+        # tightness. Entries expire after class_ttl dispatches without
+        # traffic: a departed tenant stops taxing the survivors.
+        self._class_ttft: dict[str, float] = {}
+        self._class_last_seen: dict[str, int] = {}
+        self._dispatch_no = 0
+        self.class_ttl = 1024
+        self.class_ttft_alpha = 0.1
 
     def attach_transfer(self, transfer, kv_bytes_fn,
                         state_tokens_fn=None) -> None:
@@ -162,7 +182,23 @@ class TropicalPolicy(Policy):
         self.toggle.state_tokens_fn = state_tokens_fn
 
     def dispatch_prefill(self, req, now):
+        self._dispatch_no += 1
+        name = req.slo.name
+        prev = self._class_ttft.get(name)
+        a = self.class_ttft_alpha
+        self._class_ttft[name] = req.slo.ttft if prev is None \
+            else (1.0 - a) * prev + a * req.slo.ttft
+        self._class_last_seen[name] = self._dispatch_no
+        for stale in [n for n, last in self._class_last_seen.items()
+                      if self._dispatch_no - last > self.class_ttl]:
+            del self._class_last_seen[stale]
+            del self._class_ttft[stale]
         return self.toggle.dispatch_prefill(req, now)
+
+    def _tightest_other_class_ttft(self, name: str) -> float:
+        """Tightest typical TTFT among live classes OTHER than ``name``."""
+        return min((t for n, t in self._class_ttft.items()
+                    if n != name), default=float("inf"))
 
     def dispatch_decode(self, req, now):
         # decode stays in place on a multiplexing worker (Path ②); only
@@ -174,8 +210,21 @@ class TropicalPolicy(Policy):
 
     def batch_rule(self, w, now, head):
         if w.role == Role.PREFILL:
-            return BatchRule(run_decode=True,
-                             prefill_budget=self.prefill_token_budget,
+            budget = self.prefill_token_budget
+            # multi-tenant head-of-line guard: a looser-CLASS head must not
+            # hold the worker for a whole long-context prompt when a
+            # tighter class is queued behind it — or could arrive
+            # mid-iteration (recently dispatched classes proxy for live
+            # tenants). Chunking bounds the tight tenant's wait to one
+            # chunk. Compared at class level (typical vs typical), so
+            # intra-class SLO spread never flips it; single-class traffic
+            # (no OTHER class live) keeps the paper's full-prompt budget.
+            if head is not None:
+                own = self._class_ttft.get(head.slo.name, head.slo.ttft)
+                if own > self._tightest_other_class_ttft(head.slo.name) \
+                        * (1.0 + 1e-9):
+                    budget = self.toggle.cfg.chunk_tokens
+            return BatchRule(run_decode=True, prefill_budget=budget,
                              prefill_exclusive=True)
         # multiplexing worker: piggyback a chunk only when slack allows
         if head is None:

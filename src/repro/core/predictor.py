@@ -120,13 +120,26 @@ class OnlinePredictor(Predictor):
     calibrated-but-conservative predictions. Mixed decode+prefill
     iterations split the observed time proportionally to the current
     corrected per-phase estimates.
+
+    Heterogeneity: a single global scale per phase assumes the base's bias
+    is size-independent, but real profiles miss differently at batch 1
+    than at batch 128 (kernel occupancy, attention-vs-MLP balance). Each
+    observation therefore also feeds a per-(phase, size-bucket) EWMA —
+    buckets are powers of two over prefill tokens / decode batch size —
+    and predictions use the bucket's scale once it has ``bucket_floor``
+    observations, falling back to the global per-phase scale below the
+    floor (cold buckets borrow strength instead of guessing from one
+    sample). ``bucketed=False`` restores pure global correction.
     """
 
     def __init__(self, base: Predictor, alpha: float = 0.2,
-                 clip: tuple[float, float] = (0.125, 8.0)):
+                 clip: tuple[float, float] = (0.125, 8.0),
+                 bucketed: bool = True, bucket_floor: int = 8):
         self.base = base
         self.alpha = alpha
         self.clip = clip
+        self.bucketed = bucketed
+        self.bucket_floor = bucket_floor
         # preserve the base's deliberate conservatism as the convergence
         # target; a margin-free base converges to exact calibration
         self.margin = float(getattr(base, "safety", 1.0))
@@ -134,15 +147,45 @@ class OnlinePredictor(Predictor):
         self.decode_scale = 1.0
         self.prefill_observations = 0
         self.decode_observations = 0
+        self.bucket_scales: dict[tuple[str, int], float] = {}
+        self.bucket_observations: dict[tuple[str, int], int] = {}
+
+    # ------------------------------------------------------------- buckets
+    @staticmethod
+    def _bucket(size: float) -> int:
+        """Power-of-two size bucket: 1, 2, 3… for sizes 1, 2-3, 4-7, …"""
+        return max(int(size), 1).bit_length()
+
+    def _bucket_scale(self, phase: str, size: float,
+                      global_scale: float) -> float:
+        if not self.bucketed:
+            return global_scale
+        key = (phase, self._bucket(size))
+        if self.bucket_observations.get(key, 0) < self.bucket_floor:
+            return global_scale
+        return self.bucket_scales[key]
+
+    def _observe_bucket(self, phase: str, size: float, ratio: float,
+                        global_scale: float) -> None:
+        if not self.bucketed:
+            return
+        key = (phase, self._bucket(size))
+        # seed a cold bucket from the converged global scale, not 1.0:
+        # crossing bucket_floor must refine the prediction, never snap it
+        # back toward the uncorrected base
+        self.bucket_scales[key] = self._ewma(
+            self.bucket_scales.get(key, global_scale), ratio)
+        self.bucket_observations[key] = \
+            self.bucket_observations.get(key, 0) + 1
 
     # ----------------------------------------------------------- predictions
     def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
         return self.base.predict_prefill(tokens, ctx_offset) \
-            * self.prefill_scale
+            * self._bucket_scale("prefill", tokens, self.prefill_scale)
 
     def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
         return self.base.predict_decode_iter(n_decode, sum_ctx) \
-            * self.decode_scale
+            * self._bucket_scale("decode", n_decode, self.decode_scale)
 
     def predict_migration(self, ctx_tokens: int) -> float:
         return self.base.predict_migration(ctx_tokens)
@@ -159,8 +202,10 @@ class OnlinePredictor(Predictor):
             return
         raw = self.base.predict_prefill(tokens, ctx_offset)
         if raw > 0.0 and observed > 0.0:
-            self.prefill_scale = self._ewma(
-                self.prefill_scale, observed * self.margin / raw)
+            ratio = observed * self.margin / raw
+            self._observe_bucket("prefill", tokens, ratio,
+                                 self.prefill_scale)
+            self.prefill_scale = self._ewma(self.prefill_scale, ratio)
             self.prefill_observations += 1
 
     def observe_decode(self, n_decode: int, sum_ctx: float,
@@ -169,8 +214,10 @@ class OnlinePredictor(Predictor):
             return
         raw = self.base.predict_decode_iter(n_decode, sum_ctx)
         if raw > 0.0 and observed > 0.0:
-            self.decode_scale = self._ewma(
-                self.decode_scale, observed * self.margin / raw)
+            ratio = observed * self.margin / raw
+            self._observe_bucket("decode", n_decode, ratio,
+                                 self.decode_scale)
+            self.decode_scale = self._ewma(self.decode_scale, ratio)
             self.decode_observations += 1
 
     def observe_iteration(self, n_decode: int, sum_ctx: float,

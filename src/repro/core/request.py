@@ -25,9 +25,24 @@ class Phase(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
-class SLOSpec:
-    ttft: float     # seconds
-    tpot: float     # seconds / output token
+class SLOClass:
+    """A named SLO tier in a multi-tenant workload (paper §II-B + the
+    per-application TTFT/TPOT requirements of DistServe §5).
+
+    ``name`` identifies the tenant class in per-class metrics and the
+    rebalancer's windowed attainment; ``weight`` is its share in the
+    weighted cluster attainment (Σ w_c·A_c / Σ w_c). The single-tenant
+    legacy entry points construct the anonymous ``default`` class via the
+    ``SLOSpec`` alias, which keeps every pre-multi-tenant call site and
+    pickle/CSV schema working unchanged."""
+    ttft: float             # seconds
+    tpot: float             # seconds / output token
+    name: str = "default"
+    weight: float = 1.0
+
+
+# Legacy alias: an SLOSpec *is* the anonymous default-class SLOClass.
+SLOSpec = SLOClass
 
 
 @dataclasses.dataclass
@@ -136,6 +151,14 @@ class Request:
     def ttft_deadline_slack(self, now: float) -> float:
         """Remaining TTFT budget at ``now`` (before any predicted costs)."""
         return self.slo.ttft - (now - self.arrival_time)
+
+    def rel_ttft_slack(self, now: float) -> float:
+        """TTFT budget remaining as a fraction of the class's whole budget.
+        The class-aware dispatch order serves tightest-relative-slack
+        first: absolute seconds are not comparable across SLO classes (2 s
+        of slack is plenty for an interactive class and nothing for a
+        batch class), the consumed *fraction* is."""
+        return self.ttft_deadline_slack(now) / max(self.slo.ttft, 1e-9)
 
     def reset_for_reprefill(self, now: Optional[float] = None) -> None:
         """KV/state was lost (worker failure, page eviction, failed

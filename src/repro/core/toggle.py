@@ -48,6 +48,14 @@ class WorkerView:
     decode_batch: int = 0                   # running decode requests
     decode_sum_ctx: float = 0.0
     min_tpot_slack: float = float("inf")    # min over running decodes
+    decode_tpot_floor: dict = dataclasses.field(default_factory=dict)
+                                            # class name -> tightest TPOT
+                                            # SLO among running decodes of
+                                            # that class: multi-tenant
+                                            # admission must protect the
+                                            # tightest *resident* class,
+                                            # not just the arriving
+                                            # request's
     # memory — token-level (legacy) and page-level (paged KV accounting)
     kv_used_tokens: float = 0.0
     kv_capacity_tokens: float = 1.0
@@ -168,10 +176,18 @@ class MultiplexingToggle:
             # per-iteration slack must absorb the inserted chunk
             if t_chunk * self.cfg.slack_safety > max(w.min_tpot_slack, 0.0):
                 return False
-            # decode batch already near the TPOT SLO -> no multiplexing
+            # decode batch already near the TPOT SLO -> no multiplexing.
+            # Class-aware: the binding budget is the arriving request's own
+            # TPOT SLO or the tightest resident of a *different* class
+            # (its iterations absorb the inserted chunk too). Keyed on
+            # class identity, so single-class traffic — whatever its
+            # per-request SLO spread — stays the paper's per-request
+            # check exactly.
+            other = min((t for n, t in w.decode_tpot_floor.items()
+                         if n != req.slo.name), default=float("inf"))
             t_iter = self.predictor.predict_decode_iter(
                 w.decode_batch, w.decode_sum_ctx)
-            if t_iter > cfg.decode_iter_guard * req.slo.tpot:
+            if t_iter > cfg.decode_iter_guard * min(req.slo.tpot, other):
                 return False
         return True
 

@@ -15,11 +15,25 @@ can parse runs without scraping the human-readable table. ``--seed``
 drives trace synthesis AND real-executor weight init, making whole runs
 reproducible.
 
+Multi-tenant runs: ``--scenario`` picks a named workload from
+``repro.workload`` (bursty / diurnal / longctx / agentic / mixture / …)
+and ``--slo-classes`` defines explicit SLO tiers, e.g.::
+
+    --slo-classes "interactive:ttft=1.0,tpot=0.05,weight=2,frac=0.6;\
+batch:ttft=10,tpot=0.5,frac=0.4"
+
+(``ttft``/``tpot`` in seconds, or ``scale=K`` for K x the light-load
+latency per §V-A; ``frac`` splits the arrival rate, default equal;
+``weight`` enters the weighted attainment). The JSON object then carries a
+``per_class`` block and ``weighted_attainment``; ``schema_version`` is 2
+since those fields (and the v1 aggregate-only layout) changed.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm-20b \
       --policy tropical --rate 2.0 --duration 120
   PYTHONPATH=src python -m repro.launch.serve --mode real --policy tropical \
       --rate 2.0 --duration 20 --workers 2
+  PYTHONPATH=src python -m repro.launch.serve --scenario mixture --json
 """
 from __future__ import annotations
 
@@ -27,7 +41,96 @@ import argparse
 import json
 from typing import Optional, Sequence
 
-METRICS_SCHEMA_VERSION = 1
+METRICS_SCHEMA_VERSION = 2     # v2: per_class block + weighted_attainment
+
+
+def parse_slo_classes(spec: str) -> list[dict]:
+    """Parse ``name:key=val,...;name:key=val,...`` into class descriptors.
+
+    Keys: ``ttft``/``tpot`` (seconds), ``scale`` (K x the light-load phase
+    latency, resolved against the cost model later), ``weight`` (default
+    1), ``frac`` (rate share, default equal split). Raises ValueError with
+    the offending fragment on malformed input."""
+    classes = []
+    for part in filter(None, (p.strip() for p in spec.split(";"))):
+        name, _, body = part.partition(":")
+        name = name.strip()
+        if not name or not body.strip():
+            raise ValueError(f"malformed class spec {part!r} "
+                             "(want name:key=val,...)")
+        cls = {"name": name, "weight": 1.0, "frac": None,
+               "ttft": None, "tpot": None, "scale": None}
+        for kv in filter(None, (s.strip() for s in body.split(","))):
+            key, eq, val = kv.partition("=")
+            key = key.strip()
+            if not eq or key not in ("ttft", "tpot", "scale", "weight",
+                                     "frac"):
+                raise ValueError(f"unknown key in class {name!r}: {kv!r}")
+            try:
+                cls[key] = float(val)
+            except ValueError:
+                raise ValueError(
+                    f"class {name!r}: {key} must be a number, "
+                    f"got {val!r}") from None
+        has_any_abs = cls["ttft"] is not None or cls["tpot"] is not None
+        has_abs = cls["ttft"] is not None and cls["tpot"] is not None
+        if cls["scale"] is not None and has_any_abs:
+            raise ValueError(
+                f"class {name!r}: give ttft=+tpot= (seconds) OR scale=, "
+                "not both")
+        if not has_abs and cls["scale"] is None:
+            raise ValueError(
+                f"class {name!r} needs ttft=+tpot= (seconds) or scale=")
+        for key in ("ttft", "tpot", "scale", "weight"):
+            if cls[key] is not None and cls[key] <= 0:
+                raise ValueError(f"class {name!r}: {key} must be > 0")
+        if cls["frac"] is not None and not 0.0 < cls["frac"] <= 1.0:
+            raise ValueError(f"class {name!r}: frac must be in (0, 1]")
+        classes.append(cls)
+    if not classes:
+        raise ValueError("empty --slo-classes spec")
+    names = [c["name"] for c in classes]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate class names in spec: {names}")
+    assigned = sum(c["frac"] for c in classes if c["frac"] is not None)
+    if assigned > 1.0 + 1e-9:
+        raise ValueError(
+            f"class rate fracs sum to {assigned:g} > 1 (they split --rate)")
+    unassigned = [c for c in classes if c["frac"] is None]
+    if unassigned:
+        left = 1.0 - assigned
+        if left <= 1e-9:
+            raise ValueError(
+                "explicit fracs consume the whole rate but "
+                + ", ".join(c["name"] for c in unassigned)
+                + " carries no frac= — it would get zero traffic")
+        for c in unassigned:
+            c["frac"] = left / len(unassigned)
+    return classes
+
+
+def _classes_scenario(classes: list[dict], cost) -> "object":
+    """Build a mixture Scenario from parsed --slo-classes descriptors:
+    every class shares the mooncake-like profile and arrival process, but
+    carries its own SLO tier and rate share."""
+    from repro.core.request import SLOClass
+    from repro.workload import (GammaPoisson, MOONCAKE, Scenario,
+                                ScenarioComponent)
+    comps = []
+    for c in classes:
+        if c["ttft"] is not None and c["tpot"] is not None:
+            ttft, tpot = c["ttft"], c["tpot"]
+        else:
+            k = c["scale"]
+            ttft = k * cost.prefill_time(int(MOONCAKE.body_median * 4))
+            tpot = k * cost.decode_iter_time(
+                1, float(MOONCAKE.body_median * 4))
+        slo = SLOClass(ttft=ttft, tpot=tpot, name=c["name"],
+                       weight=c["weight"])
+        comps.append(ScenarioComponent(
+            name=c["name"], profile=MOONCAKE, arrivals=GammaPoisson(),
+            rate_frac=c["frac"], slo=slo, weight=c["weight"]))
+    return Scenario("slo-classes", tuple(comps))
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -43,6 +146,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--tp", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0,
                     help="trace synthesis + real-executor init seed")
+    ap.add_argument("--scenario", default="mooncake",
+                    help="named workload scenario (repro.workload.SCENARIOS"
+                         "; 'mooncake' keeps the legacy §V-A trace)")
+    ap.add_argument("--slo-classes", default=None, metavar="SPEC",
+                    help="multi-tenant SLO tiers: 'name:ttft=S,tpot=S,"
+                         "weight=W,frac=F;...' (or scale=K per §V-A); "
+                         "defines its own mixture workload (mutually "
+                         "exclusive with a non-default --scenario) or "
+                         "maps a --trace-csv slo_class column")
+    ap.add_argument("--trace-csv", default=None, metavar="PATH",
+                    help="replay a recorded Mooncake-schema CSV instead of "
+                         "synthesising (--rate/--duration/--scenario are "
+                         "ignored for arrivals)")
     ap.add_argument("--fail-worker", type=int, default=None,
                     help="inject a worker failure at duration/2")
     ap.add_argument("--ici-bw", type=float, default=None, metavar="GBPS",
@@ -79,7 +195,26 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     from repro.configs import get_config, get_smoke
     from repro.serving.costmodel import WorkerSpec
     from repro.serving.simulator import build_cluster
-    from repro.serving.trace import generate_trace
+    from repro.workload import SCENARIOS, generate_trace, get_scenario, \
+        load_csv
+
+    if args.scenario not in SCENARIOS:
+        ap.error(f"--scenario must be one of {sorted(SCENARIOS)}")
+    classes = None
+    if args.slo_classes is not None:
+        try:
+            classes = parse_slo_classes(args.slo_classes)
+        except ValueError as e:
+            ap.error(f"--slo-classes: {e}")
+        if args.scenario != "mooncake" and not args.trace_csv:
+            # --slo-classes builds its own mixture workload (one mooncake
+            # component per class); silently discarding the named
+            # scenario's profiles would measure a different workload than
+            # requested
+            ap.error("--slo-classes defines its own workload and cannot "
+                     "be combined with --scenario (use --trace-csv to "
+                     "replay recorded traffic under these tiers, or drop "
+                     "one of the flags)")
 
     if args.mode == "real":
         cfg = get_smoke(args.arch)
@@ -95,7 +230,23 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         ici_links=args.ici_links, page_size=args.page_size,
         online_predictor=args.online_predictor,
         role_rebalance=False if args.no_rebalance else "auto")
-    trace = generate_trace(args.rate, args.duration, cost, seed=args.seed)
+    if classes is not None:
+        scenario = _classes_scenario(classes, cost)
+        if args.trace_csv:
+            trace = load_csv(args.trace_csv, cost, classes=scenario.classes)
+        else:
+            trace = scenario.generate(args.rate, args.duration, cost,
+                                      seed=args.seed)
+    elif args.trace_csv:
+        trace = load_csv(args.trace_csv, cost)
+    elif args.scenario != "mooncake":
+        trace = get_scenario(args.scenario).generate(
+            args.rate, args.duration, cost, seed=args.seed)
+    else:
+        # legacy single-class path: RNG-stream identical to pre-workload
+        # releases, so seeded runs reproduce bit-exactly
+        trace = generate_trace(args.rate, args.duration, cost,
+                               seed=args.seed)
     if args.mode == "real":
         import jax
         from repro.serving.executor import ClusterRealExecutors
@@ -112,10 +263,21 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                            recover_after=args.duration / 4)
     m = sim.run(until=args.duration * 10)
 
+    # label the workload that actually ran: CSV replay and --slo-classes
+    # both bypass the named generator, and the JSON is the machine-read
+    # contract downstream consumers group runs by
+    if args.trace_csv:
+        scenario_label = "trace-csv"
+    elif classes is not None:
+        scenario_label = "slo-classes"
+    else:
+        scenario_label = args.scenario
     row = m.row()
     row.update(policy=args.policy, arch=cfg.name, mode=args.mode,
                rate=args.rate, workers=args.workers, seed=args.seed,
-               schema_version=METRICS_SCHEMA_VERSION)
+               scenario=scenario_label,
+               schema_version=METRICS_SCHEMA_VERSION,
+               per_class=m.per_class_rows())
     if sim.transfer is not None:
         row.update(kv_bytes_migrated=sim.transfer.bytes_moved,
                    transfer_seconds=sim.transfer.total_transfer_seconds)
@@ -129,7 +291,13 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         print(json.dumps(row, indent=1, sort_keys=True, default=float))
     else:
         for k, v in row.items():
+            if k == "per_class":
+                continue
             print(f"{k:>22}: {v}")
+        for name, cm in row["per_class"].items():
+            cols = " ".join(f"{ck}={cv:.4g}" if isinstance(cv, float)
+                            else f"{ck}={cv}" for ck, cv in cm.items())
+            print(f"{'class ' + name:>22}: {cols}")
     return row
 
 

@@ -29,7 +29,7 @@ from repro.core.policies import Policy
 from repro.core.request import Phase, Request
 from repro.sched.backend import CostModelBackend, ExecutionBackend
 from repro.sched.rebalance import RoleRebalancer
-from repro.serving.engine import IterationPlan, Worker
+from repro.serving.engine import IterationPlan, Worker, _slack_key
 from repro.serving.transfer import LinkSpec
 
 
@@ -96,7 +96,15 @@ class ClusterScheduler:
         self._kick(wid, now)
 
     def _drain_global_queue(self, now: float) -> None:
-        for req in list(self.global_queue):
+        queue = list(self.global_queue)
+        if len({r.slo.name for r in queue}) > 1:
+            # multi-tenant overflow: offer dispatch slots tightest-relative-
+            # TTFT-slack first across classes (absolute seconds don't
+            # compare across SLO tiers), hopeless requests last; a single-
+            # class queue keeps its arrival order, preserving pre-SLO-class
+            # decision parity
+            queue.sort(key=_slack_key(now))
+        for req in queue:
             self._try_dispatch(req, now)
 
     def _kick(self, wid: int, now: float) -> None:
@@ -104,7 +112,7 @@ class ClusterScheduler:
         w = self.workers[wid]
         if self._busy[wid] or not w.view.alive:
             return
-        head = w.prefill_queue[0] if w.prefill_queue else None
+        head = w.peek_prefill(now)
         rule = self.policy.batch_rule(w.view, now, head)
         plan = w.compose_iteration(rule, now)
         if plan.empty:

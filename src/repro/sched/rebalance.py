@@ -10,10 +10,26 @@ scheduler records every first-token (TTFT) and every finish (TPOT) outcome,
 and at each review the rebalancer promotes/demotes PREFILL / MULTIPLEX
 workers toward whichever phase is missing its SLO — falling back to the
 paper's HBM-watermark rule, which stays load-bearing under memory pressure.
+
+Multi-tenant: outcomes are windowed **per SLO class** and reviews act on
+the *worst* class's attainment, so a healthy aggregate can no longer mask
+a starving tight-SLO tenant behind an over-served batch tenant (the
+failure mode "Taming Request Imbalance" (arXiv:2605.02329) schedules
+against). Single-class traffic reduces to the old aggregate window.
+
+At 100+-worker scale, one role move per review is too slow to chase a
+breach. ``confirm_windows``/``max_move_frac`` add proportional moves with
+hysteresis: after ``confirm_windows`` *consecutive* breach reviews (a lone
+bad window never triggers a reconfiguration), move
+``ceil(deficit_fraction x convertible workers)`` at once, capped at
+``ceil(max_move_frac x alive workers)`` per review. Defaults reproduce the
+legacy controller exactly (act on the first breach, one worker per
+review).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Optional
 
@@ -24,41 +40,72 @@ from repro.core.toggle import Role, WorkerView
 @dataclasses.dataclass(frozen=True)
 class RebalanceConfig:
     interval: float = 5.0         # seconds between reviews
-    window: int = 64              # outcomes per sliding window
-    min_samples: int = 12         # don't act on thinner evidence
+    window: int = 64              # outcomes per class per sliding window
+    min_samples: int = 12         # don't act on thinner per-class evidence
     ttft_target: float = 0.9      # windowed attainment floors
     tpot_target: float = 0.9
     cooldown: float = 10.0        # seconds between role changes
     demote_hbm_max: float = 0.5   # only turn an M into a P below this util
     hbm_watermark: float = 0.90   # paper rule: all M above -> P becomes M
+    confirm_windows: int = 1      # consecutive breach reviews before acting
+                                  # (hysteresis; 1 = legacy immediate)
+    max_move_frac: float = 0.0    # >0: proportional moves, ceil(deficit x
+                                  # convertible) capped at ceil(frac x
+                                  # alive) per review; 0 = legacy single
+                                  # move
 
 
 class RoleRebalancer:
     """Windowed-attainment role controller. The scheduler feeds it outcome
-    events; ``step`` applies at most one role change per review."""
+    events; ``step`` applies at most one review's worth of role changes."""
 
     def __init__(self, config: RebalanceConfig = RebalanceConfig()):
         self.cfg = config
-        self.ttft_window: deque[bool] = deque(maxlen=config.window)
-        self.tpot_window: deque[bool] = deque(maxlen=config.window)
+        # per-SLO-class sliding windows; legacy aggregate callers land in
+        # the eagerly-created "default" class deques (kept as attributes)
+        self.ttft_windows: dict[str, deque] = {}
+        self.tpot_windows: dict[str, deque] = {}
+        self.ttft_window = self._window(self.ttft_windows, "default")
+        self.tpot_window = self._window(self.tpot_windows, "default")
         self._last_change = float("-inf")
+        self._ttft_streak = 0         # consecutive breach reviews
+        self._tpot_streak = 0
         self.transitions: list[tuple[float, int, Role]] = []   # audit trail
+
+    def _window(self, windows: dict[str, deque], name: str) -> deque:
+        if name not in windows:
+            windows[name] = deque(maxlen=self.cfg.window)
+        return windows[name]
 
     # ------------------------------------------------------------- signals
     def record_first_token(self, req: Request) -> None:
-        self.ttft_window.append(req.ttft_ok())
+        self._window(self.ttft_windows, req.slo.name).append(req.ttft_ok())
 
     def record_finish(self, req: Request) -> None:
-        self.tpot_window.append(req.tpot_ok())
+        self._window(self.tpot_windows, req.slo.name).append(req.tpot_ok())
 
-    @staticmethod
-    def _attainment(window: deque) -> Optional[float]:
-        return sum(window) / len(window) if window else None
+    def _worst_attainment(self, windows: dict[str, deque]) -> Optional[float]:
+        """Attainment of the worst class with enough evidence (None when no
+        class clears ``min_samples``). With one populated class this *is*
+        the aggregate window — the pre-multi-tenant behaviour."""
+        atts = [sum(w) / len(w) for w in windows.values()
+                if len(w) >= self.cfg.min_samples]
+        return min(atts) if atts else None
 
     # -------------------------------------------------------------- review
+    def _n_moves(self, deficit: float, convertible: int, alive: int) -> int:
+        """Workers to move this review: proportional to how far the worst
+        class is below target, bounded by the per-review cap."""
+        if self.cfg.max_move_frac <= 0.0:
+            return 1
+        want = math.ceil(deficit * convertible)
+        cap = math.ceil(self.cfg.max_move_frac * alive)
+        return max(1, min(want, cap, convertible))
+
     def step(self, workers: dict[int, WorkerView], now: float) -> Optional[str]:
-        """Review roles; mutate at most one ``WorkerView.role``. Returns a
-        human-readable action description, or None."""
+        """Review roles; mutate ``WorkerView.role`` on up to one review's
+        move budget. Returns a human-readable action description, or
+        None."""
         cfg = self.cfg
         alive = [w for w in workers.values() if w.alive]
         m = [w for w in alive if w.role == Role.MULTIPLEX]
@@ -68,37 +115,51 @@ class RoleRebalancer:
         # above the HBM watermark starves decode admission cluster-wide
         if m and p and all(w.hbm_util > cfg.hbm_watermark for w in m):
             conv = min(p, key=lambda w: w.queued_prefill_tokens)
-            return self._apply(conv, Role.MULTIPLEX, now, "hbm-pressure")
+            return self._apply([conv], Role.MULTIPLEX, now, "hbm-pressure")
+
+        ttft_att = self._worst_attainment(self.ttft_windows)
+        tpot_att = self._worst_attainment(self.tpot_windows)
+        ttft_bad = ttft_att is not None and ttft_att < cfg.ttft_target
+        tpot_bad = tpot_att is not None and tpot_att < cfg.tpot_target
+        # hysteresis streaks advance on every review, including those that
+        # land inside the cooldown — the cooldown delays acting, it must
+        # not erase the evidence that a breach persisted through it
+        self._ttft_streak = self._ttft_streak + 1 if ttft_bad else 0
+        self._tpot_streak = self._tpot_streak + 1 if tpot_bad else 0
 
         if now - self._last_change < cfg.cooldown:
             return None
 
-        ttft_att = self._attainment(self.ttft_window)
-        tpot_att = self._attainment(self.tpot_window)
-        ttft_bad = (len(self.ttft_window) >= cfg.min_samples
-                    and ttft_att < cfg.ttft_target)
-        tpot_bad = (len(self.tpot_window) >= cfg.min_samples
-                    and tpot_att < cfg.tpot_target)
-
-        if ttft_bad and not tpot_bad and len(m) > 1:
+        if ttft_bad and not tpot_bad \
+                and self._ttft_streak >= cfg.confirm_windows and len(m) > 1:
             # prefill capacity starved while decode is healthy: flip the
-            # least decode-committed multiplexer (cheap direction — running
-            # decodes drain in place, no migration)
+            # least decode-committed multiplexers (cheap direction —
+            # running decodes drain in place, no migration)
             cands = [w for w in m if w.hbm_util < cfg.demote_hbm_max]
             if cands:
-                conv = min(cands, key=lambda w: (w.decode_batch,
-                                                 w.decode_sum_ctx))
-                return self._apply(conv, Role.PREFILL, now, "ttft-window")
-        if tpot_bad and not ttft_bad and p:
-            # decode capacity starved: the least-queued prefill worker
-            # starts multiplexing (admission-only change)
-            conv = min(p, key=lambda w: w.queued_prefill_tokens)
-            return self._apply(conv, Role.MULTIPLEX, now, "tpot-window")
+                deficit = (cfg.ttft_target - ttft_att) / cfg.ttft_target
+                n = min(self._n_moves(deficit, len(cands), len(alive)),
+                        len(m) - 1)         # never demote the last M
+                cands.sort(key=lambda w: (w.decode_batch, w.decode_sum_ctx))
+                return self._apply(cands[:n], Role.PREFILL, now,
+                                   "ttft-window")
+        if tpot_bad and not ttft_bad \
+                and self._tpot_streak >= cfg.confirm_windows and p:
+            # decode capacity starved: the least-queued prefill workers
+            # start multiplexing (admission-only change)
+            deficit = (cfg.tpot_target - tpot_att) / cfg.tpot_target
+            n = self._n_moves(deficit, len(p), len(alive))
+            p.sort(key=lambda w: w.queued_prefill_tokens)
+            return self._apply(p[:n], Role.MULTIPLEX, now, "tpot-window")
         return None
 
-    def _apply(self, w: WorkerView, role: Role, now: float,
+    def _apply(self, ws: list[WorkerView], role: Role, now: float,
                reason: str) -> str:
-        w.role = role
+        for w in ws:
+            w.role = role
+            self.transitions.append((now, w.wid, role))
         self._last_change = now
-        self.transitions.append((now, w.wid, role))
-        return f"{reason}: worker {w.wid} -> {role.value}"
+        self._ttft_streak = 0
+        self._tpot_streak = 0
+        wids = ", ".join(str(w.wid) for w in ws)
+        return f"{reason}: worker {wids} -> {role.value}"

@@ -22,6 +22,20 @@ from repro.serving.costmodel import CostModel
 from repro.serving.kvcache import PageAccountant
 
 
+def _slack_key(now: float):
+    """Sort key for the class-aware 'slack' discipline: tightest relative
+    TTFT slack first among requests that can still make their deadline;
+    already-hopeless requests (deadline passed — TTFT is unattainable
+    whatever happens next) go last, exactly like the 'edf' discipline's
+    hopeless demotion — spending capacity on them ahead of salvageable
+    work buys no attainment. Shared by worker queues and the scheduler's
+    global overflow queue so both orders agree."""
+    def key(r: Request):
+        rel = r.rel_ttft_slack(now)
+        return (rel <= 0.0, rel, r.arrival_time, r.rid)
+    return key
+
+
 @dataclasses.dataclass
 class IterationPlan:
     decode_reqs: list          # requests getting one token this iteration
@@ -245,12 +259,24 @@ class Worker:
 
     def _prefill_order(self, now: float) -> list[Request]:
         """Queue order. 'fcfs' (the discipline of vLLM/Sarathi/DistServe and
-        the paper's Tropical). 'edf' is the beyond-paper SLO-aware order:
-        earliest-deadline-first among requests that can still make TTFT;
-        already-hopeless requests are served last (spending capacity on
-        them in deadline order buys no attainment)."""
+        the paper's Tropical). 'slack' is the multi-tenant class-aware
+        order: tightest-relative-TTFT-slack first — absolute seconds are
+        not comparable across SLO classes, the consumed budget *fraction*
+        is. A homogeneous queue (every request in one class) keeps the
+        exact FCFS admission order, so single-class runs are
+        decision-identical to the paper's discipline (an interactive-class
+        arrival only ever overtakes *other-class* work). 'edf' is the
+        beyond-paper SLO-aware order: earliest-deadline-first among
+        requests that can still make TTFT; already-hopeless requests are
+        served last (spending capacity on them in deadline order buys no
+        attainment)."""
         if self.queue_discipline == "fcfs":
             return list(self.prefill_queue)
+
+        if self.queue_discipline == "slack":
+            if len({r.slo.name for r in self.prefill_queue}) <= 1:
+                return list(self.prefill_queue)
+            return sorted(self.prefill_queue, key=_slack_key(now))
 
         def key(r: Request):
             deadline = r.arrival_time + r.slo.ttft
@@ -260,6 +286,19 @@ class Worker:
             return (hopeless, deadline, r.rid)
 
         return sorted(self.prefill_queue, key=key)
+
+    def peek_prefill(self, now: float) -> Optional[Request]:
+        """Head-of-queue under the active discipline — what the policy's
+        ``batch_rule`` sizes its chunk budget against. 'fcfs'/'edf' keep
+        the legacy raw queue head; 'slack' surfaces the class-aware order's
+        head (identical for a single-class queue). O(n) min, not a full
+        sort — this runs on every _kick."""
+        if not self.prefill_queue:
+            return None
+        if self.queue_discipline == "slack" and \
+                len({r.slo.name for r in self.prefill_queue}) > 1:
+            return min(self.prefill_queue, key=_slack_key(now))
+        return self.prefill_queue[0]
 
     def _next_admissible_prefill(self, now: float) -> Optional[Request]:
         for r in self._prefill_order(now):
@@ -300,6 +339,11 @@ class Worker:
         v.min_tpot_slack = min(
             (r.effective_slack(base_iter) for r in self.decode_running),
             default=float("inf"))
+        floors: dict[str, float] = {}
+        for r in self.decode_running:
+            name = r.slo.name
+            floors[name] = min(floors.get(name, float("inf")), r.slo.tpot)
+        v.decode_tpot_floor = floors
         v.total_pages = self.pages.total_pages
         v.free_pages = self.pages.free_pages
         v.page_size = self.pages.page_size

@@ -1,122 +1,22 @@
-"""Workload traces.
+"""Legacy import path — the workload subsystem lives in ``repro.workload``.
 
-The Mooncake trace (paper §V-A) is not packaged offline, so we synthesise a
-trace whose marginals match the paper's characterisation (Fig. 3):
-
-* prefill lengths: long-tail — lognormal body + heavy lognormal tail
-  (the paper: "the distribution of prefill text lengths follows a long-tail
-  pattern", inputs far more dynamic than outputs);
-* outputs: short, low-variance lognormal;
-* arrivals: Gamma-modulated Poisson (doubly stochastic) reproducing the
-  short-term burstiness of Fig. 3(a).
-
-``load_csv``/``save_csv`` use the Mooncake trace schema (timestamp_ms,
-input_length, output_length) so the real trace drops in when available.
+Everything that used to be defined here (the mooncake-like profile,
+Gamma-modulated arrivals, ``generate_trace``, the Mooncake-schema CSV
+round-trip) moved into the ``repro.workload`` package, which adds named
+scenarios (bursty / diurnal / longctx / agentic / mixture), SLO classes
+and replay iterators on top. This shim keeps every pre-package import
+working; ``generate_trace`` remains RNG-stream identical, so seeded
+benchmark numbers reproduce exactly.
 """
-from __future__ import annotations
+from repro.workload import (AGENTIC, LONGCTX, MOONCAKE,  # noqa: F401
+                            SCENARIOS, STEADY, Scenario, ScenarioComponent,
+                            TraceProfile, generate_trace, get_scenario,
+                            load_csv, replay_csv, sample_arrivals,
+                            sample_lengths, save_csv)
 
-import csv
-import dataclasses
-import math
-from typing import Optional, Sequence
-
-import numpy as np
-
-from repro.core.metrics import derive_slos
-from repro.core.request import Request, SLOSpec
-
-
-@dataclasses.dataclass(frozen=True)
-class TraceProfile:
-    name: str = "mooncake-like"
-    # input-length mixture (lognormal body + tail)
-    body_median: float = 2048.0
-    body_sigma: float = 1.1
-    tail_median: float = 16384.0
-    tail_sigma: float = 0.7
-    tail_frac: float = 0.15
-    min_input: int = 16
-    max_input: int = 32768      # Mooncake-like long-context cap: the tail
-                                # service time stays within ~1x of the TTFT
-                                # SLO (as in the paper's A100 setup), so
-                                # head-of-line effects degrade rather than
-                                # structurally break attainment
-    # output lengths
-    out_median: float = 256.0
-    out_sigma: float = 0.7
-    min_output: int = 2
-    max_output: int = 2048
-    # burstiness: per-window Gamma(shape k) rate modulation; k->inf = Poisson
-    burst_window: float = 10.0      # seconds
-    burst_shape: float = 2.0
-
-
-MOONCAKE = TraceProfile()
-STEADY = TraceProfile(name="steady", tail_frac=0.05, burst_shape=50.0)
-
-
-def sample_lengths(rng: np.random.Generator, n: int,
-                   prof: TraceProfile) -> tuple[np.ndarray, np.ndarray]:
-    tail = rng.random(n) < prof.tail_frac
-    body = rng.lognormal(math.log(prof.body_median), prof.body_sigma, n)
-    tl = rng.lognormal(math.log(prof.tail_median), prof.tail_sigma, n)
-    inputs = np.where(tail, tl, body)
-    inputs = np.clip(inputs, prof.min_input, prof.max_input).astype(int)
-    outputs = rng.lognormal(math.log(prof.out_median), prof.out_sigma, n)
-    outputs = np.clip(outputs, prof.min_output, prof.max_output).astype(int)
-    return inputs, outputs
-
-
-def sample_arrivals(rng: np.random.Generator, rate: float, duration: float,
-                    prof: TraceProfile) -> np.ndarray:
-    """Gamma-modulated Poisson arrivals over [0, duration)."""
-    times: list[float] = []
-    t = 0.0
-    while t < duration:
-        window_rate = rate * rng.gamma(prof.burst_shape, 1.0 / prof.burst_shape)
-        end = min(t + prof.burst_window, duration)
-        n = rng.poisson(window_rate * (end - t))
-        times.extend(rng.uniform(t, end, n))
-        t = end
-    return np.sort(np.asarray(times))
-
-
-def generate_trace(rate: float, duration: float, cost_model,
-                   seed: int = 0, profile: TraceProfile = MOONCAKE,
-                   slo_scale: tuple[float, float] = (5.0, 5.0),
-                   fixed_slo: Optional[SLOSpec] = None) -> list[Request]:
-    """Paper §V-A SLO setting: TTFT SLO = 5x the light-load prefill latency
-    of the request's own prompt; TPOT SLO = 5x the light-load decode
-    latency (per-request, as in DistServe)."""
-    rng = np.random.default_rng(seed)
-    times = sample_arrivals(rng, rate, duration, profile)
-    inputs, outputs = sample_lengths(rng, len(times), profile)
-    reqs = []
-    for i, (t, pl, ol) in enumerate(zip(times, inputs, outputs)):
-        if fixed_slo is not None:
-            slo = fixed_slo
-        else:
-            slo = derive_slos(cost_model, int(pl), slo_scale[0], slo_scale[1])
-        reqs.append(Request(rid=i, arrival_time=float(t), prompt_len=int(pl),
-                            output_len=int(ol), slo=slo))
-    return reqs
-
-
-def save_csv(path: str, requests: Sequence[Request]) -> None:
-    with open(path, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(["timestamp_ms", "input_length", "output_length"])
-        for r in requests:
-            w.writerow([int(r.arrival_time * 1000), r.prompt_len, r.output_len])
-
-
-def load_csv(path: str, cost_model, slo_scale=(5.0, 5.0)) -> list[Request]:
-    reqs = []
-    with open(path) as f:
-        for i, row in enumerate(csv.DictReader(f)):
-            pl = int(row["input_length"])
-            slo = derive_slos(cost_model, pl, *slo_scale)
-            reqs.append(Request(
-                rid=i, arrival_time=int(row["timestamp_ms"]) / 1000.0,
-                prompt_len=pl, output_len=int(row["output_length"]), slo=slo))
-    return reqs
+__all__ = [
+    "AGENTIC", "LONGCTX", "MOONCAKE", "SCENARIOS", "STEADY", "Scenario",
+    "ScenarioComponent", "TraceProfile", "generate_trace", "get_scenario",
+    "load_csv", "replay_csv", "sample_arrivals", "sample_lengths",
+    "save_csv",
+]

@@ -107,6 +107,62 @@ def test_online_predictor_clips_outliers(cost):
     assert pred.prefill_scale >= pred.clip[0]
 
 
+def test_online_predictor_bucketed_corrects_size_dependent_bias(cost):
+    """Heterogeneity: when the base's error differs by batch size (real
+    profiles miss differently at batch 1 than 64), per-(phase, bucket)
+    EWMAs converge to each bucket's own bias while the single global
+    scale can only average them."""
+    pred = OnlinePredictor(AnalyticalPredictor(cost), bucket_floor=8)
+    # executor runs 2x slower than the cost model at batch 2, 2x faster
+    # at batch 64; converged predictions land at safety x each truth
+    for _ in range(60):
+        pred.observe_decode(2, 2 * 512.0,
+                            cost.decode_iter_time(2, 2 * 512.0) * 2.0)
+        pred.observe_decode(64, 64 * 512.0,
+                            cost.decode_iter_time(64, 64 * 512.0) * 0.5)
+    want_small = cost.decode_iter_time(2, 2 * 512.0) * 2.0 * 1.1
+    want_big = cost.decode_iter_time(64, 64 * 512.0) * 0.5 * 1.1
+    assert pred.predict_decode_iter(2, 2 * 512.0) == \
+        pytest.approx(want_small, rel=0.1)
+    assert pred.predict_decode_iter(64, 64 * 512.0) == \
+        pytest.approx(want_big, rel=0.1)
+    # the global scale averaged the two regimes and fits neither
+    assert pred.decode_scale == pytest.approx(1.25, rel=0.3)
+
+
+def test_online_predictor_cold_bucket_falls_back_to_global(cost):
+    """Below the sample floor a bucket borrows the global per-phase scale
+    instead of acting on thin evidence."""
+    pred = OnlinePredictor(BiasedPredictor(cost, 2.0), bucket_floor=10)
+    for _ in range(40):
+        pred.observe_prefill(2048, 0, cost.prefill_time(2048))
+    # bucket for 2048 tokens is warm (40 >= 10): uses its own scale
+    assert ("prefill", pred._bucket(2048)) in pred.bucket_scales
+    # a different, never-observed bucket uses the global corrected scale
+    cold = pred.predict_prefill(64)
+    assert cold == pytest.approx(
+        pred.base.predict_prefill(64) * pred.prefill_scale)
+    assert pred.prefill_scale == pytest.approx(0.5, rel=0.1)
+    # 9 observations in a fresh bucket still fall back; the 10th flips it
+    pred2 = OnlinePredictor(BiasedPredictor(cost, 2.0), bucket_floor=10)
+    for _ in range(9):
+        pred2.observe_prefill(64, 0, cost.prefill_time(64))
+    key = ("prefill", pred2._bucket(64))
+    assert pred2.bucket_observations[key] == 9
+    assert pred2.predict_prefill(64) == pytest.approx(
+        pred2.base.predict_prefill(64) * pred2.prefill_scale)
+    pred2.observe_prefill(64, 0, cost.prefill_time(64))
+    assert pred2.predict_prefill(64) == pytest.approx(
+        pred2.base.predict_prefill(64) * pred2.bucket_scales[key])
+
+
+def test_online_predictor_unbucketed_opt_out(cost):
+    pred = OnlinePredictor(AnalyticalPredictor(cost), bucketed=False)
+    for _ in range(20):
+        pred.observe_prefill(1024, 0, cost.prefill_time(1024))
+    assert not pred.bucket_scales and not pred.bucket_observations
+
+
 def test_online_predictor_ignores_degenerate_observations(cost):
     pred = OnlinePredictor(AnalyticalPredictor(cost))
     pred.observe_prefill(0, 0, 0.5)        # zero-token prediction

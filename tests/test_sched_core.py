@@ -22,6 +22,16 @@ def _smoke_trace(n=6, prompt=24, out=5):
                     output_len=out, slo=slo) for i in range(n)]
 
 
+def _smoke_trace_2class(n=8, prompt=24, out=5):
+    """Alternating tight/loose SLO classes — exercises the class-aware
+    (tightest-relative-slack-first) dispatch ordering."""
+    tight = SLOSpec(ttft=3.0, tpot=1.0, name="interactive", weight=2.0)
+    loose = SLOSpec(ttft=60.0, tpot=10.0, name="batch")
+    return [Request(rid=i, arrival_time=0.05 * i, prompt_len=prompt,
+                    output_len=out, slo=loose if i % 2 else tight)
+            for i in range(n)]
+
+
 # ------------------------------------------------------------ backend parity
 
 @pytest.mark.parametrize("policy", ["tropical", "distserve"])
@@ -59,6 +69,67 @@ def test_sim_and_real_backend_make_identical_decisions(policy):
         gen = [e.generated[r.rid] for e in execs.execs.values()
                if r.rid in e.generated]
         assert gen and max(len(g) for g in gen) >= r.output_len
+
+
+def test_sim_and_real_backend_parity_with_two_slo_classes():
+    """Multi-tenant decision parity: the class-aware ordering (tightest
+    relative slack first across heterogeneous classes) is itself part of
+    the one scheduling code path — sim and real backends must agree on it
+    too, and per-class metrics must match."""
+    from repro.serving.executor import ClusterRealExecutors
+
+    cfg = get_smoke("deepseek-7b")
+    spec = WorkerSpec(tp=1)
+    trace = _smoke_trace_2class()
+
+    sim_a, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=spec,
+                             record_decisions=True)
+    sim_a.add_trace(copy.deepcopy(trace))
+    m_a = sim_a.run(until=3000.0)
+
+    execs = ClusterRealExecutors(cfg, 2, max_slots=8, max_len=64)
+    sim_b, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=spec,
+                             record_decisions=True,
+                             backend=execs.as_backend(clock="model"))
+    sim_b.add_trace(copy.deepcopy(trace))
+    m_b = sim_b.run(until=3000.0)
+
+    assert m_a.n_finished == m_b.n_finished == len(trace)
+    assert sim_a.decisions == sim_b.decisions
+    assert set(m_a.per_class) == set(m_b.per_class) \
+        == {"interactive", "batch"}
+    for name in m_a.per_class:
+        assert m_a.per_class[name].slo_attainment == \
+            m_b.per_class[name].slo_attainment
+
+
+def test_slack_discipline_orders_multiclass_tightest_first():
+    """Unit view of the class-aware queue: heterogeneous classes order by
+    relative TTFT slack; a homogeneous queue keeps exact FCFS admission
+    order (single-class decision parity with the paper's discipline)."""
+    from repro.serving.engine import Worker
+
+    cfg = get_config("internlm-20b")
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    w = Worker(0, cost, queue_discipline="slack")
+    tight = SLOSpec(ttft=2.0, tpot=0.1, name="interactive")
+    loose = SLOSpec(ttft=40.0, tpot=1.0, name="batch")
+    a = Request(rid=0, arrival_time=0.0, prompt_len=64, output_len=4,
+                slo=loose)
+    b = Request(rid=1, arrival_time=0.5, prompt_len=64, output_len=4,
+                slo=tight)
+    w.admit_prefill(a, 0.0)
+    w.admit_prefill(b, 0.5)
+    # at t=1.0 the tight request has burnt 25% of budget, the loose 2.5%:
+    # the tight one overtakes the earlier loose arrival
+    assert [r.rid for r in w._prefill_order(1.0)] == [1, 0]
+    assert w.peek_prefill(1.0).rid == 1
+    # homogeneous queue (same class): exact admission order
+    w2 = Worker(1, cost, queue_discipline="slack")
+    for i, arr in enumerate((0.0, 0.5)):
+        w2.admit_prefill(Request(rid=i, arrival_time=arr, prompt_len=64,
+                                 output_len=4, slo=loose), arr)
+    assert [r.rid for r in w2._prefill_order(1.0)] == [0, 1]
 
 
 def test_simulator_is_a_thin_driver():
@@ -189,6 +260,76 @@ def test_rebalancer_needs_evidence():
     rb.ttft_window.extend([False] * 3)            # too thin
     assert rb.step(views, now=100.0) is None
     assert views[0].role == Role.PREFILL
+
+
+def test_rebalancer_worst_class_governs_not_aggregate():
+    """A starving tight class must trigger a role move even when the
+    aggregate (dominated by an over-served batch class) looks healthy."""
+    rb = RoleRebalancer(RebalanceConfig(min_samples=8))
+    views = _views([Role.PREFILL, Role.MULTIPLEX, Role.MULTIPLEX])
+    tight = SLOSpec(ttft=1.0, tpot=0.1, name="interactive")
+    loose = SLOSpec(ttft=100.0, tpot=10.0, name="batch")
+
+    def _outcome(slo, ttft_ok):
+        r = Request(rid=0, arrival_time=0.0, prompt_len=8, output_len=4,
+                    slo=slo)
+        r.first_token_time = (0.5 if ttft_ok else 2.0) * slo.ttft
+        r.finish_time = r.first_token_time      # 1-token finish: tpot 0.0
+        return r
+
+    # 30 batch successes drown 10 interactive failures in the aggregate
+    # (75% overall > 0.9 target would still fail, so use 90+%): 60 batch
+    # OK + 10 interactive KO -> aggregate 86% but per-class worst = 0%
+    for _ in range(60):
+        rb.record_first_token(_outcome(loose, True))
+    for _ in range(10):
+        rb.record_first_token(_outcome(tight, False))
+    for _ in range(20):
+        rb.record_finish(_outcome(loose, True))     # tpot healthy
+    assert rb._worst_attainment(rb.ttft_windows) == 0.0
+    action = rb.step(views, now=100.0)
+    assert action is not None and "ttft-window" in action
+
+
+def test_rebalancer_proportional_moves_with_cap():
+    """max_move_frac > 0: ceil(deficit x convertible) workers flip in one
+    review, capped at ceil(frac x alive) — the 100+-worker scaling mode."""
+    rb = RoleRebalancer(RebalanceConfig(
+        min_samples=8, max_move_frac=0.25, confirm_windows=1))
+    # 2 P + 10 M, decode healthy, TTFT at 45% of the 90% target
+    views = _views([Role.PREFILL] * 2 + [Role.MULTIPLEX] * 10)
+    for ok in ([False] * 11 + [True] * 9):      # attainment 0.45
+        rb.ttft_window.append(ok)
+    for ok in [True] * 12:
+        rb.tpot_window.append(ok)
+    action = rb.step(views, now=100.0)
+    assert action is not None and "ttft-window" in action
+    moved = sum(1 for v in views.values() if v.role == Role.PREFILL) - 2
+    # deficit = (0.9-0.45)/0.9 = 0.5 -> want ceil(0.5*10)=5, but the
+    # per-review cap is ceil(0.25*12)=3
+    assert moved == 3
+    assert len(rb.transitions) == 3
+
+
+def test_rebalancer_hysteresis_needs_consecutive_breaches():
+    """confirm_windows=2: one bad window never reconfigures; two
+    consecutive do; a healthy review in between resets the streak."""
+    cfg = RebalanceConfig(min_samples=8, confirm_windows=2, cooldown=0.0)
+    rb = RoleRebalancer(cfg)
+    views = _views([Role.PREFILL, Role.MULTIPLEX, Role.MULTIPLEX])
+
+    def _set(window, oks):
+        window.clear()
+        window.extend(oks)
+
+    _set(rb.ttft_window, [False] * 12)
+    _set(rb.tpot_window, [True] * 12)
+    assert rb.step(views, now=10.0) is None        # first breach: wait
+    _set(rb.ttft_window, [True] * 12)              # recovery resets streak
+    assert rb.step(views, now=20.0) is None
+    _set(rb.ttft_window, [False] * 12)
+    assert rb.step(views, now=30.0) is None        # breach #1 again
+    assert rb.step(views, now=40.0) is not None    # breach #2: act
 
 
 def test_cluster_run_drives_windowed_rebalancer():

@@ -10,7 +10,8 @@ REQUIRED_KEYS = {
     "n_total", "n_finished", "slo_attainment", "ttft_attainment",
     "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg", "tpot_p90",
     "queue_avg", "queue_p90", "blocked_time_avg", "migrations", "restarts",
-    "preemptions", "migration_wait_avg",
+    "preemptions", "migration_wait_avg", "weighted_attainment",
+    "per_class", "scenario",
 }
 
 
@@ -23,7 +24,8 @@ def test_serve_sim_json_schema(capsys):
     row = _run(["--seed", "1"])
     out = capsys.readouterr().out
     data = json.loads(out)          # stdout is exactly one JSON object
-    assert data["schema_version"] == serve.METRICS_SCHEMA_VERSION == 1
+    # v2: per_class block + weighted_attainment (multi-tenant SLO classes)
+    assert data["schema_version"] == serve.METRICS_SCHEMA_VERSION == 2
     assert REQUIRED_KEYS <= set(data)
     assert data["mode"] == "sim" and data["seed"] == 1
     assert data["n_total"] > 0
@@ -31,6 +33,10 @@ def test_serve_sim_json_schema(capsys):
     assert row["n_total"] == data["n_total"]
     # transfer engine on by default -> migration accounting present
     assert "kv_bytes_migrated" in data and "transfer_seconds" in data
+    # single-class default run: one 'default' class, weighted == aggregate
+    assert set(data["per_class"]) == {"default"}
+    assert data["weighted_attainment"] == pytest.approx(
+        data["slo_attainment"])
 
 
 def test_serve_seed_reproducible(capsys):
@@ -58,4 +64,67 @@ def test_serve_rejects_bad_link_flags(capsys):
         serve.main(["--ici-links", "-1"])
     with pytest.raises(SystemExit):
         serve.main(["--page-size", "0"])
+    capsys.readouterr()
+
+
+def test_serve_slo_classes_per_class_metrics(capsys):
+    row = _run(["--slo-classes",
+                "interactive:ttft=1.0,tpot=0.05,weight=2,frac=0.6;"
+                "batch:ttft=12,tpot=0.6,frac=0.4"])
+    capsys.readouterr()
+    assert row["scenario"] == "slo-classes"
+    assert set(row["per_class"]) == {"interactive", "batch"}
+    assert row["per_class"]["interactive"]["weight"] == 2.0
+    n = sum(c["n_total"] for c in row["per_class"].values())
+    assert n == row["n_total"] > 0
+    # weighted attainment is the weight-normalised per-class combination
+    want = sum(c["weight"] * c["slo_attainment"]
+               for c in row["per_class"].values()) \
+        / sum(c["weight"] for c in row["per_class"].values())
+    assert row["weighted_attainment"] == pytest.approx(want)
+
+
+def test_serve_named_scenario(capsys):
+    row = _run(["--scenario", "mixture", "--duration", "10"])
+    capsys.readouterr()
+    assert row["scenario"] == "mixture"
+    assert set(row["per_class"]) == {"interactive", "batch"}
+
+
+def test_serve_trace_csv_replay(tmp_path, capsys):
+    path = tmp_path / "trace.csv"
+    path.write_text("timestamp_ms,input_length,output_length,slo_class\n"
+                    "0,512,16,interactive\n"
+                    "500,2048,32,batch\n"
+                    "900,256,8,interactive\n")
+    row = _run(["--trace-csv", str(path), "--slo-classes",
+                "interactive:ttft=2.0,tpot=0.1;batch:ttft=20,tpot=1.0"])
+    capsys.readouterr()
+    assert row["n_total"] == 3
+    assert row["per_class"]["interactive"]["n_total"] == 2
+    assert row["per_class"]["batch"]["n_total"] == 1
+
+
+def test_serve_rejects_bad_scenario_and_classes(capsys):
+    with pytest.raises(SystemExit):
+        serve.main(["--scenario", "nope"])
+    with pytest.raises(SystemExit):
+        serve.main(["--slo-classes", "broken"])
+    with pytest.raises(SystemExit):
+        serve.main(["--slo-classes", "a:ttft=1"])       # missing tpot
+    with pytest.raises(SystemExit):
+        serve.main(["--slo-classes", "a:ttft=1,tpot=-2"])
+    with pytest.raises(SystemExit):     # fracs oversubscribe the rate
+        serve.main(["--slo-classes",
+                    "a:ttft=1,tpot=0.1,frac=0.8;b:ttft=2,tpot=0.2,frac=0.8"])
+    with pytest.raises(SystemExit):     # unassigned class left zero traffic
+        serve.main(["--slo-classes",
+                    "a:ttft=1,tpot=0.1,frac=1.0;b:ttft=2,tpot=0.2"])
+    with pytest.raises(SystemExit):     # --slo-classes owns the workload
+        serve.main(["--scenario", "agentic",
+                    "--slo-classes", "a:ttft=1,tpot=0.1"])
+    with pytest.raises(SystemExit):     # duplicate class names
+        serve.main(["--slo-classes", "a:ttft=1,tpot=0.1;a:ttft=2,tpot=0.2"])
+    with pytest.raises(SystemExit):     # absolute + scale conflict
+        serve.main(["--slo-classes", "a:ttft=1,scale=5"])
     capsys.readouterr()

@@ -1,0 +1,256 @@
+"""Workload subsystem: scenario determinism, CSV replay equivalence,
+hardened Mooncake-schema parsing, per-class metrics arithmetic."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.metrics import compute_metrics
+from repro.core.request import Phase, Request, SLOClass, SLOSpec
+from repro.serving.costmodel import CostModel, WorkerSpec
+from repro.workload import (AGENTIC, Diurnal, GammaPoisson, LONGCTX,
+                            MOONCAKE, OnOffBursts, SCENARIOS, Scenario,
+                            ScenarioComponent, get_scenario, load_csv,
+                            replay_csv, sample_lengths, save_csv)
+
+COST = CostModel(get_config("internlm-20b"), WorkerSpec(tp=8))
+
+
+def _sig(reqs):
+    return [(r.rid, r.arrival_time, r.prompt_len, r.output_len,
+             r.slo.name, r.slo.ttft, r.slo.tpot, r.slo.weight)
+            for r in reqs]
+
+
+# ---------------------------------------------------------------- scenarios
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_every_scenario_is_seed_deterministic(name):
+    sc = get_scenario(name)
+    a = sc.generate(2.0, 40.0, COST, seed=3)
+    b = sc.generate(2.0, 40.0, COST, seed=3)
+    assert a, f"scenario {name} generated an empty trace"
+    assert _sig(a) == _sig(b)
+    c = sc.generate(2.0, 40.0, COST, seed=4)
+    assert _sig(a) != _sig(c)
+    # merged stream invariants: sorted arrivals, dense rids
+    assert all(x.arrival_time <= y.arrival_time for x, y in zip(a, a[1:]))
+    assert [r.rid for r in a] == list(range(len(a)))
+
+
+def test_mixture_scenario_carries_two_classes():
+    reqs = get_scenario("mixture").generate(3.0, 60.0, COST, seed=0)
+    names = {r.slo.name for r in reqs}
+    assert names == {"interactive", "batch"}
+    by = {n: [r for r in reqs if r.slo.name == n] for n in names}
+    # the interactive tenant is short-prompt/long-output vs batch long-ctx
+    med = lambda rs, attr: float(np.median([getattr(r, attr) for r in rs]))
+    assert med(by["interactive"], "prompt_len") \
+        < med(by["batch"], "prompt_len")
+    assert by["interactive"][0].slo.weight == 2.0
+    assert by["batch"][0].slo.ttft > by["interactive"][0].slo.ttft
+
+
+def test_component_substreams_are_independent():
+    """Removing ANY component (leading or trailing — substreams are keyed
+    by name, not position) must not perturb the survivors' traffic; the
+    solo-reference construction in fig_multitenant relies on this."""
+    comps = get_scenario("mixture").components
+    both = Scenario("m", comps).generate(2.0, 40.0, COST, seed=9)
+    for keep_idx in range(len(comps)):
+        solo = Scenario("s", comps[keep_idx:keep_idx + 1]).generate(
+            2.0, 40.0, COST, seed=9)
+        keep = [(r.arrival_time, r.prompt_len, r.output_len) for r in both
+                if r.slo.name == comps[keep_idx].name]
+        assert keep == [(r.arrival_time, r.prompt_len, r.output_len)
+                        for r in solo], comps[keep_idx].name
+
+
+def test_scenario_rejects_duplicate_component_names():
+    comp = get_scenario("mixture").components[0]
+    with pytest.raises(ValueError, match="duplicate component names"):
+        Scenario("dup", (comp, comp))
+
+
+def test_replay_iterator_contract():
+    sc = get_scenario("bursty")
+    pairs = list(sc.replay(2.0, 30.0, COST, seed=1))
+    assert pairs
+    assert all(t == r.arrival_time for t, r in pairs)
+    assert all(a[0] <= b[0] for a, b in zip(pairs, pairs[1:]))
+
+
+def test_get_scenario_unknown_name_errors():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+# ----------------------------------------------------------------- profiles
+
+def test_agentic_profile_inverts_prompt_output_balance():
+    rng = np.random.default_rng(0)
+    a_in, a_out = sample_lengths(rng, 8000, AGENTIC)
+    m_in, m_out = sample_lengths(np.random.default_rng(0), 8000, MOONCAKE)
+    assert np.median(a_out) > np.median(a_in)          # inversion
+    assert np.median(m_out) < np.median(m_in)          # mooncake baseline
+    assert np.median(a_out) > np.median(m_out)
+
+
+def test_longctx_profile_is_tail_heavy():
+    rng = np.random.default_rng(0)
+    l_in, _ = sample_lengths(rng, 8000, LONGCTX)
+    m_in, _ = sample_lengths(np.random.default_rng(0), 8000, MOONCAKE)
+    assert np.median(l_in) > np.median(m_in)
+    assert np.percentile(l_in, 90) > np.percentile(m_in, 90)
+
+
+# ----------------------------------------------------------------- arrivals
+
+def test_onoff_bursts_keep_average_rate():
+    proc = OnOffBursts(on_mean=5.0, off_mean=15.0)
+    rng = np.random.default_rng(2)
+    n = np.mean([len(proc.sample(rng, 4.0, 400.0)) for _ in range(5)])
+    assert n / 400.0 == pytest.approx(4.0, rel=0.25)
+    # burstier than its average: the max 5s window far exceeds the mean
+    times = proc.sample(np.random.default_rng(3), 4.0, 400.0)
+    per_win = np.histogram(times, bins=int(400 / 5))[0]
+    assert per_win.max() > 3 * per_win.mean()
+
+
+def test_diurnal_rate_modulates_sinusoidally():
+    proc = Diurnal(period=100.0, amplitude=0.8)
+    times = proc.sample(np.random.default_rng(5), 8.0, 1000.0)
+    assert len(times) / 1000.0 == pytest.approx(8.0, rel=0.2)
+    phase = (times % 100.0)
+    peak = np.sum((phase > 10) & (phase < 40))     # sin>0 half (rising)
+    trough = np.sum((phase > 60) & (phase < 90))   # sin<0 half
+    assert peak > 1.5 * trough
+
+
+# ---------------------------------------------------------------- CSV round
+
+def _two_class_scenario():
+    tight = SLOClass(ttft=1.0, tpot=0.05, name="interactive", weight=2.0)
+    loose = SLOClass(ttft=15.0, tpot=0.5, name="batch", weight=1.0)
+    return Scenario("2c", (
+        ScenarioComponent(name="interactive", profile=AGENTIC,
+                          arrivals=GammaPoisson(), rate_frac=0.5, slo=tight),
+        ScenarioComponent(name="batch", profile=LONGCTX,
+                          arrivals=GammaPoisson(), rate_frac=0.5, slo=loose),
+    ))
+
+
+def test_csv_round_trip_multiclass_identical_streams(tmp_path):
+    sc = _two_class_scenario()
+    orig = sc.generate(2.0, 40.0, COST, seed=7)
+    assert {r.slo.name for r in orig} == {"interactive", "batch"}
+    path = str(tmp_path / "trace.csv")
+    save_csv(path, orig)
+    back = load_csv(path, COST, classes=sc.classes)
+    assert len(back) == len(orig)
+    for a, b in zip(orig, back):
+        assert (b.prompt_len, b.output_len) == (a.prompt_len, a.output_len)
+        assert abs(b.arrival_time - a.arrival_time) <= 1e-3   # ms schema
+        assert b.slo == a.slo          # identical class objects round-trip
+    # replay_csv serves the same stream through the iterator contract
+    pairs = list(replay_csv(path, COST, classes=sc.classes))
+    assert [(r.prompt_len, r.slo.name) for _, r in pairs] == \
+        [(r.prompt_len, r.slo.name) for r in orig]
+
+
+def test_csv_single_class_keeps_legacy_3_column_schema(tmp_path):
+    reqs = [Request(rid=0, arrival_time=0.5, prompt_len=100, output_len=10,
+                    slo=SLOSpec(ttft=1.0, tpot=0.1))]
+    path = str(tmp_path / "legacy.csv")
+    save_csv(path, reqs)
+    with open(path) as f:
+        assert f.readline().strip() == "timestamp_ms,input_length,output_length"
+    assert load_csv(path, COST)[0].prompt_len == 100
+
+
+def test_load_csv_tolerates_header_variants_and_blank_lines(tmp_path):
+    path = str(tmp_path / "messy.csv")
+    with open(path, "w") as f:
+        f.write("﻿ Timestamp , Input_Tokens ,OUTPUT_LENGTH, class \n"
+                "1000,64,8,gold\n"
+                "\n"
+                "2500,128,16,\n"
+                ",,,\n")
+    reqs = load_csv(path, COST,
+                    classes={"gold": SLOClass(1.0, 0.1, name="gold")})
+    assert len(reqs) == 2
+    assert reqs[0].slo.name == "gold" and reqs[0].prompt_len == 64
+    assert reqs[1].slo.name == "default"       # blank class cell
+    assert reqs[1].arrival_time == pytest.approx(2.5)
+    assert [r.rid for r in reqs] == [0, 1]     # blank rows don't burn rids
+
+
+def test_load_csv_clear_errors_on_bad_data(tmp_path):
+    bad_neg = tmp_path / "neg.csv"
+    bad_neg.write_text("timestamp_ms,input_length,output_length\n"
+                       "100,-5,10\n")
+    with pytest.raises(ValueError, match=r"neg.csv:2.*input_length.*-5"):
+        load_csv(str(bad_neg), COST)
+    bad_nan = tmp_path / "nan.csv"
+    bad_nan.write_text("timestamp_ms,input_length,output_length\n"
+                       "100,abc,10\n")
+    with pytest.raises(ValueError, match="must be a number"):
+        load_csv(str(bad_nan), COST)
+    bad_hdr = tmp_path / "hdr.csv"
+    bad_hdr.write_text("when,how_big\n1,2\n")
+    with pytest.raises(ValueError, match="missing required column"):
+        load_csv(str(bad_hdr), COST)
+    zero_out = tmp_path / "zero.csv"
+    zero_out.write_text("timestamp_ms,input_length,output_length\n"
+                        "100,10,0\n")
+    with pytest.raises(ValueError, match="output_length"):
+        load_csv(str(zero_out), COST)
+
+
+# ------------------------------------------------------- per-class metrics
+
+def _finished(rid, slo, ttft, tpot, n_out=10):
+    r = Request(rid=rid, arrival_time=0.0, prompt_len=8, output_len=n_out,
+                slo=slo)
+    r.record_first_token(ttft)
+    for _ in range(n_out - 1):
+        r.record_decode_iteration(tpot)
+    r.finish_time = ttft + tpot * (n_out - 1)
+    r.phase = Phase.FINISHED
+    return r
+
+
+def test_per_class_metrics_hand_computed():
+    gold = SLOClass(ttft=1.0, tpot=0.10, name="gold", weight=2.0)
+    bulk = SLOClass(ttft=5.0, tpot=0.50, name="bulk", weight=1.0)
+    reqs = [
+        _finished(0, gold, ttft=0.5, tpot=0.05),    # ok
+        _finished(1, gold, ttft=0.5, tpot=0.05),    # ok
+        _finished(2, gold, ttft=0.5, tpot=0.05),    # ok
+        _finished(3, gold, ttft=2.0, tpot=0.05),    # ttft miss
+        _finished(4, bulk, ttft=1.0, tpot=0.20),    # ok
+        _finished(5, bulk, ttft=1.0, tpot=0.90),    # tpot miss
+    ]
+    m = compute_metrics(reqs)
+    assert set(m.per_class) == {"gold", "bulk"}
+    g, b = m.per_class["gold"], m.per_class["bulk"]
+    assert (g.n_total, g.n_finished) == (4, 4)
+    assert g.slo_attainment == pytest.approx(0.75)
+    assert g.ttft_attainment == pytest.approx(0.75)
+    assert g.tpot_attainment == pytest.approx(1.0)
+    assert b.slo_attainment == pytest.approx(0.5)
+    assert b.tpot_attainment == pytest.approx(0.5)
+    # weighted: (2*0.75 + 1*0.5) / 3
+    assert m.weighted_attainment == pytest.approx(2.0 / 3.0)
+    # aggregate view unchanged: 4 of 6 meet both
+    assert m.slo_attainment == pytest.approx(4.0 / 6.0)
+    assert g.ttft_avg == pytest.approx((0.5 * 3 + 2.0) / 4)
+    assert b.tpot_avg == pytest.approx((0.2 + 0.9) / 2)
+
+
+def test_single_class_weighted_equals_aggregate():
+    slo = SLOSpec(ttft=1.0, tpot=0.1)
+    reqs = [_finished(i, slo, ttft=0.5 if i % 2 else 2.0, tpot=0.05)
+            for i in range(8)]
+    m = compute_metrics(reqs)
+    assert set(m.per_class) == {"default"}
+    assert m.weighted_attainment == pytest.approx(m.slo_attainment)
