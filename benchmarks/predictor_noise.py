@@ -41,11 +41,11 @@ class NoisyPredictor(AnalyticalPredictor):
     def _noise(self) -> float:
         return float(self.rng.lognormal(0.0, self.sigma)) if self.sigma else 1.0
 
-    def predict_prefill(self, tokens, ctx_offset=0):
-        return super().predict_prefill(tokens, ctx_offset) * self._noise()
+    def predict_prefill(self, tokens, ctx_offset=0, wid=None):
+        return super().predict_prefill(tokens, ctx_offset, wid) * self._noise()
 
-    def predict_decode_iter(self, n, ctx):
-        return super().predict_decode_iter(n, ctx) * self._noise()
+    def predict_decode_iter(self, n, ctx, wid=None):
+        return super().predict_decode_iter(n, ctx, wid) * self._noise()
 
 
 def _run(predictor, trace, duration):

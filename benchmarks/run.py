@@ -1,26 +1,87 @@
 """Benchmark driver: one function per paper table/figure + the roofline
 table. Prints ``name,key=value,...`` CSV rows.
 
+``--quick`` additionally writes ``BENCH_summary.json`` — a small,
+schema-versioned record of the headline numbers (weighted attainment at
+the reference rate, P90 TTFT/TPOT, mean step time) that the bench-smoke
+CI job uploads on every push, seeding the perf-trajectory history.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8]
+                                               [--summary PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
+SUMMARY_SCHEMA_VERSION = 1
+REF_RATE = 2.0
 
-def main() -> None:
+
+def _canonical_run(ref_rate: float = REF_RATE, duration: float = 60.0):
+    """One reference serving run for the summary's latency/step columns:
+    tropical, 4 workers, the paper's §V-A trace at the reference rate."""
+    import copy
+
+    from benchmarks.common import MODEL, WORKER, cost_model, make_trace
+    from repro.configs import get_config
+    from repro.serving.simulator import build_cluster
+
+    cm = cost_model()
+    trace = make_trace(ref_rate, duration, cm, seed=11)
+    sim, _ = build_cluster(get_config(MODEL), "tropical", n_workers=4,
+                           worker_spec=WORKER, record_decisions=True)
+    sim.add_trace(copy.deepcopy(trace))
+    m = sim.run(until=duration * 10)
+    n_iters = sum(1 for d in sim.decisions if d[0] == "iter")
+    busy = sum(w.busy_time for w in sim.workers.values())
+    return m, busy / max(n_iters, 1)
+
+
+def build_summary(results: dict[str, list[dict]],
+                  ref_rate: float = REF_RATE) -> dict:
+    """Distil the quick sweep into the schema-versioned BENCH record."""
+    summary = {
+        "schema_version": SUMMARY_SCHEMA_VERSION,
+        "ref_rate": ref_rate,
+        "generator": "benchmarks.run --quick",
+    }
+    for row in results.get("fig8", []):
+        if row.get("policy") == "tropical" and row.get("rate") == ref_rate:
+            summary["slo_attainment"] = row["slo_attainment"]
+    for row in results.get("fig_multitenant", []):
+        if row.get("policy") == "tropical" and row.get("rate") == ref_rate:
+            summary["weighted_attainment"] = row["weighted_attainment"]
+    for row in results.get("fig_hetero", []):
+        if row.get("config") == "summary":
+            summary["hetero_global_attainment"] = row["mean_hetero_global"]
+            summary["hetero_per_worker_attainment"] = row["mean_hetero_pw"]
+    m, mean_step = _canonical_run(ref_rate)
+    summary.update(
+        ttft_p90_s=round(m.ttft_p90, 4),
+        tpot_p90_s=round(m.tpot_p90, 5),
+        mean_step_s=round(mean_step, 5),
+        n_requests=m.n_total,
+    )
+    return summary
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--summary", default=None, metavar="PATH",
+                    help="write the BENCH_summary.json record here "
+                         "(default: BENCH_summary.json when --quick)")
+    args = ap.parse_args(argv)
 
     from benchmarks import (fig3_workload, fig4_queue_vs_interference,
                             fig5_worker_allocation, fig8_slo_attainment,
                             fig9_latency, fig10_queueing, fig11_cdf,
-                            fig_migration, fig_multitenant, predictor_noise,
-                            roofline, scale)
+                            fig_hetero, fig_migration, fig_multitenant,
+                            predictor_noise, roofline, scale)
     benches = {
         "fig3": fig3_workload.main,
         "fig4": fig4_queue_vs_interference.main,
@@ -36,6 +97,8 @@ def main() -> None:
         "fig_multitenant": (lambda: fig_multitenant.main(
             rates=(2.0,), duration=60.0, ref_rate=2.0))
         if args.quick else fig_multitenant.main,
+        "fig_hetero": (lambda: fig_hetero.main(seeds=(7, 11)))
+        if args.quick else fig_hetero.main,
         "scale": (lambda: scale.main(scales=[(4, 4.0), (16, 16.0)],
                                      duration=60.0))
         if args.quick else scale.main,
@@ -43,18 +106,31 @@ def main() -> None:
         if args.quick else predictor_noise.main,
         "roofline": roofline.main,
     }
+    results: dict[str, list[dict]] = {}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
         try:
-            fn()
+            results[name] = fn() or []
             print(f"# {name}: done in {time.perf_counter() - t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             print(f"# {name}: FAILED {type(e).__name__}: {e}",
                   file=sys.stderr)
             raise
+
+    # an explicit --summary is always honoured (with --only the record
+    # carries whatever that one bench produced plus the canonical-run
+    # columns); the implicit --quick default skips partial sweeps
+    summary_path = args.summary or (
+        "BENCH_summary.json" if args.quick and not args.only else None)
+    if summary_path:
+        summary = build_summary(results)
+        with open(summary_path, "w") as f:
+            json.dump(summary, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# summary -> {summary_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -74,7 +74,12 @@ class Policy:
                 if w.alive and (role is None or w.role == role)]
 
     def _least_loaded(self, ws):
-        return min(ws, key=lambda w: w.unfinished_tokens).wid if ws else None
+        # InFaaS least-unfinished-tokens, normalised by the worker's
+        # relative hardware speed: on a heterogeneous cluster the same
+        # token backlog clears later on a straggler. Homogeneous speeds
+        # are exactly 1.0, so orderings (and decisions) are unchanged.
+        return min(ws, key=lambda w: w.unfinished_tokens / w.speed).wid \
+            if ws else None
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +241,8 @@ class TropicalPolicy(Policy):
                              prefill_exclusive=False)
         chunk = self.toggle.chunk_for(w, head.slo.tpot)
         t_chunk = self.predictor.predict_prefill(
-            min(chunk, head.remaining_prefill), int(w.decode_sum_ctx))
+            min(chunk, head.remaining_prefill), int(w.decode_sum_ctx),
+            wid=w.wid)
         budget = max(w.min_tpot_slack, 0.0) / self.toggle.cfg.slack_safety
         if t_chunk <= budget:
             return BatchRule(run_decode=True, prefill_budget=chunk,

@@ -1,259 +1,30 @@
-"""Execution-time predictor (paper §IV-C).
+"""DEPRECATED import shim — the §IV-C predictors moved to ``repro.perf``.
 
-The toggle "leverages offline profiling tools to estimate both the execution
-time of a prefill request and the queuing time when scheduling to the local
-worker". Two implementations share the interface:
+Every name is re-exported unchanged so existing import paths keep
+working. New code should import from ``repro.perf``:
 
-* ``AnalyticalPredictor`` — wraps the roofline CostModel (what the simulator
-  itself uses, optionally with a safety margin; predictor error can be
-  injected for robustness experiments).
-* ``ProfiledPredictor`` — piecewise-linear interpolation over an offline
-  profile table {(tokens, ctx) -> seconds}, the way a real deployment
-  profiles its worker; built by ``profile_worker`` from any executor.
+    from repro.perf import AnalyticalPredictor, OnlinePredictor, ...
 
-``OnlinePredictor`` wraps either of them and closes the §IV-C loop: the
-scheduler feeds every observed iteration duration back in, and per-phase
-EWMA correction factors pull a biased/stale offline profile toward what
-the executor actually delivers (wall-clock on the real backend, injected
-noise in robustness sims) while preserving the base safety margin.
+The predictors live with the cost model they wrap now: per-worker pricing
+(``ClusterPredictor``), the per-(worker, phase, size-bucket) online
+calibration hierarchy (``OnlinePredictor``) and the measured-MFU
+calibrated roofline are one subsystem in ``src/repro/perf/``.
+
+SIGNATURE CHANGE: every ``predict_*`` method now takes an optional
+``wid=None`` keyword (per-worker pricing on heterogeneous clusters) and
+the toggle/policies pass it unconditionally; likewise the scheduler
+passes ``wid=`` to ``observe_iteration`` (and ``OnlinePredictor``
+forwards it to ``observe_prefill``/``observe_decode``). A ``Predictor``
+subclass overriding any ``predict_*`` or ``observe_*`` method with the
+old signature must add the ``wid=None`` parameter (ignore it to keep
+worker-agnostic behaviour).
 """
-from __future__ import annotations
+from repro.perf.calibration import OnlinePredictor
+from repro.perf.predictor import (AnalyticalPredictor, BiasedPredictor,
+                                  ClusterPredictor, Predictor,
+                                  ProfiledPredictor, profile_worker)
 
-import bisect
-import dataclasses
-from typing import Callable, Optional, Sequence
-
-from repro.serving.costmodel import CostModel
-
-
-class Predictor:
-    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
-        raise NotImplementedError
-
-    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
-        raise NotImplementedError
-
-    def predict_migration(self, ctx_tokens: int) -> float:
-        raise NotImplementedError
-
-
-@dataclasses.dataclass
-class AnalyticalPredictor(Predictor):
-    cost: CostModel
-    safety: float = 1.1          # conservative over-estimate (paper: the
-                                 # toggle "conservatively sends requests")
-    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
-        return self.cost.prefill_time(tokens, ctx_offset) * self.safety
-
-    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
-        return self.cost.decode_iter_time(n_decode, sum_ctx) * self.safety
-
-    def predict_migration(self, ctx_tokens: int) -> float:
-        return self.cost.migration_time(ctx_tokens) * self.safety
-
-
-class BiasedPredictor(AnalyticalPredictor):
-    """Systematically ``bias``×-miscalibrated analytical predictor — a
-    stale or wrong-hardware offline profile. Robustness benchmarks and the
-    OnlinePredictor convergence tests inject known error through this."""
-
-    def __init__(self, cost: CostModel, bias: float, safety: float = 1.1):
-        super().__init__(cost, safety=safety)
-        self.bias = bias
-
-    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
-        return super().predict_prefill(tokens, ctx_offset) * self.bias
-
-    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
-        return super().predict_decode_iter(n_decode, sum_ctx) * self.bias
-
-
-class ProfiledPredictor(Predictor):
-    """Interpolates a profiled (tokens -> seconds) table; ctx contributions
-    enter linearly with a profiled per-ctx-token coefficient."""
-
-    def __init__(self, prefill_points: Sequence[tuple[int, float]],
-                 decode_points: Sequence[tuple[int, float, float]],
-                 ctx_coeff: float, migration_coeff: float,
-                 safety: float = 1.1):
-        self.prefill_points = sorted(prefill_points)
-        self.decode_points = sorted(decode_points)
-        self.ctx_coeff = ctx_coeff
-        self.migration_coeff = migration_coeff
-        self.safety = safety
-
-    @staticmethod
-    def _interp(points, x):
-        xs = [p[0] for p in points]
-        i = bisect.bisect_left(xs, x)
-        if i == 0:
-            lo, hi = points[0], points[min(1, len(points) - 1)]
-        elif i >= len(points):
-            lo, hi = points[-2] if len(points) > 1 else points[-1], points[-1]
-        else:
-            lo, hi = points[i - 1], points[i]
-        if hi[0] == lo[0]:
-            return lo[1]
-        t = (x - lo[0]) / (hi[0] - lo[0])
-        return lo[1] + t * (hi[1] - lo[1])
-
-    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
-        base = self._interp(self.prefill_points, tokens)
-        return (base + self.ctx_coeff * ctx_offset * tokens) * self.safety
-
-    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
-        base = self._interp([(b, t) for b, t, _ in self.decode_points], n_decode)
-        return (base + self.ctx_coeff * sum_ctx) * self.safety
-
-    def predict_migration(self, ctx_tokens: int) -> float:
-        return self.migration_coeff * ctx_tokens * self.safety
-
-
-class OnlinePredictor(Predictor):
-    """Online feedback wrapper: per-phase multiplicative EWMA correction.
-
-    Let ``raw`` be the base predictor's estimate (which already includes
-    its conservative ``safety`` margin). After each observed iteration the
-    matching phase's scale moves toward ``observed * margin / raw`` — so an
-    unbiased base converges to scale 1.0 (the safety margin is *kept*, not
-    regressed away), and a k×-biased base converges to scale 1/k, restoring
-    calibrated-but-conservative predictions. Mixed decode+prefill
-    iterations split the observed time proportionally to the current
-    corrected per-phase estimates.
-
-    Heterogeneity: a single global scale per phase assumes the base's bias
-    is size-independent, but real profiles miss differently at batch 1
-    than at batch 128 (kernel occupancy, attention-vs-MLP balance). Each
-    observation therefore also feeds a per-(phase, size-bucket) EWMA —
-    buckets are powers of two over prefill tokens / decode batch size —
-    and predictions use the bucket's scale once it has ``bucket_floor``
-    observations, falling back to the global per-phase scale below the
-    floor (cold buckets borrow strength instead of guessing from one
-    sample). ``bucketed=False`` restores pure global correction.
-    """
-
-    def __init__(self, base: Predictor, alpha: float = 0.2,
-                 clip: tuple[float, float] = (0.125, 8.0),
-                 bucketed: bool = True, bucket_floor: int = 8):
-        self.base = base
-        self.alpha = alpha
-        self.clip = clip
-        self.bucketed = bucketed
-        self.bucket_floor = bucket_floor
-        # preserve the base's deliberate conservatism as the convergence
-        # target; a margin-free base converges to exact calibration
-        self.margin = float(getattr(base, "safety", 1.0))
-        self.prefill_scale = 1.0
-        self.decode_scale = 1.0
-        self.prefill_observations = 0
-        self.decode_observations = 0
-        self.bucket_scales: dict[tuple[str, int], float] = {}
-        self.bucket_observations: dict[tuple[str, int], int] = {}
-
-    # ------------------------------------------------------------- buckets
-    @staticmethod
-    def _bucket(size: float) -> int:
-        """Power-of-two size bucket: 1, 2, 3… for sizes 1, 2-3, 4-7, …"""
-        return max(int(size), 1).bit_length()
-
-    def _bucket_scale(self, phase: str, size: float,
-                      global_scale: float) -> float:
-        if not self.bucketed:
-            return global_scale
-        key = (phase, self._bucket(size))
-        if self.bucket_observations.get(key, 0) < self.bucket_floor:
-            return global_scale
-        return self.bucket_scales[key]
-
-    def _observe_bucket(self, phase: str, size: float, ratio: float,
-                        global_scale: float) -> None:
-        if not self.bucketed:
-            return
-        key = (phase, self._bucket(size))
-        # seed a cold bucket from the converged global scale, not 1.0:
-        # crossing bucket_floor must refine the prediction, never snap it
-        # back toward the uncorrected base
-        self.bucket_scales[key] = self._ewma(
-            self.bucket_scales.get(key, global_scale), ratio)
-        self.bucket_observations[key] = \
-            self.bucket_observations.get(key, 0) + 1
-
-    # ----------------------------------------------------------- predictions
-    def predict_prefill(self, tokens: int, ctx_offset: int = 0) -> float:
-        return self.base.predict_prefill(tokens, ctx_offset) \
-            * self._bucket_scale("prefill", tokens, self.prefill_scale)
-
-    def predict_decode_iter(self, n_decode: int, sum_ctx: float) -> float:
-        return self.base.predict_decode_iter(n_decode, sum_ctx) \
-            * self._bucket_scale("decode", n_decode, self.decode_scale)
-
-    def predict_migration(self, ctx_tokens: int) -> float:
-        return self.base.predict_migration(ctx_tokens)
-
-    # ------------------------------------------------------------- feedback
-    def _ewma(self, scale: float, ratio: float) -> float:
-        lo, hi = self.clip
-        ratio = min(max(ratio, lo), hi)
-        return (1.0 - self.alpha) * scale + self.alpha * ratio
-
-    def observe_prefill(self, tokens: int, ctx_offset: int,
-                        observed: float) -> None:
-        if tokens <= 0:
-            return
-        raw = self.base.predict_prefill(tokens, ctx_offset)
-        if raw > 0.0 and observed > 0.0:
-            ratio = observed * self.margin / raw
-            self._observe_bucket("prefill", tokens, ratio,
-                                 self.prefill_scale)
-            self.prefill_scale = self._ewma(self.prefill_scale, ratio)
-            self.prefill_observations += 1
-
-    def observe_decode(self, n_decode: int, sum_ctx: float,
-                       observed: float) -> None:
-        if n_decode <= 0:
-            return
-        raw = self.base.predict_decode_iter(n_decode, sum_ctx)
-        if raw > 0.0 and observed > 0.0:
-            ratio = observed * self.margin / raw
-            self._observe_bucket("decode", n_decode, ratio,
-                                 self.decode_scale)
-            self.decode_scale = self._ewma(self.decode_scale, ratio)
-            self.decode_observations += 1
-
-    def observe_iteration(self, n_decode: int, sum_ctx: float,
-                          prefill_tokens: int, ctx_offset: float,
-                          observed: float) -> None:
-        """ClusterScheduler hook: one finished iteration's composition and
-        its observed duration (simulated or wall-clock)."""
-        has_p = prefill_tokens > 0
-        has_d = n_decode > 0
-        if has_p and has_d:
-            cp = self.predict_prefill(prefill_tokens, int(ctx_offset))
-            cd = self.predict_decode_iter(n_decode, sum_ctx)
-            if cp + cd <= 0.0:
-                return
-            share = cp / (cp + cd)
-            self.observe_prefill(prefill_tokens, int(ctx_offset),
-                                 observed * share)
-            self.observe_decode(n_decode, sum_ctx, observed * (1.0 - share))
-        elif has_p:
-            self.observe_prefill(prefill_tokens, int(ctx_offset), observed)
-        elif has_d:
-            self.observe_decode(n_decode, sum_ctx, observed)
-
-
-def profile_worker(step_fn: Callable[[int, float, int], float],
-                   token_grid: Sequence[int] = (128, 512, 2048, 8192),
-                   batch_grid: Sequence[int] = (1, 8, 32, 128),
-                   ctx_probe: int = 8192) -> ProfiledPredictor:
-    """Build a ProfiledPredictor by measuring ``step_fn(n_decode, sum_ctx,
-    prefill_tokens) -> seconds`` — works against the real executor or the
-    simulator alike (offline profiling per §IV-C)."""
-    prefill_points = [(t, step_fn(0, 0.0, t)) for t in token_grid]
-    decode_points = [(b, step_fn(b, float(b * 512), 0), 512.0)
-                     for b in batch_grid]
-    t0 = step_fn(1, 0.0, 0)
-    t1 = step_fn(1, float(ctx_probe), 0)
-    ctx_coeff = max(0.0, (t1 - t0) / ctx_probe)
-    return ProfiledPredictor(prefill_points, decode_points, ctx_coeff,
-                             migration_coeff=1e-9)
+__all__ = [
+    "AnalyticalPredictor", "BiasedPredictor", "ClusterPredictor",
+    "OnlinePredictor", "Predictor", "ProfiledPredictor", "profile_worker",
+]

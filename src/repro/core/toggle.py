@@ -63,6 +63,14 @@ class WorkerView:
     free_pages: int = 0
     page_size: int = 16
     alive: bool = True
+    # hardware — relative throughput of this worker's HardwareSpec
+    # (fastest worker in the cluster = 1.0; see repro.perf.relative_speeds).
+    # Load comparisons divide by it so "least loaded" means "finishes
+    # soonest": a 2x-slow straggler with half the queue is NOT less loaded.
+    # Homogeneous clusters have speed 1.0 everywhere, keeping every
+    # ordering (and thus every decision) bit-identical to the pre-perf
+    # scheduler.
+    speed: float = 1.0
 
     @property
     def hbm_util(self) -> float:
@@ -142,11 +150,13 @@ class MultiplexingToggle:
         # budget allows (paper uses a fixed 2048 chunk).
         lo, hi = self.cfg.min_chunk, self.cfg.chunk_tokens
         budget = w.min_tpot_slack / self.cfg.slack_safety
-        if self.predictor.predict_prefill(lo, int(w.decode_sum_ctx)) > budget:
+        if self.predictor.predict_prefill(lo, int(w.decode_sum_ctx),
+                                          wid=w.wid) > budget:
             return lo
         while lo < hi:
             mid = (lo + hi + 1) // 2
-            if self.predictor.predict_prefill(mid, int(w.decode_sum_ctx)) <= budget:
+            if self.predictor.predict_prefill(mid, int(w.decode_sum_ctx),
+                                              wid=w.wid) <= budget:
                 lo = mid
             else:
                 hi = mid - 1
@@ -171,7 +181,8 @@ class MultiplexingToggle:
             return False
         chunk = min(self.chunk_for(w, req.slo.tpot), req.remaining_prefill
                     or req.prompt_len)
-        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx))
+        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx),
+                                                 wid=w.wid)
         if w.decode_batch > 0:
             # per-iteration slack must absorb the inserted chunk
             if t_chunk * self.cfg.slack_safety > max(w.min_tpot_slack, 0.0):
@@ -186,33 +197,35 @@ class MultiplexingToggle:
             other = min((t for n, t in w.decode_tpot_floor.items()
                          if n != req.slo.name), default=float("inf"))
             t_iter = self.predictor.predict_decode_iter(
-                w.decode_batch, w.decode_sum_ctx)
+                w.decode_batch, w.decode_sum_ctx, wid=w.wid)
             if t_iter > cfg.decode_iter_guard * min(req.slo.tpot, other):
                 return False
         return True
 
     # ----------------------------------------------------------- Path ①
     def _prefill_queue_time(self, w: WorkerView) -> float:
-        return self.predictor.predict_prefill(max(w.queued_prefill_tokens, 0))
+        return self.predictor.predict_prefill(max(w.queued_prefill_tokens, 0),
+                                              wid=w.wid)
 
     def _prefill_ok(self, w: WorkerView, req: Request, now: float) -> bool:
-        t_exec = self.predictor.predict_prefill(req.prompt_len)
+        t_exec = self.predictor.predict_prefill(req.prompt_len, wid=w.wid)
         t_queue = self._prefill_queue_time(w)
         return t_queue + t_exec <= req.ttft_deadline_slack(now)
 
     # ---------------------------------------------------------- dispatch
     def _predict_ttft_on_prefill(self, w: WorkerView, req: Request) -> float:
         return self._prefill_queue_time(w) \
-            + self.predictor.predict_prefill(req.prompt_len)
+            + self.predictor.predict_prefill(req.prompt_len, wid=w.wid)
 
     def _predict_ttft_on_multiplex(self, w: WorkerView, req: Request) -> float:
         """Chunked-prefill completion on an M worker: each chunk is admitted
         once the batch has re-banked ~chunk_time of slack, i.e. the prefill
         advances at chunk/(t_chunk + catchup) tokens/s."""
         chunk = self.cfg.chunk_tokens
-        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx))
+        t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx),
+                                                 wid=w.wid)
         base = self.predictor.predict_decode_iter(
-            max(w.decode_batch, 1), w.decode_sum_ctx)
+            max(w.decode_batch, 1), w.decode_sum_ctx, wid=w.wid)
         margin = max(req.slo.tpot - base, 1e-3)
         catchup = t_chunk / margin * base        # iterations to re-bank
         rate = chunk / (t_chunk + catchup)
@@ -242,7 +255,7 @@ class MultiplexingToggle:
             if not m_any:
                 return None
             self._ttft_pressure += 1
-            return min(m_any, key=lambda w: w.unfinished_tokens).wid
+            return min(m_any, key=lambda w: w.unfinished_tokens / w.speed).wid
         ok = [c for c in cands if c[2]]
         if not ok:
             self._ttft_pressure += 1
@@ -297,7 +310,9 @@ class MultiplexingToggle:
         for w in cands:
             stall = self._transfer_stall(req.worker, w, req, now)
             bucket = stall / tpot if math.isinf(stall) else int(stall / tpot)
-            key = (bucket, w.unfinished_tokens, w.wid)
+            # load normalised by the destination's speed: tokens on a slow
+            # worker take proportionally longer to clear the runway
+            key = (bucket, w.unfinished_tokens / w.speed, w.wid)
             if best_key is None or key < best_key:
                 best_key, best_w, best_stall = key, w, stall
         # §IV asymmetry: when even the best link queue would burn more TPOT

@@ -380,7 +380,7 @@ def model_flops(cfg, kind: str, batch: int, seq: int,
                 dec_len: Optional[int] = None) -> float:
     """MODEL_FLOPS: 6·N_active·D for train, 2·N_active·D (+attn) for
     inference — the classical useful-work estimate."""
-    from repro.serving.costmodel import build_cost_spec
+    from repro.perf import build_cost_spec
     spec = build_cost_spec(cfg)
     if kind == "train":
         d = dec_len if cfg.family == "encdec" and dec_len else seq

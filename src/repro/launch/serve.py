@@ -140,6 +140,14 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["vllm", "sarathi", "distserve", "tropical",
                              "tropical++"])
     ap.add_argument("--mode", default="sim", choices=["sim", "real"])
+    ap.add_argument("--backend", default="cost-model",
+                    choices=["cost-model", "trace-replay"],
+                    help="sim-mode execution backend: 'cost-model' "
+                         "materialises the trace up front; 'trace-replay' "
+                         "streams arrivals lazily through a "
+                         "TraceReplayBackend (constant-memory replay of "
+                         "recorded/synthesised traces; identical "
+                         "decisions)")
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--duration", type=float, default=120.0)
     ap.add_argument("--workers", type=int, default=4)
@@ -196,7 +204,11 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     from repro.serving.costmodel import WorkerSpec
     from repro.serving.simulator import build_cluster
     from repro.workload import SCENARIOS, generate_trace, get_scenario, \
-        load_csv
+        load_csv, replay_csv
+
+    if args.backend == "trace-replay" and args.mode == "real":
+        ap.error("--backend trace-replay streams the simulated clock; "
+                 "--mode real owns its own backend (drop one of the flags)")
 
     if args.scenario not in SCENARIOS:
         ap.error(f"--scenario must be one of {sorted(SCENARIOS)}")
@@ -230,34 +242,47 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         ici_links=args.ici_links, page_size=args.page_size,
         online_predictor=args.online_predictor,
         role_rebalance=False if args.no_rebalance else "auto")
+    # one workload-source selection for both feeds: each leaf names the
+    # (materialised, streaming) pair so --backend trace-replay can never
+    # diverge from the default path on *which* workload runs
+    streaming = args.backend == "trace-replay"
     if classes is not None:
         scenario = _classes_scenario(classes, cost)
         if args.trace_csv:
-            trace = load_csv(args.trace_csv, cost, classes=scenario.classes)
+            feed = replay_csv(args.trace_csv, cost,
+                              classes=scenario.classes) if streaming \
+                else load_csv(args.trace_csv, cost, classes=scenario.classes)
         else:
-            trace = scenario.generate(args.rate, args.duration, cost,
-                                      seed=args.seed)
+            feed = (scenario.replay if streaming else scenario.generate)(
+                args.rate, args.duration, cost, seed=args.seed)
     elif args.trace_csv:
-        trace = load_csv(args.trace_csv, cost)
+        feed = replay_csv(args.trace_csv, cost) if streaming \
+            else load_csv(args.trace_csv, cost)
     elif args.scenario != "mooncake":
-        trace = get_scenario(args.scenario).generate(
+        scenario = get_scenario(args.scenario)
+        feed = (scenario.replay if streaming else scenario.generate)(
             args.rate, args.duration, cost, seed=args.seed)
     else:
         # legacy single-class path: RNG-stream identical to pre-workload
         # releases, so seeded runs reproduce bit-exactly
         trace = generate_trace(args.rate, args.duration, cost,
                                seed=args.seed)
-    if args.mode == "real":
-        import jax
-        from repro.serving.executor import ClusterRealExecutors
-        for r in trace:   # shrink to smoke scale
-            r.prompt_len = min(r.prompt_len, 48)
-            r.output_len = min(r.output_len, 16)
-        execs = ClusterRealExecutors(cfg, args.workers, max_slots=8,
-                                     max_len=128,
-                                     rng=jax.random.PRNGKey(args.seed))
-        sim.sched.backend = execs.as_backend(clock="wall")
-    sim.add_trace(trace)
+        feed = ((r.arrival_time, r) for r in trace) if streaming else trace
+
+    if streaming:
+        sim.add_replay(feed)
+    else:
+        if args.mode == "real":
+            import jax
+            from repro.serving.executor import ClusterRealExecutors
+            for r in feed:   # shrink to smoke scale
+                r.prompt_len = min(r.prompt_len, 48)
+                r.output_len = min(r.output_len, 16)
+            execs = ClusterRealExecutors(cfg, args.workers, max_slots=8,
+                                         max_len=128,
+                                         rng=jax.random.PRNGKey(args.seed))
+            sim.sched.backend = execs.as_backend(clock="wall")
+        sim.add_trace(feed)
     if args.fail_worker is not None:
         sim.inject_failure(args.duration / 2, args.fail_worker,
                            recover_after=args.duration / 4)
@@ -274,6 +299,7 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         scenario_label = args.scenario
     row = m.row()
     row.update(policy=args.policy, arch=cfg.name, mode=args.mode,
+               backend=args.backend if args.mode == "sim" else "real-jax",
                rate=args.rate, workers=args.workers, seed=args.seed,
                scenario=scenario_label,
                schema_version=METRICS_SCHEMA_VERSION,

@@ -1,0 +1,39 @@
+"""repro.perf — the unified interference-aware performance model.
+
+One subsystem owns every step-time estimate in the stack:
+
+* ``hardware``    — per-worker ``HardwareSpec``/``WorkerSpec`` (clusters
+                    may mix fast and slow workers);
+* ``model``       — the ``IterationCostModel`` interface and the roofline
+                    ``CostModel`` with the §IV mixed-batch interference
+                    term (``HardwareSpec.interference``, default off);
+* ``predictor``   — §IV-C analytic/profiled predictors, per-worker aware
+                    (``ClusterPredictor`` prices on the target worker);
+* ``calibration`` — ``OnlinePredictor``: per-(worker, phase, size-bucket)
+                    EWMA correction from observed durations;
+* ``calibrate``   — measured-MFU roofline: run the real Pallas kernels
+                    once, instantiate the model from measurements
+                    (``CalibratedRooflineBackend``).
+
+``serving/costmodel.py`` and ``core/predictor.py`` remain as import shims
+so every pre-existing call site keeps working unchanged.
+"""
+from repro.perf.calibrate import (CalibratedRooflineBackend,
+                                  KernelCalibration, calibrate_hardware)
+from repro.perf.calibration import OnlinePredictor
+from repro.perf.hardware import V5E, HardwareSpec, WorkerSpec
+from repro.perf.model import (CostModel, IterationCostModel, ModelCostSpec,
+                              build_cost_spec, canonical_iteration_time,
+                              relative_speeds)
+from repro.perf.predictor import (AnalyticalPredictor, BiasedPredictor,
+                                  ClusterPredictor, Predictor,
+                                  ProfiledPredictor, profile_worker)
+
+__all__ = [
+    "AnalyticalPredictor", "BiasedPredictor", "CalibratedRooflineBackend",
+    "ClusterPredictor", "CostModel", "HardwareSpec", "IterationCostModel",
+    "KernelCalibration", "ModelCostSpec", "OnlinePredictor", "Predictor",
+    "ProfiledPredictor", "V5E", "WorkerSpec", "build_cost_spec",
+    "calibrate_hardware", "canonical_iteration_time", "profile_worker",
+    "relative_speeds",
+]

@@ -1,0 +1,66 @@
+"""Hardware descriptions for the unified performance model.
+
+``HardwareSpec`` is **per-worker**: a cluster may mix fast and slow
+workers (different chip generations, degraded-MFU stragglers, thermally
+throttled hosts), and every layer that prices work — dispatch, toggle
+admission, decode routing, role rebalancing — must price it on the
+*target* worker's hardware, not a global spec. ``WorkerSpec`` scales one
+``HardwareSpec`` by the tensor-parallel degree of a model replica.
+
+Constants follow the assignment hardware: TPU v5e, 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    hbm_bytes: float = 16e9           # per chip
+    ici_bw: float = 50e9              # bytes/s per link
+    ici_links: int = 2                # usable links for P2P KV migration
+    mfu_prefill: float = 0.55         # achievable fraction of peak, big GEMMs
+    mfu_decode: float = 0.6           # decode GEMMs are memory bound anyway
+    bw_eff: float = 0.8
+    t_fixed: float = 0.003            # per-iteration dispatch overhead (s)
+    migration_latency: float = 0.001  # per-migration fixed cost (s)
+    # §IV interference: decode tokens co-batched with prefill chunks pay a
+    # contention penalty (the mixed iteration is NOT the sum of its parts —
+    # it is worse). 0.0 = the legacy purely-additive roofline, which every
+    # pre-existing benchmark reproduces bit-exactly; CalibratedRooflineBackend
+    # or an explicit spec override turns it on.
+    interference: float = 0.0
+
+    def slowed(self, factor: float) -> "HardwareSpec":
+        """A ``factor``x-slower variant of this spec (straggler modelling):
+        compute and memory throughput both divide by ``factor``."""
+        return dataclasses.replace(
+            self, name=f"{self.name}-x{factor:g}slow",
+            peak_flops=self.peak_flops / factor,
+            hbm_bw=self.hbm_bw / factor)
+
+
+V5E = HardwareSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerSpec:
+    """One serving worker = ``tp`` chips running one model replica."""
+    tp: int = 4
+    hw: HardwareSpec = V5E
+
+    @property
+    def peak_flops(self) -> float:
+        return self.tp * self.hw.peak_flops
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.tp * self.hw.hbm_bw
+
+    @property
+    def hbm_bytes(self) -> float:
+        return self.tp * self.hw.hbm_bytes

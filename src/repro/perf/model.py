@@ -1,0 +1,339 @@
+"""Analytical worker step-time model — the one iteration-cost oracle.
+
+Used by (a) the SimExecutor / ``CostModelBackend`` as the simulation
+clock, (b) the scheduler's execution-time predictor (§IV-C: "we leverage
+offline profiling tools to estimate the execution time of a prefill
+request"), and (c) the toggle's admission maths. Before this package the
+same quantity was computed three different ways in three layers; every
+consumer now shares the ``IterationCostModel`` interface.
+
+The model is a two-term roofline per iteration:
+
+    t = max(FLOPs / (chips·peak·mfu),  bytes / (chips·bw·eff)) + t_fixed
+
+with per-family FLOP/byte accounting (dense / MoE active params / rwkv &
+mamba constant-state / enc-dec), plus an optional §IV **interference
+term** for mixed batches: co-batched prefill chunks contend with decode's
+memory streaming, so the mixed iteration exceeds the combined roofline by
+
+    γ · β_p · β_d · min(t_prefill_alone, t_decode_alone)
+
+where β_p is the prefill side's compute-boundedness, β_d the decode
+side's memory-boundedness and γ = ``HardwareSpec.interference`` the
+calibrated contention coefficient. Contention is worst when each phase
+saturates a *different* resource (overlap beyond the max is impossible and
+the iteration drifts toward the additive sum); when both phases are bound
+on the same resource the combined roofline already charges the serialised
+cost and the penalty vanishes with 1-β. γ = 0 reproduces the legacy
+purely-additive model bit-exactly — the default, so every pre-existing
+benchmark and decision-parity test is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.models.layers import ModelConfig
+from repro.perf.hardware import V5E, HardwareSpec, WorkerSpec
+
+
+@runtime_checkable
+class IterationCostModel(Protocol):
+    """What every layer consuming step-time estimates depends on: the
+    simulator clock, the §IV-C predictors, toggle admission, decode
+    routing, and KV migration pricing all speak this interface."""
+
+    def iteration_time(self, n_decode: int, sum_ctx: float,
+                       prefill_tokens: int = 0,
+                       prefill_ctx_offset: float = 0.0) -> float: ...
+
+    def prefill_time(self, prompt_tokens: int, ctx_offset: int = 0) -> float: ...
+
+    def decode_iter_time(self, n_decode: int, sum_ctx: float) -> float: ...
+
+    def migration_time(self, ctx_tokens: int) -> float: ...
+
+    def kv_transfer_bytes(self, ctx_tokens: int) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCostSpec:
+    """Closed-form per-token cost coefficients for one architecture."""
+    name: str
+    n_params: float                 # total parameters
+    n_active: float                 # matmul-active params per token
+    kv_bytes_per_token: float       # bytes of KV/state written per token
+    attn_flops_per_ctx_token: float  # 4·Hq·Dh summed over ctx-attending layers
+    ctx_cap: Optional[int]          # sliding-window cap (gemma2 local layers)
+    state_bytes: float              # constant per-request state (rwkv/mamba)
+    bytes_per_weight: float = 2.0   # bf16
+
+
+def _transformer_attn_params(cfg: ModelConfig) -> float:
+    p = (cfg.d_model * cfg.num_heads * cfg.head_dim          # wq
+         + 2 * cfg.d_model * cfg.num_kv_heads * cfg.head_dim  # wk, wv
+         + cfg.num_heads * cfg.head_dim * cfg.d_model)        # wo
+    if cfg.qkv_bias:
+        p += (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+    return p
+
+
+def build_cost_spec(cfg: ModelConfig) -> ModelCostSpec:
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    mlp = (3 if cfg.mlp_gated else 2) * d * f
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer = _transformer_attn_params(cfg) + mlp
+        total = embed + L * per_layer
+        active = L * per_layer + v * d      # unembed matmul counts as active
+        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
+        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L
+        ctx_cap = cfg.sliding_window if cfg.local_global_alternating else None
+        state = 0.0
+    elif cfg.family == "moe":
+        experts = cfg.num_experts * 3 * d * f
+        shared = cfg.num_shared_experts * 3 * d * f
+        dense_res = (3 * d * cfg.moe_dense_residual_ff
+                     if cfg.moe_dense_residual_ff else 0)
+        router = d * cfg.num_experts
+        per_layer = _transformer_attn_params(cfg) + experts + shared \
+            + dense_res + router
+        per_layer_active = _transformer_attn_params(cfg) \
+            + cfg.top_k * 3 * d * f + shared + dense_res + router
+        total = embed + L * per_layer
+        active = L * per_layer_active + v * d
+        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
+        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L
+        ctx_cap, state = None, 0.0
+    elif cfg.family == "rwkv":
+        # tm: 5 square proj + lora; cm: 2 d·f + d·d
+        per_layer = 5 * d * d + d * (5 * 32) + d * 64 + 64 * d \
+            + 2 * d * f + d * d
+        total = embed + L * per_layer
+        active = L * per_layer + v * d
+        kv = 0.0
+        attn_c = 0.0
+        ctx_cap = None
+        state = L * (d / 64) * 64 * 64 * 4.0 + 2 * L * d * 2.0  # wkv f32
+    elif cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * d
+        n_heads = d_inner // 64
+        mamba = 2 * d * d_inner + 2 * d * cfg.ssm_state + d * n_heads \
+            + d_inner * d
+        shared = _transformer_attn_params(cfg) + mlp + 2 * d * d + d * d
+        ninv = (L + cfg.attn_every - 1) // cfg.attn_every
+        total = embed + L * mamba + shared
+        active = L * mamba + ninv * shared + v * d
+        kv = 2 * ninv * cfg.num_kv_heads * cfg.head_dim * 2.0
+        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * ninv
+        ctx_cap = None
+        state = L * (n_heads * 64 * cfg.ssm_state * 4.0
+                     + (cfg.ssm_conv - 1) * (d_inner + 2 * cfg.ssm_state) * 2.0)
+    elif cfg.family == "encdec":
+        n_enc = cfg.encoder_layers or L
+        enc_layer = _transformer_attn_params(cfg) + mlp
+        dec_layer = 2 * _transformer_attn_params(cfg) + mlp
+        total = embed + n_enc * enc_layer + L * dec_layer
+        active = L * dec_layer + v * d          # decode-side active
+        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
+        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L * 2  # self + cross
+        ctx_cap = None
+        state = 0.0
+    else:
+        raise ValueError(cfg.family)
+
+    return ModelCostSpec(
+        name=cfg.name, n_params=float(total), n_active=float(active),
+        kv_bytes_per_token=float(kv), attn_flops_per_ctx_token=float(attn_c),
+        ctx_cap=ctx_cap, state_bytes=float(state),
+    )
+
+
+class CostModel:
+    """Iteration-time + capacity model for one (model, worker) pair.
+
+    Implements ``IterationCostModel``. Heterogeneous clusters instantiate
+    one per worker (each with its own ``WorkerSpec``/``HardwareSpec``); a
+    homogeneous cluster may share a single instance across workers."""
+
+    def __init__(self, cfg: ModelConfig, worker: WorkerSpec = WorkerSpec(),
+                 page_size: int = 16):
+        self.cfg = cfg
+        self.spec = build_cost_spec(cfg)
+        self.worker = worker
+        self.page_size = page_size          # KV block granularity (tokens)
+        self.params_bytes = self.spec.n_params * self.spec.bytes_per_weight
+
+    # ------------------------------------------------------------ capacity
+    def kv_capacity_pages(self, reserve_frac: float = 0.1) -> int:
+        """Allocatable KV pages per worker (page = ``page_size`` tokens)."""
+        return max(1, self.kv_capacity_tokens(reserve_frac) // self.page_size)
+
+    def kv_capacity_tokens(self, reserve_frac: float = 0.1) -> int:
+        free = self.worker.hbm_bytes * (1 - reserve_frac) - self.params_bytes
+        if self.spec.kv_bytes_per_token <= 0:
+            # constant-state family: capacity = #states that fit
+            per = max(self.spec.state_bytes, 1.0)
+            return int(free / per) * 10_000   # effectively request-bounded
+        return max(0, int(free / self.spec.kv_bytes_per_token))
+
+    def state_tokens(self, ctx: int) -> float:
+        """HBM tokens-equivalent held by a request with context ctx."""
+        if self.spec.kv_bytes_per_token <= 0:
+            return self.spec.state_bytes / max(self.spec.kv_bytes_per_token, 1.0) \
+                if self.spec.kv_bytes_per_token else 0.0
+        cap = self.spec.ctx_cap
+        if cap is not None:
+            # gemma2: half the layers hold only window-sized KV
+            return ctx * 0.5 + min(ctx, cap) * 0.5
+        return float(ctx)
+
+    # --------------------------------------------------------------- steps
+    def _roofline(self, flops: float, bytes_: float, mfu: float) -> float:
+        hw = self.worker.hw
+        t_c = flops / (self.worker.peak_flops * mfu)
+        t_m = bytes_ / (self.worker.hbm_bw * hw.bw_eff)
+        return max(t_c, t_m) + hw.t_fixed
+
+    def _attn_ctx(self, ctx: float) -> float:
+        cap = self.spec.ctx_cap
+        if cap is None:
+            return ctx
+        return 0.5 * ctx + 0.5 * min(ctx, cap)
+
+    def _decode_terms(self, n_decode: int, sum_ctx: float
+                      ) -> tuple[float, float, float, float]:
+        """Decode-side accounting terms, kept individual so both the
+        combined iteration roofline and the interference penalty sum them
+        in their own (bit-pinned) order from one source of truth:
+        (gemm_flops, attn_flops, kv_bytes, state_bytes)."""
+        s = self.spec
+        return (2.0 * s.n_active * n_decode,
+                s.attn_flops_per_ctx_token * self._attn_ctx(sum_ctx),
+                s.kv_bytes_per_token * self._attn_ctx(sum_ctx),
+                s.state_bytes * n_decode * 2)   # rwkv/mamba state rw
+
+    def _prefill_terms(self, prefill_tokens: int, ctx_offset: float
+                       ) -> tuple[float, float, float]:
+        """Prefill-chunk accounting terms: (gemm_flops, attn_flops,
+        kv_bytes)."""
+        s = self.spec
+        p, c = float(prefill_tokens), float(ctx_offset)
+        return (2.0 * s.n_active * p,
+                s.attn_flops_per_ctx_token * self._attn_ctx(c + p / 2) * p,
+                s.kv_bytes_per_token * (self._attn_ctx(c + p) + p))
+
+    def iteration_time(self, n_decode: int, sum_ctx: float,
+                       prefill_tokens: int = 0,
+                       prefill_ctx_offset: float = 0.0) -> float:
+        """One engine iteration: a decode batch (n_decode requests whose
+        contexts sum to sum_ctx) plus an optional piggybacked prefill chunk
+        of ``prefill_tokens`` starting at context ``prefill_ctx_offset``."""
+        flops = 0.0
+        bytes_ = 0.0
+        if n_decode > 0:
+            df_gemm, df_attn, db_kv, db_state = \
+                self._decode_terms(n_decode, sum_ctx)
+            flops += df_gemm
+            flops += df_attn
+            bytes_ += db_kv
+            bytes_ += db_state
+        if prefill_tokens > 0:
+            pf_gemm, pf_attn, pb_kv = \
+                self._prefill_terms(prefill_tokens, prefill_ctx_offset)
+            flops += pf_gemm
+            flops += pf_attn
+            bytes_ += pb_kv
+        if flops == 0.0 and bytes_ == 0.0:
+            return 0.0
+        bytes_ += self.params_bytes  # weights stream once per iteration
+        mfu = (self.worker.hw.mfu_prefill if prefill_tokens > 0
+               else self.worker.hw.mfu_decode)
+        t = self._roofline(flops, bytes_, mfu)
+        gamma = self.worker.hw.interference
+        if gamma != 0.0 and n_decode > 0 and prefill_tokens > 0:
+            t += self._interference(gamma, n_decode, sum_ctx,
+                                    prefill_tokens, prefill_ctx_offset)
+        return t
+
+    def _interference(self, gamma: float, n_decode: int, sum_ctx: float,
+                      prefill_tokens: int, prefill_ctx_offset: float) -> float:
+        """§IV contention penalty for a mixed prefill+decode batch.
+
+        Phase-alone roofline terms (no ``t_fixed``; each phase streams the
+        weights once when run alone):
+
+            β_p = prefill compute-boundedness = t_cᵖ / max(t_cᵖ, t_mᵖ)
+            β_d = decode  memory-boundedness  = t_mᵈ / max(t_cᵈ, t_mᵈ)
+
+        penalty = γ · β_p · β_d · min(t_prefill_alone, t_decode_alone):
+        zero whenever either phase is absent, largest when a compute-bound
+        prefill is inserted into a memory-bound decode batch (the paper's
+        observed super-additive slowdown; DistServe §3 measures the same
+        asymmetry), bounded by the smaller phase's standalone time so the
+        mixed iteration never exceeds the fully-serialised sum."""
+        hw = self.worker.hw
+        comp = self.worker.peak_flops
+        mem = self.worker.hbm_bw * hw.bw_eff
+
+        df_gemm, df_attn, db_kv, db_state = \
+            self._decode_terms(n_decode, sum_ctx)
+        d_flops = df_gemm + df_attn
+        d_bytes = db_kv + db_state + self.params_bytes
+        pf_gemm, pf_attn, pb_kv = \
+            self._prefill_terms(prefill_tokens, prefill_ctx_offset)
+        p_flops = pf_gemm + pf_attn
+        p_bytes = pb_kv + self.params_bytes
+
+        t_cp = p_flops / (comp * hw.mfu_prefill)
+        t_mp = p_bytes / mem
+        t_cd = d_flops / (comp * hw.mfu_decode)
+        t_md = d_bytes / mem
+        t_p = max(t_cp, t_mp)
+        t_d = max(t_cd, t_md)
+        if t_p <= 0.0 or t_d <= 0.0:
+            return 0.0
+        beta_p = t_cp / t_p
+        beta_d = t_md / t_d
+        return gamma * beta_p * beta_d * min(t_p, t_d)
+
+    def prefill_time(self, prompt_tokens: int, ctx_offset: int = 0) -> float:
+        return self.iteration_time(0, 0.0, prompt_tokens, ctx_offset)
+
+    def decode_iter_time(self, n_decode: int, sum_ctx: float) -> float:
+        return self.iteration_time(n_decode, sum_ctx)
+
+    # ----------------------------------------------------------- migration
+    def kv_transfer_bytes(self, ctx_tokens: int) -> float:
+        """Bytes of KV/state that must cross the ICI links to migrate a
+        request with context ``ctx_tokens``."""
+        return self.spec.kv_bytes_per_token * self.state_tokens(ctx_tokens) \
+            + self.spec.state_bytes
+
+    def migration_time(self, ctx_tokens: int) -> float:
+        """Uncontended lower bound (the seed's fixed-delay model); the
+        contended path lives in serving/transfer.py."""
+        hw = self.worker.hw
+        bw = hw.ici_bw * hw.ici_links
+        return hw.migration_latency + self.kv_transfer_bytes(ctx_tokens) / bw
+
+
+def canonical_iteration_time(cost: IterationCostModel) -> float:
+    """One canonical mixed iteration (decode batch of 8 at ctx 2048 each,
+    plus a 2048-token prefill chunk): THE probe that ranks heterogeneous
+    hardware. Both the relative-speed normalisation and
+    ``ClusterPredictor``'s reference-worker choice use it, so the two
+    notions of 'fastest worker' can never drift apart."""
+    return cost.iteration_time(8, 8 * 2048.0, 2048, 0.0)
+
+
+def relative_speeds(costs: dict[int, CostModel]) -> dict[int, float]:
+    """Per-worker relative throughput (fastest worker = 1.0), from each
+    worker's predicted time on the canonical mixed iteration. Load metrics
+    divide by this so 'least loaded' means 'finishes soonest', not 'fewest
+    tokens' — on a homogeneous cluster every speed is exactly 1.0 and all
+    orderings are unchanged."""
+    ref = {wid: canonical_iteration_time(c) for wid, c in costs.items()}
+    fastest = min(ref.values())
+    return {wid: fastest / t if t > 0 else 1.0 for wid, t in ref.items()}

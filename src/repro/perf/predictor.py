@@ -1,0 +1,180 @@
+"""Execution-time predictors (paper §IV-C), per-worker aware.
+
+The toggle "leverages offline profiling tools to estimate both the
+execution time of a prefill request and the queuing time when scheduling
+to the local worker". Every predict method takes an optional ``wid`` so
+callers can price work on the *target* worker's hardware — heterogeneous
+clusters answer differently per worker, homogeneous ones ignore it (and
+stay decision-identical to the pre-``repro.perf`` scheduler).
+
+* ``AnalyticalPredictor`` — wraps one roofline ``CostModel`` (what the
+  simulator itself uses, optionally with a safety margin; predictor error
+  can be injected for robustness experiments). Worker-agnostic.
+* ``ClusterPredictor`` — one ``IterationCostModel`` per worker: the
+  heterogeneous-cluster analytic predictor. ``wid=None`` prices on the
+  reference (fastest) worker.
+* ``ProfiledPredictor`` — piecewise-linear interpolation over an offline
+  profile table {(tokens, ctx) -> seconds}, the way a real deployment
+  profiles its worker; built by ``profile_worker`` from any executor.
+
+The online-calibration wrapper (``OnlinePredictor``) lives in
+``repro.perf.calibration``.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.perf.model import (CostModel, IterationCostModel,
+                              canonical_iteration_time)
+
+
+class Predictor:
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0,
+                        wid: Optional[int] = None) -> float:
+        raise NotImplementedError
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float,
+                            wid: Optional[int] = None) -> float:
+        raise NotImplementedError
+
+    def predict_migration(self, ctx_tokens: int,
+                          wid: Optional[int] = None) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class AnalyticalPredictor(Predictor):
+    cost: CostModel
+    safety: float = 1.1          # conservative over-estimate (paper: the
+                                 # toggle "conservatively sends requests")
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0,
+                        wid: Optional[int] = None) -> float:
+        return self.cost.prefill_time(tokens, ctx_offset) * self.safety
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float,
+                            wid: Optional[int] = None) -> float:
+        return self.cost.decode_iter_time(n_decode, sum_ctx) * self.safety
+
+    def predict_migration(self, ctx_tokens: int,
+                          wid: Optional[int] = None) -> float:
+        return self.cost.migration_time(ctx_tokens) * self.safety
+
+
+class BiasedPredictor(AnalyticalPredictor):
+    """Systematically ``bias``×-miscalibrated analytical predictor — a
+    stale or wrong-hardware offline profile. Robustness benchmarks and the
+    OnlinePredictor convergence tests inject known error through this."""
+
+    def __init__(self, cost: CostModel, bias: float, safety: float = 1.1):
+        super().__init__(cost, safety=safety)
+        self.bias = bias
+
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0,
+                        wid: Optional[int] = None) -> float:
+        return super().predict_prefill(tokens, ctx_offset, wid) * self.bias
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float,
+                            wid: Optional[int] = None) -> float:
+        return super().predict_decode_iter(n_decode, sum_ctx, wid) * self.bias
+
+
+class ClusterPredictor(Predictor):
+    """Per-worker analytic pricing over heterogeneous hardware.
+
+    One ``IterationCostModel`` per worker id; predictions for ``wid``
+    price on that worker's spec, so a 2x-slow straggler's prefill chunk
+    really predicts 2x longer. ``wid=None`` (worker-agnostic call sites:
+    SLO derivation, global-queue sizing) uses the reference model — by
+    convention the fastest worker's, matching the optimistic light-load
+    latencies SLOs are derived from."""
+
+    def __init__(self, costs: dict[int, IterationCostModel],
+                 reference: Optional[IterationCostModel] = None,
+                 safety: float = 1.1):
+        if not costs:
+            raise ValueError("ClusterPredictor needs at least one worker")
+        self.costs = dict(costs)
+        self.safety = safety
+        self.reference = reference if reference is not None else min(
+            self.costs.values(), key=canonical_iteration_time)
+
+    def _cost(self, wid: Optional[int]) -> IterationCostModel:
+        if wid is None:
+            return self.reference
+        return self.costs.get(wid, self.reference)
+
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0,
+                        wid: Optional[int] = None) -> float:
+        return self._cost(wid).prefill_time(tokens, ctx_offset) * self.safety
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float,
+                            wid: Optional[int] = None) -> float:
+        return self._cost(wid).decode_iter_time(n_decode, sum_ctx) \
+            * self.safety
+
+    def predict_migration(self, ctx_tokens: int,
+                          wid: Optional[int] = None) -> float:
+        return self._cost(wid).migration_time(ctx_tokens) * self.safety
+
+
+class ProfiledPredictor(Predictor):
+    """Interpolates a profiled (tokens -> seconds) table; ctx contributions
+    enter linearly with a profiled per-ctx-token coefficient."""
+
+    def __init__(self, prefill_points: Sequence[tuple[int, float]],
+                 decode_points: Sequence[tuple[int, float, float]],
+                 ctx_coeff: float, migration_coeff: float,
+                 safety: float = 1.1):
+        self.prefill_points = sorted(prefill_points)
+        self.decode_points = sorted(decode_points)
+        self.ctx_coeff = ctx_coeff
+        self.migration_coeff = migration_coeff
+        self.safety = safety
+
+    @staticmethod
+    def _interp(points, x):
+        xs = [p[0] for p in points]
+        i = bisect.bisect_left(xs, x)
+        if i == 0:
+            lo, hi = points[0], points[min(1, len(points) - 1)]
+        elif i >= len(points):
+            lo, hi = points[-2] if len(points) > 1 else points[-1], points[-1]
+        else:
+            lo, hi = points[i - 1], points[i]
+        if hi[0] == lo[0]:
+            return lo[1]
+        t = (x - lo[0]) / (hi[0] - lo[0])
+        return lo[1] + t * (hi[1] - lo[1])
+
+    def predict_prefill(self, tokens: int, ctx_offset: int = 0,
+                        wid: Optional[int] = None) -> float:
+        base = self._interp(self.prefill_points, tokens)
+        return (base + self.ctx_coeff * ctx_offset * tokens) * self.safety
+
+    def predict_decode_iter(self, n_decode: int, sum_ctx: float,
+                            wid: Optional[int] = None) -> float:
+        base = self._interp([(b, t) for b, t, _ in self.decode_points], n_decode)
+        return (base + self.ctx_coeff * sum_ctx) * self.safety
+
+    def predict_migration(self, ctx_tokens: int,
+                          wid: Optional[int] = None) -> float:
+        return self.migration_coeff * ctx_tokens * self.safety
+
+
+def profile_worker(step_fn: Callable[[int, float, int], float],
+                   token_grid: Sequence[int] = (128, 512, 2048, 8192),
+                   batch_grid: Sequence[int] = (1, 8, 32, 128),
+                   ctx_probe: int = 8192) -> ProfiledPredictor:
+    """Build a ProfiledPredictor by measuring ``step_fn(n_decode, sum_ctx,
+    prefill_tokens) -> seconds`` — works against the real executor or the
+    simulator alike (offline profiling per §IV-C)."""
+    prefill_points = [(t, step_fn(0, 0.0, t)) for t in token_grid]
+    decode_points = [(b, step_fn(b, float(b * 512), 0), 512.0)
+                     for b in batch_grid]
+    t0 = step_fn(1, 0.0, 0)
+    t1 = step_fn(1, float(ctx_probe), 0)
+    ctx_coeff = max(0.0, (t1 - t0) / ctx_probe)
+    return ProfiledPredictor(prefill_points, decode_points, ctx_coeff,
+                             migration_coeff=1e-9)

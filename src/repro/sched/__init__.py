@@ -2,12 +2,13 @@
 
 One SLO-aware ``ClusterScheduler`` owns dispatch, the global queue,
 iteration planning, decode routing and role lifecycle; clock/compute
-sources (the discrete-event ``Simulator``, the real-JAX executor) drive it
-through the narrow ``ExecutionBackend`` protocol, so every execution
-substrate exercises the *same* scheduling code path.
+sources (the discrete-event ``Simulator``, the real-JAX executor, the
+trace-replay stream) drive it through the narrow ``ExecutionBackend``
+protocol, so every execution substrate exercises the *same* scheduling
+code path.
 """
 from repro.sched.backend import (CallableBackend, CostModelBackend,
-                                 ExecutionBackend)
+                                 ExecutionBackend, TraceReplayBackend)
 from repro.sched.core import ClusterScheduler
 from repro.sched.rebalance import RebalanceConfig, RoleRebalancer
 
@@ -18,4 +19,5 @@ __all__ = [
     "ExecutionBackend",
     "RebalanceConfig",
     "RoleRebalancer",
+    "TraceReplayBackend",
 ]

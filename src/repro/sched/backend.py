@@ -13,13 +13,21 @@ Implementations:
   simulation; default).
 * ``CallableBackend`` — adapts a bare ``duration_fn(worker, plan)`` (the
   legacy ``Simulator.duration_fn`` hook, noise-injection experiments).
+* ``TraceReplayBackend`` — streams a recorded/synthesised trace
+  (``Scenario.replay`` / ``replay_csv`` iterators) into the driver lazily
+  while an inner backend supplies durations: arrivals need never be
+  materialised up front, which is how a recorded production trace with
+  millions of requests replays in O(1) pending-arrival memory.
 * ``RealJaxBackend`` (serving/executor.py) — actually runs the JAX model
   and measures wall-clock, or runs it under the cost-model clock for
   decision-parity tests against the simulator.
+* ``CalibratedRooflineBackend`` (repro.perf.calibrate) — the analytic
+  clock re-instantiated from measured Pallas-kernel MFU/bandwidth.
 """
 from __future__ import annotations
 
-from typing import Callable, Protocol, runtime_checkable
+from typing import Callable, Iterable, Iterator, Optional, Protocol, \
+    runtime_checkable
 
 from repro.core.request import Request
 from repro.serving.engine import IterationPlan, Worker
@@ -77,3 +85,65 @@ class CallableBackend:
     def on_migrate(self, req: Request, src_wid: int, dst_wid: int) -> None:
         if self.base is not None:
             self.base.on_migrate(req, src_wid, dst_wid)
+
+
+class TraceReplayBackend:
+    """Replay a trace through the scheduler without materialising it.
+
+    Wraps the ``(arrival_time, Request)`` iterator contract of
+    ``repro.workload.Scenario.replay`` / ``replay_csv`` (or any recorded
+    stream in that shape) and an inner ``ExecutionBackend`` that supplies
+    iteration durations (default: the analytical cost-model clock). The
+    driver (``Simulator.add_replay``) pulls arrivals one at a time via
+    ``next_arrival`` and keeps exactly one pending arrival event in its
+    heap — a million-request production dump replays in constant memory,
+    and the scheduling decisions are identical to pre-materialising the
+    same stream with ``add_trace`` for time-sorted feeds with distinct
+    timestamps (an arrival landing on exactly the same float second as
+    another pending event tie-breaks by heap insertion order, which
+    necessarily differs between the two feeds; continuous-time arrival
+    processes never tie). Unsorted feeds raise ``ValueError``.
+    """
+
+    def __init__(self, replay: Iterable[tuple[float, Request]],
+                 inner: Optional[ExecutionBackend] = None):
+        self._iter: Iterator[tuple[float, Request]] = iter(replay)
+        # remember whether the clock was defaulted: Simulator.add_replay
+        # substitutes its configured backend for a defaulted inner, so a
+        # pre-constructed TraceReplayBackend(feed) and a raw iterator get
+        # the same physics (a custom duration_fn is never silently lost)
+        self.inner_defaulted = inner is None
+        self.inner: ExecutionBackend = inner or CostModelBackend()
+        self.replayed = 0
+        self._last_t = float("-inf")
+
+    # ------------------------------------------------------- arrival stream
+    def next_arrival(self) -> Optional[tuple[float, Request]]:
+        """The next ``(arrival_time, Request)`` pair, or None when the
+        trace is exhausted. Streaming keeps only ONE pending arrival, so
+        the feed must be sorted by arrival time — an out-of-order item
+        would move the driver's clock backwards and silently corrupt
+        every now-derived metric. Raises ValueError instead (sort the
+        trace, or use the materialising ``add_trace`` path, which heaps
+        everything up front and tolerates any order)."""
+        item = next(self._iter, None)
+        if item is not None:
+            if item[0] < self._last_t:
+                raise ValueError(
+                    f"trace-replay feed is not sorted by arrival time: "
+                    f"got t={item[0]:.6f} after t={self._last_t:.6f} "
+                    f"(rid={item[1].rid}); sort the trace or replay it "
+                    f"via add_trace")
+            self._last_t = item[0]
+            self.replayed += 1
+        return item
+
+    # --------------------------------------------------- ExecutionBackend
+    def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
+        return self.inner.run_iteration(worker, plan)
+
+    def on_finish(self, req: Request) -> None:
+        self.inner.on_finish(req)
+
+    def on_migrate(self, req: Request, src_wid: int, dst_wid: int) -> None:
+        self.inner.on_migrate(req, src_wid, dst_wid)

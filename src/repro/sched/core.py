@@ -132,7 +132,7 @@ class ClusterScheduler:
         self._busy[wid] = False
         if not w.view.alive:
             return
-        self._observe(plan, dur)
+        self._observe(wid, plan, dur)
         finished_prefills = w.complete_iteration(plan, now, dur)
         self._record_outcomes(plan, finished_prefills)
         for req in finished_prefills:
@@ -251,13 +251,15 @@ class ClusterScheduler:
         self._arm_rebalance(now)
 
     # --------------------------------------------------- feedback + roles
-    def _observe(self, plan: IterationPlan, dur: float) -> None:
+    def _observe(self, wid: int, plan: IterationPlan, dur: float) -> None:
         """Close the §IV-C loop: feed the observed iteration duration back
-        to the predictor (OnlinePredictor EWMA-corrects; others ignore)."""
+        to the predictor (OnlinePredictor EWMA-corrects; others ignore),
+        tagged with the worker that ran it so per-worker calibration
+        (heterogeneous clusters) converges independently per worker."""
         observe = getattr(self.policy.predictor, "observe_iteration", None)
         if observe is not None:
             observe(plan.n_decode, plan.sum_ctx, plan.prefill_tokens,
-                    plan.prefill_ctx_offset, dur)
+                    plan.prefill_ctx_offset, dur, wid=wid)
 
     def _record_outcomes(self, plan: IterationPlan,
                          finished_prefills: list[Request]) -> None:

@@ -53,6 +53,14 @@ class RebalanceConfig:
                                   # convertible) capped at ceil(frac x
                                   # alive) per review; 0 = legacy single
                                   # move
+    window_ttl: Optional[float] = None
+                                  # seconds a class's window stays live
+                                  # after its last outcome: a tenant that
+                                  # stops sending traffic expires instead
+                                  # of pinning worst-class reviews to a
+                                  # stale window. None = never expire (the
+                                  # legacy behaviour; continuously-active
+                                  # classes are unaffected either way)
 
 
 class RoleRebalancer:
@@ -70,6 +78,7 @@ class RoleRebalancer:
         self._last_change = float("-inf")
         self._ttft_streak = 0         # consecutive breach reviews
         self._tpot_streak = 0
+        self._last_outcome: dict[str, float] = {}   # class -> latest event
         self.transitions: list[tuple[float, int, Role]] = []   # audit trail
 
     def _window(self, windows: dict[str, deque], name: str) -> deque:
@@ -80,9 +89,32 @@ class RoleRebalancer:
     # ------------------------------------------------------------- signals
     def record_first_token(self, req: Request) -> None:
         self._window(self.ttft_windows, req.slo.name).append(req.ttft_ok())
+        if req.first_token_time is not None:
+            self._touch(req.slo.name, req.first_token_time)
 
     def record_finish(self, req: Request) -> None:
         self._window(self.tpot_windows, req.slo.name).append(req.tpot_ok())
+        if req.finish_time is not None:
+            self._touch(req.slo.name, req.finish_time)
+
+    def _touch(self, name: str, t: float) -> None:
+        self._last_outcome[name] = max(self._last_outcome.get(name, t), t)
+
+    def _expire_stale_windows(self, now: float) -> None:
+        """Time-based decay: a class silent for longer than ``window_ttl``
+        stops contributing evidence — its window describes traffic that no
+        longer exists, and worst-class reviews must not chase it. Directly
+        populated windows with no recorded outcome timestamp (legacy
+        aggregate callers) never expire."""
+        ttl = self.cfg.window_ttl
+        if ttl is None:
+            return
+        for name, last in list(self._last_outcome.items()):
+            if now - last > ttl:
+                for windows in (self.ttft_windows, self.tpot_windows):
+                    if name in windows:
+                        windows[name].clear()
+                del self._last_outcome[name]
 
     def _worst_attainment(self, windows: dict[str, deque]) -> Optional[float]:
         """Attainment of the worst class with enough evidence (None when no
@@ -107,14 +139,18 @@ class RoleRebalancer:
         move budget. Returns a human-readable action description, or
         None."""
         cfg = self.cfg
+        self._expire_stale_windows(now)
         alive = [w for w in workers.values() if w.alive]
         m = [w for w in alive if w.role == Role.MULTIPLEX]
         p = [w for w in alive if w.role == Role.PREFILL]
 
         # paper §IV-C memory-pressure rule first: every multiplexing worker
-        # above the HBM watermark starves decode admission cluster-wide
+        # above the HBM watermark starves decode admission cluster-wide.
+        # Queued work is priced on the candidate's own hardware (tokens /
+        # relative speed): the cheapest P to flip is the one whose backlog
+        # clears soonest, not the one with the fewest raw tokens.
         if m and p and all(w.hbm_util > cfg.hbm_watermark for w in m):
-            conv = min(p, key=lambda w: w.queued_prefill_tokens)
+            conv = min(p, key=lambda w: w.queued_prefill_tokens / w.speed)
             return self._apply([conv], Role.MULTIPLEX, now, "hbm-pressure")
 
         ttft_att = self._worst_attainment(self.ttft_windows)
@@ -140,7 +176,8 @@ class RoleRebalancer:
                 deficit = (cfg.ttft_target - ttft_att) / cfg.ttft_target
                 n = min(self._n_moves(deficit, len(cands), len(alive)),
                         len(m) - 1)         # never demote the last M
-                cands.sort(key=lambda w: (w.decode_batch, w.decode_sum_ctx))
+                cands.sort(key=lambda w: (w.decode_batch,
+                                          w.decode_sum_ctx / w.speed))
                 return self._apply(cands[:n], Role.PREFILL, now,
                                    "ttft-window")
         if tpot_bad and not ttft_bad \
@@ -149,7 +186,7 @@ class RoleRebalancer:
             # start multiplexing (admission-only change)
             deficit = (cfg.tpot_target - tpot_att) / cfg.tpot_target
             n = self._n_moves(deficit, len(p), len(alive))
-            p.sort(key=lambda w: w.queued_prefill_tokens)
+            p.sort(key=lambda w: w.queued_prefill_tokens / w.speed)
             return self._apply(p[:n], Role.MULTIPLEX, now, "tpot-window")
         return None
 

@@ -1,247 +1,21 @@
-"""Analytical TPU-v5e worker step-time model.
+"""DEPRECATED import shim — the cost model moved to ``repro.perf``.
 
-Used by (a) the SimExecutor as the simulation clock and (b) the scheduler's
-execution-time predictor (§IV-C: "we leverage offline profiling tools to
-estimate the execution time of a prefill request" — prefill time on
-XLA/TPU static shapes is even more predictable than on GPU).
+Every name below is re-exported unchanged (same classes, same objects —
+``isinstance`` checks and pickle-free configs keep working), so existing
+import paths stay valid. New code should import from ``repro.perf``:
 
-The model is a two-term roofline per iteration:
+    from repro.perf import CostModel, HardwareSpec, WorkerSpec, V5E
 
-    t = max(FLOPs / (chips·peak·mfu),  bytes / (chips·bw·eff)) + t_fixed
-
-with per-family FLOP/byte accounting (dense / MoE active params / rwkv &
-mamba constant-state / enc-dec).  Hardware constants follow the assignment:
-197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per chip.
+The move gave the model a home of its own: per-worker ``HardwareSpec``
+(heterogeneous clusters), the §IV mixed-batch interference term, the
+per-worker online calibration layer and the measured-MFU calibrated
+roofline all live in ``src/repro/perf/``.
 """
-from __future__ import annotations
+from repro.perf.hardware import V5E, HardwareSpec, WorkerSpec
+from repro.perf.model import (CostModel, IterationCostModel, ModelCostSpec,
+                              build_cost_spec, relative_speeds)
 
-import dataclasses
-from typing import Optional
-
-from repro.models.layers import ModelConfig
-
-
-@dataclasses.dataclass(frozen=True)
-class HardwareSpec:
-    name: str = "tpu-v5e"
-    peak_flops: float = 197e12        # bf16 per chip
-    hbm_bw: float = 819e9             # bytes/s per chip
-    hbm_bytes: float = 16e9           # per chip
-    ici_bw: float = 50e9              # bytes/s per link
-    ici_links: int = 2                # usable links for P2P KV migration
-    mfu_prefill: float = 0.55         # achievable fraction of peak, big GEMMs
-    mfu_decode: float = 0.6           # decode GEMMs are memory bound anyway
-    bw_eff: float = 0.8
-    t_fixed: float = 0.003            # per-iteration dispatch overhead (s)
-    migration_latency: float = 0.001  # per-migration fixed cost (s)
-
-
-V5E = HardwareSpec()
-
-
-@dataclasses.dataclass(frozen=True)
-class ModelCostSpec:
-    """Closed-form per-token cost coefficients for one architecture."""
-    name: str
-    n_params: float                 # total parameters
-    n_active: float                 # matmul-active params per token
-    kv_bytes_per_token: float       # bytes of KV/state written per token
-    attn_flops_per_ctx_token: float  # 4·Hq·Dh summed over ctx-attending layers
-    ctx_cap: Optional[int]          # sliding-window cap (gemma2 local layers)
-    state_bytes: float              # constant per-request state (rwkv/mamba)
-    bytes_per_weight: float = 2.0   # bf16
-
-
-def _transformer_attn_params(cfg: ModelConfig) -> float:
-    p = (cfg.d_model * cfg.num_heads * cfg.head_dim          # wq
-         + 2 * cfg.d_model * cfg.num_kv_heads * cfg.head_dim  # wk, wv
-         + cfg.num_heads * cfg.head_dim * cfg.d_model)        # wo
-    if cfg.qkv_bias:
-        p += (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
-    return p
-
-
-def build_cost_spec(cfg: ModelConfig) -> ModelCostSpec:
-    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
-    embed = v * d * (1 if cfg.tie_embeddings else 2)
-    mlp = (3 if cfg.mlp_gated else 2) * d * f
-
-    if cfg.family in ("dense", "vlm"):
-        per_layer = _transformer_attn_params(cfg) + mlp
-        total = embed + L * per_layer
-        active = L * per_layer + v * d      # unembed matmul counts as active
-        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
-        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L
-        ctx_cap = cfg.sliding_window if cfg.local_global_alternating else None
-        state = 0.0
-    elif cfg.family == "moe":
-        experts = cfg.num_experts * 3 * d * f
-        shared = cfg.num_shared_experts * 3 * d * f
-        dense_res = (3 * d * cfg.moe_dense_residual_ff
-                     if cfg.moe_dense_residual_ff else 0)
-        router = d * cfg.num_experts
-        per_layer = _transformer_attn_params(cfg) + experts + shared \
-            + dense_res + router
-        per_layer_active = _transformer_attn_params(cfg) \
-            + cfg.top_k * 3 * d * f + shared + dense_res + router
-        total = embed + L * per_layer
-        active = L * per_layer_active + v * d
-        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
-        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L
-        ctx_cap, state = None, 0.0
-    elif cfg.family == "rwkv":
-        # tm: 5 square proj + lora; cm: 2 d·f + d·d
-        per_layer = 5 * d * d + d * (5 * 32) + d * 64 + 64 * d \
-            + 2 * d * f + d * d
-        total = embed + L * per_layer
-        active = L * per_layer + v * d
-        kv = 0.0
-        attn_c = 0.0
-        ctx_cap = None
-        state = L * (d / 64) * 64 * 64 * 4.0 + 2 * L * d * 2.0  # wkv f32
-    elif cfg.family == "hybrid":
-        d_inner = cfg.ssm_expand * d
-        n_heads = d_inner // 64
-        mamba = 2 * d * d_inner + 2 * d * cfg.ssm_state + d * n_heads \
-            + d_inner * d
-        shared = _transformer_attn_params(cfg) + mlp + 2 * d * d + d * d
-        ninv = (L + cfg.attn_every - 1) // cfg.attn_every
-        total = embed + L * mamba + shared
-        active = L * mamba + ninv * shared + v * d
-        kv = 2 * ninv * cfg.num_kv_heads * cfg.head_dim * 2.0
-        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * ninv
-        ctx_cap = None
-        state = L * (n_heads * 64 * cfg.ssm_state * 4.0
-                     + (cfg.ssm_conv - 1) * (d_inner + 2 * cfg.ssm_state) * 2.0)
-    elif cfg.family == "encdec":
-        n_enc = cfg.encoder_layers or L
-        enc_layer = _transformer_attn_params(cfg) + mlp
-        dec_layer = 2 * _transformer_attn_params(cfg) + mlp
-        total = embed + n_enc * enc_layer + L * dec_layer
-        active = L * dec_layer + v * d          # decode-side active
-        kv = 2 * L * cfg.num_kv_heads * cfg.head_dim * 2.0
-        attn_c = 4.0 * cfg.num_heads * cfg.head_dim * L * 2  # self + cross
-        ctx_cap = None
-        state = 0.0
-    else:
-        raise ValueError(cfg.family)
-
-    return ModelCostSpec(
-        name=cfg.name, n_params=float(total), n_active=float(active),
-        kv_bytes_per_token=float(kv), attn_flops_per_ctx_token=float(attn_c),
-        ctx_cap=ctx_cap, state_bytes=float(state),
-    )
-
-
-@dataclasses.dataclass(frozen=True)
-class WorkerSpec:
-    """One serving worker = ``tp`` chips running one model replica."""
-    tp: int = 4
-    hw: HardwareSpec = V5E
-
-    @property
-    def peak_flops(self) -> float:
-        return self.tp * self.hw.peak_flops
-
-    @property
-    def hbm_bw(self) -> float:
-        return self.tp * self.hw.hbm_bw
-
-    @property
-    def hbm_bytes(self) -> float:
-        return self.tp * self.hw.hbm_bytes
-
-
-class CostModel:
-    """Iteration-time + capacity model for one (model, worker) pair."""
-
-    def __init__(self, cfg: ModelConfig, worker: WorkerSpec = WorkerSpec(),
-                 page_size: int = 16):
-        self.cfg = cfg
-        self.spec = build_cost_spec(cfg)
-        self.worker = worker
-        self.page_size = page_size          # KV block granularity (tokens)
-        self.params_bytes = self.spec.n_params * self.spec.bytes_per_weight
-
-    # ------------------------------------------------------------ capacity
-    def kv_capacity_pages(self, reserve_frac: float = 0.1) -> int:
-        """Allocatable KV pages per worker (page = ``page_size`` tokens)."""
-        return max(1, self.kv_capacity_tokens(reserve_frac) // self.page_size)
-
-    def kv_capacity_tokens(self, reserve_frac: float = 0.1) -> int:
-        free = self.worker.hbm_bytes * (1 - reserve_frac) - self.params_bytes
-        if self.spec.kv_bytes_per_token <= 0:
-            # constant-state family: capacity = #states that fit
-            per = max(self.spec.state_bytes, 1.0)
-            return int(free / per) * 10_000   # effectively request-bounded
-        return max(0, int(free / self.spec.kv_bytes_per_token))
-
-    def state_tokens(self, ctx: int) -> float:
-        """HBM tokens-equivalent held by a request with context ctx."""
-        if self.spec.kv_bytes_per_token <= 0:
-            return self.spec.state_bytes / max(self.spec.kv_bytes_per_token, 1.0) \
-                if self.spec.kv_bytes_per_token else 0.0
-        cap = self.spec.ctx_cap
-        if cap is not None:
-            # gemma2: half the layers hold only window-sized KV
-            return ctx * 0.5 + min(ctx, cap) * 0.5
-        return float(ctx)
-
-    # --------------------------------------------------------------- steps
-    def _roofline(self, flops: float, bytes_: float, mfu: float) -> float:
-        hw = self.worker.hw
-        t_c = flops / (self.worker.peak_flops * mfu)
-        t_m = bytes_ / (self.worker.hbm_bw * hw.bw_eff)
-        return max(t_c, t_m) + hw.t_fixed
-
-    def _attn_ctx(self, ctx: float) -> float:
-        cap = self.spec.ctx_cap
-        if cap is None:
-            return ctx
-        return 0.5 * ctx + 0.5 * min(ctx, cap)
-
-    def iteration_time(self, n_decode: int, sum_ctx: float,
-                       prefill_tokens: int = 0,
-                       prefill_ctx_offset: float = 0.0) -> float:
-        """One engine iteration: a decode batch (n_decode requests whose
-        contexts sum to sum_ctx) plus an optional piggybacked prefill chunk
-        of ``prefill_tokens`` starting at context ``prefill_ctx_offset``."""
-        s = self.spec
-        flops = 0.0
-        bytes_ = 0.0
-        if n_decode > 0:
-            flops += 2.0 * s.n_active * n_decode
-            flops += s.attn_flops_per_ctx_token * self._attn_ctx(sum_ctx)
-            bytes_ += s.kv_bytes_per_token * self._attn_ctx(sum_ctx)
-            bytes_ += s.state_bytes * n_decode * 2  # rwkv/mamba state rw
-        if prefill_tokens > 0:
-            p, c = float(prefill_tokens), float(prefill_ctx_offset)
-            flops += 2.0 * s.n_active * p
-            flops += s.attn_flops_per_ctx_token * self._attn_ctx(c + p / 2) * p
-            bytes_ += s.kv_bytes_per_token * (self._attn_ctx(c + p) + p)
-        if flops == 0.0 and bytes_ == 0.0:
-            return 0.0
-        bytes_ += self.params_bytes  # weights stream once per iteration
-        mfu = (self.worker.hw.mfu_prefill if prefill_tokens > 0
-               else self.worker.hw.mfu_decode)
-        return self._roofline(flops, bytes_, mfu)
-
-    def prefill_time(self, prompt_tokens: int, ctx_offset: int = 0) -> float:
-        return self.iteration_time(0, 0.0, prompt_tokens, ctx_offset)
-
-    def decode_iter_time(self, n_decode: int, sum_ctx: float) -> float:
-        return self.iteration_time(n_decode, sum_ctx)
-
-    # ----------------------------------------------------------- migration
-    def kv_transfer_bytes(self, ctx_tokens: int) -> float:
-        """Bytes of KV/state that must cross the ICI links to migrate a
-        request with context ``ctx_tokens``."""
-        return self.spec.kv_bytes_per_token * self.state_tokens(ctx_tokens) \
-            + self.spec.state_bytes
-
-    def migration_time(self, ctx_tokens: int) -> float:
-        """Uncontended lower bound (the seed's fixed-delay model); the
-        contended path lives in serving/transfer.py."""
-        hw = self.worker.hw
-        bw = hw.ici_bw * hw.ici_links
-        return hw.migration_latency + self.kv_transfer_bytes(ctx_tokens) / bw
+__all__ = [
+    "CostModel", "HardwareSpec", "IterationCostModel", "ModelCostSpec",
+    "V5E", "WorkerSpec", "build_cost_spec", "relative_speeds",
+]

@@ -18,7 +18,7 @@ import math
 from repro.core.policies import BatchRule, Policy
 from repro.core.request import Phase, Request
 from repro.core.toggle import Role, WorkerView
-from repro.serving.costmodel import CostModel
+from repro.perf import CostModel
 from repro.serving.kvcache import PageAccountant
 
 

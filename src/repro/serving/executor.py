@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api as model_api
-from repro.serving.costmodel import CostModel
+from repro.perf import CostModel
 from repro.serving.engine import IterationPlan, Worker
 
 

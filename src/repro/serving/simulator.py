@@ -21,7 +21,8 @@ from typing import Callable, Optional, Sequence
 from repro.core.metrics import ServeMetrics
 from repro.core.policies import Policy
 from repro.core.request import Request
-from repro.sched.backend import CallableBackend, ExecutionBackend
+from repro.sched.backend import (CallableBackend, ExecutionBackend,
+                                 TraceReplayBackend)
 from repro.sched.core import ClusterScheduler
 from repro.sched.rebalance import RebalanceConfig, RoleRebalancer
 from repro.serving.engine import Worker
@@ -59,6 +60,7 @@ class Simulator:
         self._heap: list[_Event] = []
         self._seq = itertools.count()
         self.max_sim_time = float("inf")
+        self._replay: Optional[TraceReplayBackend] = None
 
     # ------------------------------------------------- scheduler passthrough
     @property
@@ -104,6 +106,26 @@ class Simulator:
         for r in requests:
             self.push("arrival", r.arrival_time, r)
 
+    def add_replay(self, replay) -> None:
+        """Stream arrivals lazily from a ``TraceReplayBackend`` (or any
+        ``(arrival_time, Request)`` iterator, which is wrapped in one over
+        the current backend). Exactly one pending arrival sits in the heap
+        at a time; each processed arrival pulls the next — a recorded
+        production trace replays in constant memory."""
+        if not isinstance(replay, TraceReplayBackend) \
+                and not hasattr(replay, "next_arrival"):
+            replay = TraceReplayBackend(replay, inner=self.sched.backend)
+        elif getattr(replay, "inner_defaulted", False):
+            # a bare TraceReplayBackend(feed) adopts the simulator's
+            # configured clock instead of discarding it for the default
+            replay.inner = self.sched.backend
+            replay.inner_defaulted = False
+        self._replay = replay
+        self.sched.backend = replay
+        nxt = replay.next_arrival()
+        if nxt is not None:
+            self.push("replay_next", nxt[0], nxt[1])
+
     def inject_failure(self, time: float, wid: int,
                        recover_after: Optional[float] = None) -> None:
         self.push("fail", time, (wid, recover_after))
@@ -120,6 +142,14 @@ class Simulator:
             if ev.time > self.max_sim_time:
                 break
             self.now = ev.time
+            if ev.kind == "replay_next":
+                # driver-level streaming arrival: hand it to the scheduler,
+                # then pull the next one from the replay iterator
+                self.sched.handle("arrival", self.now, ev.payload)
+                nxt = self._replay.next_arrival()
+                if nxt is not None:
+                    self.push("replay_next", nxt[0], nxt[1])
+                continue
             self.sched.handle(ev.kind, self.now, ev.payload)
         return self.metrics()
 
@@ -134,6 +164,8 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   ici_links: Optional[int] = None,
                   page_size: int = 16,
                   online_predictor: bool = False,
+                  per_worker_calibration: str | bool = "auto",
+                  worker_specs: Optional[Sequence] = None,
                   role_rebalance: str | bool = "auto",
                   rebalance_config: Optional[RebalanceConfig] = None,
                   record_decisions: bool = False,
@@ -141,34 +173,61 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   **policy_kw):
     """Convenience: workers + cost models + policy + scheduler, wired.
 
+    ``worker_specs``: one ``WorkerSpec`` per worker for heterogeneous
+    clusters (mixed chip generations, degraded stragglers) — each worker
+    gets its own ``CostModel``, the default predictor becomes a per-worker
+    ``ClusterPredictor``, and every ``WorkerView.speed`` carries the
+    worker's relative throughput so load comparisons price work on the
+    target's hardware. Omitted (the homogeneous default) every speed is
+    exactly 1.0 and all decisions are bit-identical to the global-spec
+    scheduler.
+
     ``ici_bw``/``ici_links`` override the per-worker migration link model
     (bytes/s per link, link count); ``use_transfer_engine=False`` reverts
     to the seed's fixed uncontended ``migration_time`` delay.
 
     ``online_predictor=True`` wraps the predictor in an ``OnlinePredictor``
-    so observed iteration durations EWMA-correct its estimates.
+    so observed iteration durations EWMA-correct its estimates;
+    ``per_worker_calibration``: "auto" (per-worker EWMA exactly when the
+    cluster is heterogeneous), True/False to force.
     ``role_rebalance``: "auto" (windowed-attainment rebalancing for
     policies that own a toggle, i.e. tropical), True (same, but a
     ValueError on policies without role lifecycle), or False (keep the
     legacy dispatch-count ``review_roles`` side effect)."""
-    from repro.core.predictor import AnalyticalPredictor, OnlinePredictor
     from repro.core.policies import make_policy
-    from repro.serving.costmodel import CostModel, WorkerSpec
+    from repro.perf import (AnalyticalPredictor, ClusterPredictor, CostModel,
+                            OnlinePredictor, WorkerSpec, relative_speeds)
     from repro.serving.transfer import TransferEngine
 
     worker_spec = worker_spec or WorkerSpec()
+    specs = list(worker_specs) if worker_specs is not None \
+        else [worker_spec] * n_workers
+    if len(specs) != n_workers:
+        raise ValueError(f"worker_specs has {len(specs)} entries for "
+                         f"{n_workers} workers")
     if ici_bw is not None or ici_links is not None:
-        hw = dataclasses.replace(
-            worker_spec.hw,
-            ici_bw=ici_bw if ici_bw is not None else worker_spec.hw.ici_bw,
+        specs = [dataclasses.replace(s, hw=dataclasses.replace(
+            s.hw,
+            ici_bw=ici_bw if ici_bw is not None else s.hw.ici_bw,
             ici_links=(ici_links if ici_links is not None
-                       else worker_spec.hw.ici_links))
-        worker_spec = dataclasses.replace(worker_spec, hw=hw)
-    cost = CostModel(cfg, worker_spec, page_size=page_size)
-    workers = [Worker(i, cost) for i in range(n_workers)]
-    predictor = predictor or AnalyticalPredictor(cost)
+                       else s.hw.ici_links))) for s in specs]
+    heterogeneous = len(set(specs)) > 1
+    cost = CostModel(cfg, specs[0], page_size=page_size)
+    if heterogeneous:
+        costs = {i: CostModel(cfg, s, page_size=page_size)
+                 for i, s in enumerate(specs)}
+    else:
+        costs = {i: cost for i in range(n_workers)}
+    workers = [Worker(i, costs[i]) for i in range(n_workers)]
+    for wid, speed in relative_speeds(costs).items():
+        workers[wid].view.speed = speed
+    if predictor is None:
+        predictor = ClusterPredictor(costs) if heterogeneous \
+            else AnalyticalPredictor(cost)
     if online_predictor and not hasattr(predictor, "observe_iteration"):
-        predictor = OnlinePredictor(predictor)
+        per_worker = heterogeneous if per_worker_calibration == "auto" \
+            else bool(per_worker_calibration)
+        predictor = OnlinePredictor(predictor, per_worker=per_worker)
     policy = make_policy(policy_name, [w.view for w in workers], predictor,
                          **policy_kw)
     transfer = TransferEngine() if use_transfer_engine else None

@@ -103,6 +103,41 @@ def test_sim_and_real_backend_parity_with_two_slo_classes():
             m_b.per_class[name].slo_attainment
 
 
+def test_sim_and_real_backend_parity_on_heterogeneous_cluster():
+    """Per-worker hardware is part of the one scheduling code path too:
+    with a 2x-slow straggler (mixed HardwareSpecs, per-worker analytic
+    predictor, speed-normalised load) the simulator and the real-JAX
+    executor under the cost-model clock must still agree on every
+    dispatch, batch composition and route."""
+    from repro.perf import V5E
+    from repro.serving.executor import ClusterRealExecutors
+
+    cfg = get_smoke("deepseek-7b")
+    fast = WorkerSpec(tp=1)
+    slow = WorkerSpec(tp=1, hw=V5E.slowed(2.0))
+    specs = [fast, slow]
+    trace = _smoke_trace()
+
+    sim_a, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=fast,
+                             worker_specs=specs, record_decisions=True)
+    sim_a.add_trace(copy.deepcopy(trace))
+    m_a = sim_a.run(until=3000.0)
+
+    execs = ClusterRealExecutors(cfg, 2, max_slots=8, max_len=64)
+    sim_b, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=fast,
+                             worker_specs=specs, record_decisions=True,
+                             backend=execs.as_backend(clock="model"))
+    sim_b.add_trace(copy.deepcopy(trace))
+    m_b = sim_b.run(until=3000.0)
+
+    assert m_a.n_finished == m_b.n_finished == len(trace)
+    assert sim_a.decisions == sim_b.decisions
+    # both stacks really saw the straggler: its speed is threaded through
+    for sim in (sim_a, sim_b):
+        assert sim.workers[1].view.speed < 1.0
+        assert sim.workers[0].view.speed == 1.0
+
+
 def test_slack_discipline_orders_multiclass_tightest_first():
     """Unit view of the class-aware queue: heterogeneous classes order by
     relative TTFT slack; a homogeneous queue keeps exact FCFS admission
