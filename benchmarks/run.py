@@ -58,6 +58,11 @@ def build_summary(results: dict[str, list[dict]],
         if row.get("config") == "summary":
             summary["hetero_global_attainment"] = row["mean_hetero_global"]
             summary["hetero_per_worker_attainment"] = row["mean_hetero_pw"]
+    for row in results.get("fig_interference", []):
+        if row.get("config") == "summary":
+            summary["interference_blind_attainment"] = row["mean_gamma_blind"]
+            summary["interference_aware_attainment"] = row["mean_gamma_aware"]
+            summary["interference_gamma_abs_err"] = row["mean_gamma_abs_err"]
     m, mean_step = _canonical_run(ref_rate)
     summary.update(
         ttft_p90_s=round(m.ttft_p90, 4),
@@ -80,8 +85,9 @@ def main(argv=None) -> None:
     from benchmarks import (fig3_workload, fig4_queue_vs_interference,
                             fig5_worker_allocation, fig8_slo_attainment,
                             fig9_latency, fig10_queueing, fig11_cdf,
-                            fig_hetero, fig_migration, fig_multitenant,
-                            predictor_noise, roofline, scale)
+                            fig_hetero, fig_interference, fig_migration,
+                            fig_multitenant, predictor_noise, roofline,
+                            scale)
     benches = {
         "fig3": fig3_workload.main,
         "fig4": fig4_queue_vs_interference.main,
@@ -99,6 +105,9 @@ def main(argv=None) -> None:
         if args.quick else fig_multitenant.main,
         "fig_hetero": (lambda: fig_hetero.main(seeds=(7, 11)))
         if args.quick else fig_hetero.main,
+        "fig_interference": (lambda: fig_interference.main(
+            rates=(2.0,), seeds=(11, 13)))
+        if args.quick else fig_interference.main,
         "scale": (lambda: scale.main(scales=[(4, 4.0), (16, 16.0)],
                                      duration=60.0))
         if args.quick else scale.main,

@@ -240,9 +240,16 @@ class TropicalPolicy(Policy):
                              prefill_budget=self.prefill_token_budget,
                              prefill_exclusive=False)
         chunk = self.toggle.chunk_for(w, head.slo.tpot)
+        take = min(chunk, head.remaining_prefill)
+        # the chunk's true cost to the batch includes the §IV mixed-batch
+        # contention penalty (exactly 0.0 under the legacy γ=0 model) —
+        # the per-iteration insertion gate must price what dispatch
+        # admission prices, or slack-blowing chunks slip in here
         t_chunk = self.predictor.predict_prefill(
-            min(chunk, head.remaining_prefill), int(w.decode_sum_ctx),
-            wid=w.wid)
+            take, int(w.decode_sum_ctx), wid=w.wid) \
+            + self.predictor.predict_interference(
+                w.decode_batch, w.decode_sum_ctx, take,
+                int(w.decode_sum_ctx), wid=w.wid)
         budget = max(w.min_tpot_slack, 0.0) / self.toggle.cfg.slack_safety
         if t_chunk <= budget:
             return BatchRule(run_decode=True, prefill_budget=chunk,

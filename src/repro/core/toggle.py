@@ -147,16 +147,27 @@ class MultiplexingToggle:
         if not self.cfg.slack_chunking:
             return self.cfg.chunk_tokens
         # beyond-paper: binary-search the largest chunk the current slack
-        # budget allows (paper uses a fixed 2048 chunk).
+        # budget allows (paper uses a fixed 2048 chunk). The cost of a
+        # candidate chunk includes the §IV contention penalty (0.0 under
+        # γ=0): sizing by the additive estimate alone would pick chunks
+        # the penalty then pushes over budget — rejected outright by the
+        # admission gates instead of shrunk to fit.
+        def chunk_cost(tokens: int) -> float:
+            t = self.predictor.predict_prefill(tokens, int(w.decode_sum_ctx),
+                                               wid=w.wid)
+            if w.decode_batch > 0:
+                t += self.predictor.predict_interference(
+                    w.decode_batch, w.decode_sum_ctx, tokens,
+                    int(w.decode_sum_ctx), wid=w.wid)
+            return t
+
         lo, hi = self.cfg.min_chunk, self.cfg.chunk_tokens
         budget = w.min_tpot_slack / self.cfg.slack_safety
-        if self.predictor.predict_prefill(lo, int(w.decode_sum_ctx),
-                                          wid=w.wid) > budget:
+        if chunk_cost(lo) > budget:
             return lo
         while lo < hi:
             mid = (lo + hi + 1) // 2
-            if self.predictor.predict_prefill(mid, int(w.decode_sum_ctx),
-                                              wid=w.wid) <= budget:
+            if chunk_cost(mid) <= budget:
                 lo = mid
             else:
                 hi = mid - 1
@@ -184,6 +195,12 @@ class MultiplexingToggle:
         t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx),
                                                  wid=w.wid)
         if w.decode_batch > 0:
+            # §IV contention: the chunk's true cost to the batch includes
+            # the super-additive mixed-batch penalty (exactly 0.0 under the
+            # legacy γ=0 model, preserving decision parity)
+            t_chunk += self.predictor.predict_interference(
+                w.decode_batch, w.decode_sum_ctx, chunk,
+                int(w.decode_sum_ctx), wid=w.wid)
             # per-iteration slack must absorb the inserted chunk
             if t_chunk * self.cfg.slack_safety > max(w.min_tpot_slack, 0.0):
                 return False
@@ -224,6 +241,11 @@ class MultiplexingToggle:
         chunk = self.cfg.chunk_tokens
         t_chunk = self.predictor.predict_prefill(chunk, int(w.decode_sum_ctx),
                                                  wid=w.wid)
+        if w.decode_batch > 0:
+            # interference slows the chunk's effective advance rate too
+            t_chunk += self.predictor.predict_interference(
+                w.decode_batch, w.decode_sum_ctx, chunk,
+                int(w.decode_sum_ctx), wid=w.wid)
         base = self.predictor.predict_decode_iter(
             max(w.decode_batch, 1), w.decode_sum_ctx, wid=w.wid)
         margin = max(req.slo.tpot - base, 1e-3)

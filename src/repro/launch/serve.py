@@ -181,6 +181,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--online-predictor", action="store_true",
                     help="EWMA-correct the §IV-C predictor from observed "
                          "iteration durations (wall-clock in --mode real)")
+    ap.add_argument("--recalibrate-every", type=int, default=None,
+                    metavar="N",
+                    help="online drift recalibration: every N observed "
+                         "iterations re-fit the per-bucket interference "
+                         "gamma and nudge the measured MFU/bandwidth "
+                         "constants from residuals (default: off = "
+                         "calibrate once at startup)")
     ap.add_argument("--no-rebalance", action="store_true",
                     help="keep the legacy dispatch-count role review "
                          "instead of windowed-attainment rebalancing")
@@ -199,6 +206,9 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                  "migration forever)")
     if args.page_size <= 0:
         ap.error("--page-size must be a positive token count")
+    if args.recalibrate_every is not None and args.recalibrate_every < 1:
+        ap.error("--recalibrate-every must be >= 1 iteration "
+                 "(omit the flag to disable online recalibration)")
 
     from repro.configs import get_config, get_smoke
     from repro.serving.costmodel import WorkerSpec
@@ -241,6 +251,7 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         ici_bw=args.ici_bw * 1e9 if args.ici_bw is not None else None,
         ici_links=args.ici_links, page_size=args.page_size,
         online_predictor=args.online_predictor,
+        recalibrate_every=args.recalibrate_every,
         role_rebalance=False if args.no_rebalance else "auto")
     # one workload-source selection for both feeds: each leaf names the
     # (materialised, streaming) pair so --backend trace-replay can never
@@ -313,6 +324,11 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                    predictor_decode_scale=round(pred.decode_scale, 4))
     if sim.sched.rebalancer is not None:
         row.update(role_transitions=len(sim.sched.rebalancer.transitions))
+    if sim.sched.drift_monitor is not None:
+        lo, hi = sim.sched.drift_monitor.gamma_range()
+        row.update(recalibrate_every=sim.sched.drift_monitor.every,
+                   recalibrations=sim.sched.drift_monitor.recalibrations,
+                   drift_gamma_min=round(lo, 4), drift_gamma_max=round(hi, 4))
     if args.json:
         print(json.dumps(row, indent=1, sort_keys=True, default=float))
     else:

@@ -13,27 +13,39 @@ One subsystem owns every step-time estimate in the stack:
                     EWMA correction from observed durations;
 * ``calibrate``   — measured-MFU roofline: run the real Pallas kernels
                     once, instantiate the model from measurements
-                    (``CalibratedRooflineBackend``).
+                    (``CalibratedRooflineBackend``); v2 adds
+                    ``calibrate_interference`` — the mixed-vs-pure kernel
+                    grid sweep that fits a bucketed ``InterferenceTable``;
+* ``recalibrate`` — ``DriftMonitor``: periodic online re-fit of per-bucket
+                    γ and the measured efficiency constants from observed
+                    iteration residuals (thermal drift, stale profiles).
 
 ``serving/costmodel.py`` and ``core/predictor.py`` remain as import shims
 so every pre-existing call site keeps working unchanged.
 """
 from repro.perf.calibrate import (CalibratedRooflineBackend,
-                                  KernelCalibration, calibrate_hardware)
+                                  InterferenceCalibration,
+                                  KernelCalibration, calibrate_hardware,
+                                  calibrate_interference)
 from repro.perf.calibration import OnlinePredictor
-from repro.perf.hardware import V5E, HardwareSpec, WorkerSpec
-from repro.perf.model import (CostModel, IterationCostModel, ModelCostSpec,
+from repro.perf.hardware import (V5E, HardwareSpec, InterferenceTable,
+                                 WorkerSpec, gamma_at)
+from repro.perf.model import (STATE_TOKEN_EQUIV, CostModel,
+                              IterationCostModel, ModelCostSpec,
                               build_cost_spec, canonical_iteration_time,
                               relative_speeds)
 from repro.perf.predictor import (AnalyticalPredictor, BiasedPredictor,
                                   ClusterPredictor, Predictor,
                                   ProfiledPredictor, profile_worker)
+from repro.perf.recalibrate import DriftMonitor
 
 __all__ = [
     "AnalyticalPredictor", "BiasedPredictor", "CalibratedRooflineBackend",
-    "ClusterPredictor", "CostModel", "HardwareSpec", "IterationCostModel",
+    "ClusterPredictor", "CostModel", "DriftMonitor", "HardwareSpec",
+    "InterferenceCalibration", "InterferenceTable", "IterationCostModel",
     "KernelCalibration", "ModelCostSpec", "OnlinePredictor", "Predictor",
-    "ProfiledPredictor", "V5E", "WorkerSpec", "build_cost_spec",
-    "calibrate_hardware", "canonical_iteration_time", "profile_worker",
+    "ProfiledPredictor", "STATE_TOKEN_EQUIV", "V5E", "WorkerSpec",
+    "build_cost_spec", "calibrate_hardware", "calibrate_interference",
+    "canonical_iteration_time", "gamma_at", "profile_worker",
     "relative_speeds",
 ]

@@ -12,6 +12,13 @@ constants are *measurements*:
     mfu    = achieved_flops / (elapsed · peak_flops)
     bw_eff = achieved_bytes / (elapsed · hbm_bw)
 
+``calibrate_interference`` (v2) extends the same measured-constants idea
+to the §IV mixed-batch contention coefficient: it runs the two kernels
+*mixed* vs *pure* across a (decode-batch × chunk-size) grid and solves
+each cell's measured excess for γ, returning a bucketed
+``InterferenceTable`` that drops into ``HardwareSpec.interference``
+(the scalar stays accepted as the degenerate 1×1 table).
+
 ``CalibratedRooflineBackend`` is the ``ExecutionBackend`` over the
 resulting model: the ROADMAP's "batched roofline with measured MFU"
 backend. Off-TPU (CPU CI, interpret-mode Pallas) the measured fractions
@@ -22,10 +29,12 @@ path yields deployment-grade constants.
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from typing import Optional
 
-from repro.perf.hardware import HardwareSpec, V5E, WorkerSpec
+from repro.perf.hardware import (HardwareSpec, InterferenceTable, V5E,
+                                 WorkerSpec)
 from repro.perf.model import CostModel
 
 _MFU_FLOOR = 1e-6        # interpret-mode measurements stay valid fractions
@@ -50,7 +59,12 @@ def _clamp_frac(x: float) -> float:
 
 
 def _time_fn(fn, repeats: int) -> float:
-    """Median-of-``repeats`` wall time, after one warmup compile call."""
+    """True-median-of-``repeats`` wall time, after one warmup compile call
+    (``times[len//2]`` alone is the *upper* middle for even counts — a
+    biased pick; ``statistics.median`` averages the two middles)."""
+    if repeats < 1:
+        raise ValueError(
+            f"repeats must be >= 1 to measure anything, got {repeats}")
     import jax
     jax.block_until_ready(fn())          # compile + warm caches
     times = []
@@ -58,8 +72,54 @@ def _time_fn(fn, repeats: int) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn())
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    return statistics.median(times)
+
+
+def _prefill_case(rng, dtype, seq: int, heads: int, head_dim: int,
+                  interpret: bool):
+    """Pure chunked-prefill workload over the real Pallas kernel:
+    (timed fn, useful flops, hot bytes). One full-chunk causal attention
+    over the cache; flops = causal QK^T + PV = 4 · Hq · D · Sq · Skv / 2,
+    bytes = q/k/v read + output write."""
+    import jax.numpy as jnp
+
+    from repro.kernels.chunked_prefill import chunked_prefill_attention
+
+    q = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
+    kc = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
+    vc = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
+    starts = jnp.zeros((1,), jnp.int32)
+    flops = 4.0 * heads * head_dim * seq * seq / 2.0
+    nbytes = 4.0 * seq * heads * head_dim * jnp.dtype(dtype).itemsize
+    return (lambda: chunked_prefill_attention(q, kc, vc, starts,
+                                              interpret=interpret),
+            flops, nbytes)
+
+
+def _decode_case(rng, dtype, batch: int, heads: int, head_dim: int,
+                 page_size: int, pages_per_seq: int, interpret: bool):
+    """Pure paged-decode workload over a block-table-indirected pool:
+    (timed fn, useful flops, hot bytes). Decode streams every attended
+    K/V byte once — the memory roofline side."""
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import paged_attention
+
+    n_pages = batch * pages_per_seq + 1
+    ctx = page_size * pages_per_seq
+    qd = jnp.asarray(rng.normal(size=(batch, heads, head_dim)), dtype)
+    kp = jnp.asarray(
+        rng.normal(size=(n_pages, page_size, heads, head_dim)), dtype)
+    vp = jnp.asarray(
+        rng.normal(size=(n_pages, page_size, heads, head_dim)), dtype)
+    bt = jnp.asarray(rng.permutation(n_pages)[: batch * pages_per_seq]
+                     .reshape(batch, pages_per_seq), jnp.int32)
+    lengths = jnp.full((batch,), ctx, jnp.int32)
+    flops = 4.0 * batch * heads * head_dim * ctx
+    nbytes = 2.0 * batch * ctx * heads * head_dim * jnp.dtype(dtype).itemsize
+    return (lambda: paged_attention(qd, kp, vp, bt, lengths,
+                                    interpret=interpret),
+            flops, nbytes)
 
 
 def calibrate_hardware(hw: HardwareSpec = V5E, *,
@@ -78,45 +138,21 @@ def calibrate_hardware(hw: HardwareSpec = V5E, *,
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.chunked_prefill import chunked_prefill_attention
-    from repro.kernels.paged_attention import paged_attention
-
     device = jax.default_backend()
     if interpret is None:
         interpret = device != "tpu"
     rng = np.random.default_rng(0)
     dtype = jnp.float32 if interpret else jnp.bfloat16
 
-    # --- prefill side: one full-chunk causal attention over the cache ----
-    q = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
-    kc = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
-    vc = jnp.asarray(rng.normal(size=(1, seq, heads, head_dim)), dtype)
-    starts = jnp.zeros((1,), jnp.int32)
-    t_p = _time_fn(
-        lambda: chunked_prefill_attention(q, kc, vc, starts,
-                                          interpret=interpret),
-        repeats)
-    # causal QK^T + PV: 4 · Hq · D · Sq · Skv / 2 useful flops
-    p_flops = 4.0 * heads * head_dim * seq * seq / 2.0
+    prefill_fn, p_flops, _ = _prefill_case(rng, dtype, seq, heads, head_dim,
+                                           interpret)
+    t_p = _time_fn(prefill_fn, repeats)
     mfu_p = _clamp_frac(p_flops / (t_p * hw.peak_flops))
 
-    # --- decode side: paged attention over a block-table-indirected pool -
-    n_pages = batch * pages_per_seq + 1
-    qd = jnp.asarray(rng.normal(size=(batch, heads, head_dim)), dtype)
-    kp = jnp.asarray(
-        rng.normal(size=(n_pages, page_size, heads, head_dim)), dtype)
-    vp = jnp.asarray(
-        rng.normal(size=(n_pages, page_size, heads, head_dim)), dtype)
-    bt = jnp.asarray(rng.permutation(n_pages)[: batch * pages_per_seq]
-                     .reshape(batch, pages_per_seq), jnp.int32)
-    lengths = jnp.full((batch,), page_size * pages_per_seq, jnp.int32)
-    t_d = _time_fn(
-        lambda: paged_attention(qd, kp, vp, bt, lengths, interpret=interpret),
-        repeats)
-    ctx = page_size * pages_per_seq
-    d_flops = 4.0 * batch * heads * head_dim * ctx
-    # decode streams every attended K/V byte once: the memory roofline side
-    d_bytes = 2.0 * batch * ctx * heads * head_dim * jnp.dtype(dtype).itemsize
+    decode_fn, d_flops, d_bytes = _decode_case(
+        rng, dtype, batch, heads, head_dim, page_size, pages_per_seq,
+        interpret)
+    t_d = _time_fn(decode_fn, repeats)
     mfu_d = _clamp_frac(d_flops / (t_d * hw.peak_flops))
     bw_eff = _clamp_frac(d_bytes / (t_d * hw.hbm_bw))
 
@@ -129,6 +165,118 @@ def calibrate_hardware(hw: HardwareSpec = V5E, *,
         hw, name=f"{hw.name}-measured",
         mfu_prefill=mfu_p, mfu_decode=mfu_d, bw_eff=bw_eff)
     return measured, cal
+
+
+@dataclasses.dataclass(frozen=True)
+class InterferenceCalibration:
+    """What the mixed-vs-pure grid sweep measured, per cell."""
+    table: InterferenceTable
+    decode_batches: tuple           # grid axis values (= table edges)
+    chunk_sizes: tuple
+    pure_prefill_s: tuple           # per chunk size
+    pure_decode_s: tuple            # per decode batch
+    mixed_s: tuple                  # row-per-batch grid of mixed times
+    device: str
+
+
+def calibrate_interference(hw: HardwareSpec = V5E, *,
+                           decode_batches: tuple = (1, 4, 8),
+                           chunk_sizes: tuple = (128, 256),
+                           heads: int = 4, head_dim: int = 64,
+                           page_size: int = 16, pages_per_seq: int = 8,
+                           repeats: int = 3,
+                           interpret: Optional[bool] = None,
+                           gamma_max: float = 1.0,
+                           ) -> tuple[InterferenceTable,
+                                      InterferenceCalibration]:
+    """Measure the §IV mixed-batch contention coefficient γ per
+    (decode-batch, chunk-size) bucket from the repo's own serving kernels.
+
+    For every grid cell the real Pallas kernels run *pure* (the
+    chunked-prefill attention alone, the paged decode attention alone)
+    and *mixed* (both in one composed call — how a multiplexing worker's
+    iteration actually executes), and the cell's measured excess over the
+    perfect-overlap floor ``max(t_prefill, t_decode)`` solves the cost
+    model's penalty form for γ::
+
+        t_mixed = max(t_p, t_d) + γ · β_p · β_d · min(t_p, t_d)
+
+    with β from the kernels' flop/byte rooflines — the same *functional
+    form* as ``CostModel._interference``, evaluated over the attention
+    kernels' own operands. γ is therefore a dimensionless contention
+    coefficient measured on the attention path; the model applies it to
+    its full-phase unit (GEMMs + weight streaming included), treating
+    attention-path contention as representative of the whole phase's —
+    the approximation the ROADMAP's on-TPU validation item exists to
+    check. γ is clamped into [0, ``gamma_max``] — ``gamma_max=1`` keeps
+    the model's guarantee that a mixed iteration never exceeds the
+    fully-serialised sum. Off-TPU
+    (interpret-mode Pallas) the two kernels cannot overlap at all, so γ
+    rails toward that serialised ceiling — still well-defined, and the
+    same harness on a real TPU lands wherever the hardware actually sits
+    between perfect overlap and serialisation.
+
+    Returns the bucketed table (edges = the swept grid values as bucket
+    lower bounds) plus the raw per-cell measurements."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    if not decode_batches or not chunk_sizes:
+        raise ValueError("calibrate_interference needs a non-empty grid")
+    decode_batches = tuple(sorted(decode_batches))
+    chunk_sizes = tuple(sorted(chunk_sizes))
+    device = jax.default_backend()
+    if interpret is None:
+        interpret = device != "tpu"
+    rng = np.random.default_rng(0)
+    dtype = jnp.float32 if interpret else jnp.bfloat16
+    peak_c = hw.peak_flops
+    mem = hw.hbm_bw * hw.bw_eff
+
+    # one workload per axis value, shared by the pure timing and every
+    # mixed cell it appears in — the mixed run times the SAME operands
+    # its pure baseline did. Alone-times are per-axis (a chunk's does not
+    # depend on which decode batch it will be mixed with); mixed per cell.
+    pre = {c: _prefill_case(rng, dtype, c, heads, head_dim, interpret)
+           for c in chunk_sizes}
+    dec = {b: _decode_case(rng, dtype, b, heads, head_dim, page_size,
+                           pages_per_seq, interpret)
+           for b in decode_batches}
+    t_p = {c: _time_fn(pre[c][0], repeats) for c in chunk_sizes}
+    t_d = {b: _time_fn(dec[b][0], repeats) for b in decode_batches}
+    mixed_rows, gamma_rows = [], []
+    for b in decode_batches:
+        mixed_row, gamma_row = [], []
+        for c in chunk_sizes:
+            pf, p_flops, p_bytes = pre[c]
+            df, d_flops, d_bytes = dec[b]
+            t_mix = _time_fn(lambda: (pf(), df()), repeats)
+            # kernel-level flop/byte accounting -> phase boundedness
+            t_cp = p_flops / (peak_c * hw.mfu_prefill)
+            t_mp = p_bytes / mem
+            t_cd = d_flops / (peak_c * hw.mfu_decode)
+            t_md = d_bytes / mem
+            beta_p = t_cp / max(t_cp, t_mp)
+            beta_d = t_md / max(t_cd, t_md)
+            unit = beta_p * beta_d * min(t_p[c], t_d[b])
+            excess = t_mix - max(t_p[c], t_d[b])
+            gamma = min(max(excess / unit, 0.0), gamma_max) \
+                if unit > 1e-12 else 0.0
+            mixed_row.append(t_mix)
+            gamma_row.append(gamma)
+        mixed_rows.append(tuple(mixed_row))
+        gamma_rows.append(tuple(gamma_row))
+
+    table = InterferenceTable(decode_edges=decode_batches,
+                              chunk_edges=chunk_sizes,
+                              gamma=tuple(gamma_rows))
+    cal = InterferenceCalibration(
+        table=table, decode_batches=decode_batches, chunk_sizes=chunk_sizes,
+        pure_prefill_s=tuple(t_p[c] for c in chunk_sizes),
+        pure_decode_s=tuple(t_d[b] for b in decode_batches),
+        mixed_s=tuple(mixed_rows), device=device)
+    return table, cal
 
 
 class CalibratedRooflineBackend:
@@ -144,9 +292,18 @@ class CalibratedRooflineBackend:
 
     def __init__(self, cfg, worker: WorkerSpec = WorkerSpec(),
                  page_size: int = 16, interpret: Optional[bool] = None,
+                 measure_interference: bool = False,
+                 interference_kw: Optional[dict] = None,
                  **calibrate_kw):
         hw, self.calibration = calibrate_hardware(
             worker.hw, interpret=interpret, **calibrate_kw)
+        self.interference_calibration = None
+        if measure_interference:
+            # solve γ against the MEASURED spec — the same constants the
+            # model will recompute β with when applying the penalty
+            table, self.interference_calibration = calibrate_interference(
+                hw, interpret=interpret, **(interference_kw or {}))
+            hw = dataclasses.replace(hw, interference=table)
         self.cost = CostModel(cfg, dataclasses.replace(worker, hw=hw),
                               page_size=page_size)
 

@@ -158,6 +158,15 @@ class OnlinePredictor(Predictor):
                           wid: Optional[int] = None) -> float:
         return self.base.predict_migration(ctx_tokens, wid=wid)
 
+    def predict_interference(self, n_decode: int, sum_ctx: float,
+                             prefill_tokens: int, ctx_offset: float = 0.0,
+                             wid: Optional[int] = None) -> float:
+        # the penalty rides on the base model's γ (kept current by the
+        # DriftMonitor, the component that owns γ's online re-fit); the
+        # per-phase EWMA scales correct the *additive* estimates only
+        return self.base.predict_interference(
+            n_decode, sum_ctx, prefill_tokens, ctx_offset, wid=wid)
+
     # ------------------------------------------------------------- feedback
     def _ewma(self, scale: float, ratio: float) -> float:
         lo, hi = self.clip
@@ -202,6 +211,17 @@ class OnlinePredictor(Predictor):
         has_p = prefill_tokens > 0
         has_d = n_decode > 0
         if has_p and has_d:
+            # the phase scales correct the ADDITIVE estimates only: strip
+            # the model's own γ penalty from the observed mixed duration
+            # before apportioning, or the penalty would be absorbed into
+            # the scales AND re-added by predict_interference — pricing
+            # the contention twice in admission (base penalty carries the
+            # base's safety margin; divide it back out to get the model's
+            # raw expectation, mirroring DriftMonitor's base0 handling)
+            penalty = self.base.predict_interference(
+                n_decode, sum_ctx, prefill_tokens, ctx_offset,
+                wid=wid) / self.margin
+            observed = max(observed - penalty, 0.0)
             cp = self.predict_prefill(prefill_tokens, int(ctx_offset),
                                       wid=wid)
             cd = self.predict_decode_iter(n_decode, sum_ctx, wid=wid)

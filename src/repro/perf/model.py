@@ -19,8 +19,12 @@ memory streaming, so the mixed iteration exceeds the combined roofline by
     γ · β_p · β_d · min(t_prefill_alone, t_decode_alone)
 
 where β_p is the prefill side's compute-boundedness, β_d the decode
-side's memory-boundedness and γ = ``HardwareSpec.interference`` the
-calibrated contention coefficient. Contention is worst when each phase
+side's memory-boundedness and γ the calibrated contention coefficient —
+``HardwareSpec.interference`` as a uniform scalar, or an
+``InterferenceTable`` looked up by the iteration's actual
+``(n_decode, prefill_tokens)`` bucket (``perf.calibrate`` measures the
+grid from mixed-vs-pure kernel runs; ``perf.recalibrate`` re-fits it
+online). Contention is worst when each phase
 saturates a *different* resource (overlap beyond the max is impossible and
 the iteration drifts toward the additive sum); when both phases are bound
 on the same resource the combined roofline already charges the serialised
@@ -34,7 +38,16 @@ import dataclasses
 from typing import Optional, Protocol, runtime_checkable
 
 from repro.models.layers import ModelConfig
-from repro.perf.hardware import V5E, HardwareSpec, WorkerSpec
+from repro.perf.hardware import (V5E, HardwareSpec, InterferenceTable,
+                                 WorkerSpec, gamma_at)
+
+# One constant-state request (rwkv/mamba/hybrid) is granted this many
+# token-equivalents of HBM budget: ``kv_capacity_tokens`` sizes the pool
+# as (#states that fit) × this, and ``state_tokens`` pins the same amount
+# per admitted request, so page accounting gates at exactly the number of
+# states the free HBM holds. One unit therefore equals
+# ``state_bytes / STATE_TOKEN_EQUIV`` bytes.
+STATE_TOKEN_EQUIV = 10_000
 
 
 @runtime_checkable
@@ -175,14 +188,23 @@ class CostModel:
         if self.spec.kv_bytes_per_token <= 0:
             # constant-state family: capacity = #states that fit
             per = max(self.spec.state_bytes, 1.0)
-            return int(free / per) * 10_000   # effectively request-bounded
+            return int(free / per) * STATE_TOKEN_EQUIV
         return max(0, int(free / self.spec.kv_bytes_per_token))
 
     def state_tokens(self, ctx: int) -> float:
-        """HBM tokens-equivalent held by a request with context ctx."""
+        """HBM tokens-equivalent held by a request with context ctx.
+
+        Constant-state families (rwkv/mamba/hybrid) hold one fixed-size
+        state regardless of context; it pins ``STATE_TOKEN_EQUIV`` units —
+        the per-state grant ``kv_capacity_tokens`` sizes the pool in — so
+        the ``PageAccountant`` sees the true footprint and admission /
+        watermark preemption gate at exactly the number of states the HBM
+        fits. (A prior ternary returned 0.0 here, which made every
+        constant-state request invisible to page accounting: admission
+        never gated and the watermark never preempted.)"""
         if self.spec.kv_bytes_per_token <= 0:
-            return self.spec.state_bytes / max(self.spec.kv_bytes_per_token, 1.0) \
-                if self.spec.kv_bytes_per_token else 0.0
+            return float(STATE_TOKEN_EQUIV) if self.spec.state_bytes > 0 \
+                else 0.0
         cap = self.spec.ctx_cap
         if cap is not None:
             # gemma2: half the layers hold only window-sized KV
@@ -251,11 +273,30 @@ class CostModel:
         mfu = (self.worker.hw.mfu_prefill if prefill_tokens > 0
                else self.worker.hw.mfu_decode)
         t = self._roofline(flops, bytes_, mfu)
-        gamma = self.worker.hw.interference
-        if gamma != 0.0 and n_decode > 0 and prefill_tokens > 0:
-            t += self._interference(gamma, n_decode, sum_ctx,
-                                    prefill_tokens, prefill_ctx_offset)
+        if n_decode > 0 and prefill_tokens > 0:
+            gamma = gamma_at(self.worker.hw.interference, n_decode,
+                             prefill_tokens)
+            if gamma != 0.0:
+                t += self._interference(gamma, n_decode, sum_ctx,
+                                        prefill_tokens, prefill_ctx_offset)
         return t
+
+    def interference_penalty(self, n_decode: int, sum_ctx: float,
+                             prefill_tokens: int,
+                             prefill_ctx_offset: float = 0.0) -> float:
+        """The §IV contention penalty alone — what a mixed iteration costs
+        beyond the additive combined roofline. Exactly 0.0 for pure
+        batches and whenever the governing γ is 0, so admission paths that
+        *add* it to their additive estimates stay bit-identical to the
+        legacy model until a calibration turns γ on."""
+        if n_decode <= 0 or prefill_tokens <= 0:
+            return 0.0
+        gamma = gamma_at(self.worker.hw.interference, n_decode,
+                         prefill_tokens)
+        if gamma == 0.0:
+            return 0.0
+        return self._interference(gamma, n_decode, sum_ctx,
+                                  prefill_tokens, prefill_ctx_offset)
 
     def _interference(self, gamma: float, n_decode: int, sum_ctx: float,
                       prefill_tokens: int, prefill_ctx_offset: float) -> float:

@@ -43,6 +43,16 @@ class Predictor:
                           wid: Optional[int] = None) -> float:
         raise NotImplementedError
 
+    def predict_interference(self, n_decode: int, sum_ctx: float,
+                             prefill_tokens: int, ctx_offset: float = 0.0,
+                             wid: Optional[int] = None) -> float:
+        """§IV contention penalty a prefill chunk adds *on top of* the
+        additive prefill + decode estimates when co-batched with
+        ``n_decode`` running decodes. Admission paths add this to their
+        chunk cost; the default (and any γ=0 model) returns exactly 0.0,
+        so interference-blind predictors keep legacy decision parity."""
+        return 0.0
+
 
 @dataclasses.dataclass
 class AnalyticalPredictor(Predictor):
@@ -60,6 +70,12 @@ class AnalyticalPredictor(Predictor):
     def predict_migration(self, ctx_tokens: int,
                           wid: Optional[int] = None) -> float:
         return self.cost.migration_time(ctx_tokens) * self.safety
+
+    def predict_interference(self, n_decode: int, sum_ctx: float,
+                             prefill_tokens: int, ctx_offset: float = 0.0,
+                             wid: Optional[int] = None) -> float:
+        return self.cost.interference_penalty(
+            n_decode, sum_ctx, prefill_tokens, ctx_offset) * self.safety
 
 
 class BiasedPredictor(AnalyticalPredictor):
@@ -117,6 +133,17 @@ class ClusterPredictor(Predictor):
     def predict_migration(self, ctx_tokens: int,
                           wid: Optional[int] = None) -> float:
         return self._cost(wid).migration_time(ctx_tokens) * self.safety
+
+    def predict_interference(self, n_decode: int, sum_ctx: float,
+                             prefill_tokens: int, ctx_offset: float = 0.0,
+                             wid: Optional[int] = None) -> float:
+        # IterationCostModel does not require the penalty decomposition;
+        # models without one price 0 (interference-blind), like the base
+        penalty = getattr(self._cost(wid), "interference_penalty", None)
+        if penalty is None:
+            return 0.0
+        return penalty(n_decode, sum_ctx, prefill_tokens, ctx_offset) \
+            * self.safety
 
 
 class ProfiledPredictor(Predictor):

@@ -38,10 +38,14 @@ class ClusterScheduler:
                  backend: Optional[ExecutionBackend] = None,
                  transfer=None,
                  rebalancer: Optional[RoleRebalancer] = None,
+                 drift_monitor=None,
                  record_decisions: bool = False):
         self.workers: dict[int, Worker] = {w.wid: w for w in workers}
         self.policy = policy
         self.backend = backend or CostModelBackend()
+        # optional online recalibration (repro.perf.recalibrate): observed
+        # iteration residuals re-fit per-bucket γ + efficiency constants
+        self.drift_monitor = drift_monitor
         self.transfer = transfer
         if transfer is not None:
             for w in workers:
@@ -241,6 +245,8 @@ class ClusterScheduler:
     def _on_add_worker(self, now: float, w: Worker) -> None:
         self.workers[w.wid] = w
         self._busy[w.wid] = False
+        if self.drift_monitor is not None:
+            self.drift_monitor.register(w.wid, w.cost)
         if self.transfer is not None:
             self.transfer.add_worker(
                 w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
@@ -260,6 +266,13 @@ class ClusterScheduler:
         if observe is not None:
             observe(plan.n_decode, plan.sum_ctx, plan.prefill_tokens,
                     plan.prefill_ctx_offset, dur, wid=wid)
+        if self.drift_monitor is not None:
+            w = self.workers.get(wid)
+            if w is not None:
+                # residual vs the worker model's *current* prediction: the
+                # DriftMonitor re-fits γ / efficiency from what's left
+                self.drift_monitor.observe(wid, plan, w.plan_duration(plan),
+                                           dur)
 
     def _record_outcomes(self, plan: IterationPlan,
                          finished_prefills: list[Request]) -> None:

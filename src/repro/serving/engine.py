@@ -78,6 +78,11 @@ class Worker:
         self.blocked_time: dict[int, float] = {}
         self.queue_times: dict[int, float] = {}
         self.busy_time = 0.0
+        # wall seconds this worker's decode batches spent blocked behind
+        # co-batched prefill work, charged ONCE per mixed iteration (the
+        # per-request ``blocked_time`` dict intentionally charges the same
+        # interval to every blocked request — see complete_iteration)
+        self.interference_time = 0.0
         self.preemption_count = 0
 
     # ------------------------------------------------------------- admission
@@ -156,15 +161,33 @@ class Worker:
         finished this iteration (for decode dispatch)."""
         self.busy_time += duration
         finished_prefills: list[Request] = []
-        # decode side
+        # decode side. ``interference`` is the wall time this iteration ran
+        # beyond a pure decode pass (piggybacked prefill compute + the §IV
+        # contention penalty when γ is active). It is one per-ITERATION
+        # quantity: the worker-level ``interference_time`` accumulates it
+        # exactly once, while the per-request ``blocked_time`` dict charges
+        # the same interval to EVERY blocked decode — deliberately, because
+        # each request's stream really did stall that long (wall blocking
+        # is concurrent, so per-request entries must never be summed across
+        # a batch as if they were machine time).
         pure_decode = self.cost.decode_iter_time(plan.n_decode, plan.sum_ctx) \
             if plan.n_decode else 0.0
         interference = max(0.0, duration - pure_decode)
+        if plan.n_decode and plan.prefill_tokens > 0:
+            self.interference_time += interference
         for r in plan.decode_reqs:
             if r.phase != Phase.DECODING or r not in self.decode_running:
                 continue        # evicted mid-compose (page preemption)
             r.record_decode_iteration(duration)
-            self.view.kv_used_tokens += 1
+            # grow the token counter by the request's true footprint
+            # delta so release() — which frees state_tokens(ctx) — always
+            # balances: 1.0 for dense KV, 0.5 past a sliding window's
+            # cap, 0 for constant-state (rwkv/mamba, whose fixed state
+            # was pinned in full at admission). A flat += 1 leaked the
+            # difference on every finished request.
+            self.view.kv_used_tokens += \
+                self.cost.state_tokens(r.context_len) \
+                - self.cost.state_tokens(r.context_len - 1)
             if plan.prefill_tokens > 0:
                 self.blocked_time[r.rid] = \
                     self.blocked_time.get(r.rid, 0.0) + interference
@@ -198,6 +221,13 @@ class Worker:
             req.prefilled_tokens += tokens
             if req.remaining_prefill == 0:
                 req.record_first_token(now)
+                # the prefill's forward pass emitted token #1: charge its
+                # footprint (context grew past the prompt the admission
+                # reservation covered), so release(st(final ctx)) balances
+                # to zero over the request's life
+                self.view.kv_used_tokens += \
+                    self.cost.state_tokens(req.context_len) \
+                    - self.cost.state_tokens(req.prompt_len)
                 if req.remaining_output == 0:
                     req.phase = Phase.FINISHED
                     req.finish_time = now

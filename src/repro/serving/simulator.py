@@ -42,6 +42,7 @@ class Simulator:
                  transfer=None,
                  backend: Optional[ExecutionBackend] = None,
                  rebalancer: Optional[RoleRebalancer] = None,
+                 drift_monitor=None,
                  record_decisions: bool = False):
         """``backend`` supplies iteration durations (and execution, for the
         real-JAX backend); default = the analytical cost model.
@@ -49,12 +50,16 @@ class Simulator:
         wraps into a ``CallableBackend`` over ``backend``.
 
         ``transfer``: bandwidth-contended KV migration engine. None keeps
-        the legacy fixed-delay ``CostModel.migration_time`` path."""
+        the legacy fixed-delay ``CostModel.migration_time`` path.
+
+        ``drift_monitor``: optional ``repro.perf.recalibrate.DriftMonitor``
+        fed every observed iteration for online γ/MFU recalibration."""
         if duration_fn is not None:
             backend = CallableBackend(duration_fn, base=backend)
         self.sched = ClusterScheduler(
             workers, policy, backend=backend, transfer=transfer,
-            rebalancer=rebalancer, record_decisions=record_decisions)
+            rebalancer=rebalancer, drift_monitor=drift_monitor,
+            record_decisions=record_decisions)
         self.sched.bind(self.push)
         self.now = 0.0
         self._heap: list[_Event] = []
@@ -164,6 +169,7 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   ici_links: Optional[int] = None,
                   page_size: int = 16,
                   online_predictor: bool = False,
+                  recalibrate_every: Optional[int] = None,
                   per_worker_calibration: str | bool = "auto",
                   worker_specs: Optional[Sequence] = None,
                   role_rebalance: str | bool = "auto",
@@ -190,6 +196,14 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
     so observed iteration durations EWMA-correct its estimates;
     ``per_worker_calibration``: "auto" (per-worker EWMA exactly when the
     cluster is heterogeneous), True/False to force.
+    ``recalibrate_every=N`` arms a ``DriftMonitor`` that re-fits the
+    per-bucket interference γ and nudges the measured MFU/bandwidth
+    constants on the worker cost models every N observed iterations
+    (None = legacy calibrate-once; a drift-free clock makes it a
+    bit-exact no-op). Combined with an observing predictor
+    (``online_predictor=True``) the monitor re-fits γ only — efficiency
+    drift stays the predictor's job, so the two loops never correct the
+    same error twice.
     ``role_rebalance``: "auto" (windowed-attainment rebalancing for
     policies that own a toggle, i.e. tropical), True (same, but a
     ValueError on policies without role lifecycle), or False (keep the
@@ -250,6 +264,19 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
         policy.toggle.cfg = dataclasses.replace(
             policy.toggle.cfg, role_transitions=False)
 
+    drift_monitor = None
+    if recalibrate_every is not None:
+        from repro.perf.recalibrate import DriftMonitor
+        # an observing predictor (OnlinePredictor) already EWMA-corrects
+        # efficiency drift at the prediction layer; folding the same drift
+        # into the model too would double-correct until the predictor's
+        # scales decay back — so the monitor then re-fits γ only (the one
+        # axis the predictor cannot learn)
+        drift_monitor = DriftMonitor(
+            costs, every=recalibrate_every,
+            adjust_efficiency=not hasattr(predictor, "observe_iteration"))
+
     sim = Simulator(workers, policy, transfer=transfer, backend=backend,
-                    rebalancer=rebalancer, record_decisions=record_decisions)
+                    rebalancer=rebalancer, drift_monitor=drift_monitor,
+                    record_decisions=record_decisions)
     return sim, cost

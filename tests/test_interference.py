@@ -1,0 +1,753 @@
+"""PR 5: measured mixed-batch interference + online recalibration.
+
+Covers the bucketed ``InterferenceTable`` (scalar ↔ 1×1 equivalence,
+piecewise-constant lookup), the γ-aware cost/predictor/toggle plumbing,
+``calibrate_interference`` over the real Pallas kernels, the
+``DriftMonitor`` online re-fit, the constant-state (rwkv/mamba) HBM
+footprint bugfix with its page-preemption regression, the calibration
+timer's median fix, and the per-iteration interference accounting.
+"""
+import copy
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.perf import (AnalyticalPredictor, ClusterPredictor, CostModel,
+                        DriftMonitor, InterferenceTable, OnlinePredictor,
+                        Predictor, STATE_TOKEN_EQUIV, V5E, WorkerSpec,
+                        calibrate_interference, gamma_at)
+from repro.serving.engine import IterationPlan, Worker
+from repro.serving.simulator import build_cluster
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("internlm-20b")
+
+
+@pytest.fixture(scope="module")
+def blind(cfg):
+    return CostModel(cfg, WorkerSpec(tp=8))
+
+
+def _gamma_model(cfg, interference):
+    return CostModel(cfg, WorkerSpec(tp=8, hw=dataclasses.replace(
+        V5E, interference=interference)))
+
+
+MIXED = (8, 8 * 2048.0, 2048, 0.0)
+
+
+# --------------------------------------------------------------- the table
+
+def test_table_validation():
+    with pytest.raises(ValueError, match="bucket"):
+        InterferenceTable(decode_edges=(), chunk_edges=(0,), gamma=())
+    with pytest.raises(ValueError, match="ascend"):
+        InterferenceTable(decode_edges=(4, 1), chunk_edges=(0,),
+                          gamma=((0.1,), (0.2,)))
+    with pytest.raises(ValueError, match="grid"):
+        InterferenceTable(decode_edges=(1, 4), chunk_edges=(0,),
+                          gamma=((0.1,),))
+    with pytest.raises(ValueError, match="finite"):
+        InterferenceTable(decode_edges=(1,), chunk_edges=(0,),
+                          gamma=((-0.5,),))
+    with pytest.raises(ValueError, match="finite"):
+        InterferenceTable(decode_edges=(1,), chunk_edges=(0,),
+                          gamma=((float("nan"),),))
+    # list input is normalised to (hashable) tuples
+    t = InterferenceTable(decode_edges=[1, 4], chunk_edges=[128],
+                          gamma=[[0.1], [0.2]])
+    assert hash(t) == hash(copy.deepcopy(t))
+
+
+def test_table_lookup_piecewise_constant_and_monotone():
+    t = InterferenceTable(decode_edges=(1, 4, 16), chunk_edges=(256, 1024),
+                          gamma=((0.1, 0.2), (0.3, 0.4), (0.5, 0.6)))
+    # within one cell the coefficient is constant wherever you probe it
+    assert t.lookup(4, 256) == t.lookup(7, 500) == t.lookup(15, 1023) == 0.3
+    # below the first edge clamps into the first bucket
+    assert t.lookup(0, 0) == 0.1
+    # a monotone grid yields monotone lookups across bucket boundaries
+    for chunk in (0, 300, 2048):
+        gs = [t.lookup(n, chunk) for n in (1, 4, 16, 64)]
+        assert gs == sorted(gs)
+    for n in (1, 8, 32):
+        gs = [t.lookup(n, c) for c in (64, 512, 4096)]
+        assert gs == sorted(gs)
+    assert t.max_gamma == 0.6
+
+
+def test_scalar_and_1x1_table_bit_exact(cfg):
+    scalar = _gamma_model(cfg, 0.7)
+    table = _gamma_model(cfg, InterferenceTable.from_scalar(0.7))
+    for args in (MIXED, (1, 4096.0, 256, 1024.0), (32, 32 * 512.0, 8192, 0.0),
+                 (4, 1024.0, 0, 0.0), (0, 0.0, 2048, 0.0)):
+        assert scalar.iteration_time(*args) == table.iteration_time(*args)
+
+
+def test_zero_table_bit_exact_with_legacy(cfg, blind):
+    zeros = _gamma_model(cfg, InterferenceTable(
+        decode_edges=(1, 8), chunk_edges=(256,), gamma=((0.0,), (0.0,))))
+    for args in (MIXED, (16, 16 * 512.0, 512, 0.0), (1, 2048.0, 128, 64.0)):
+        assert zeros.iteration_time(*args) == blind.iteration_time(*args)
+
+
+def test_gamma_looked_up_by_actual_batch_and_chunk(cfg, blind):
+    t = InterferenceTable(decode_edges=(1, 8), chunk_edges=(256,),
+                          gamma=((0.0,), (0.9,)))
+    m = _gamma_model(cfg, t)
+    # small decode batch lands in the γ=0 cell: additive exactly
+    assert m.iteration_time(4, 4 * 2048.0, 2048, 0.0) == \
+        blind.iteration_time(4, 4 * 2048.0, 2048, 0.0)
+    # large batch pays the hot cell's penalty
+    assert m.iteration_time(8, 8 * 2048.0, 2048, 0.0) > \
+        blind.iteration_time(8, 8 * 2048.0, 2048, 0.0)
+
+
+def test_interference_penalty_decomposition(cfg, blind):
+    m = _gamma_model(cfg, 0.5)
+    assert m.interference_penalty(8, 8 * 2048.0, 0) == 0.0
+    assert m.interference_penalty(0, 0.0, 2048) == 0.0
+    assert blind.interference_penalty(*MIXED) == 0.0
+    # penalty is exactly the mixed-iteration excess over the γ=0 model
+    assert m.iteration_time(*MIXED) == \
+        blind.iteration_time(*MIXED) + m.interference_penalty(*MIXED)
+
+
+def test_gamma_at_resolves_scalar_and_table():
+    assert gamma_at(0.25, 8, 2048) == 0.25
+    t = InterferenceTable(decode_edges=(1, 8), chunk_edges=(0,),
+                          gamma=((0.1,), (0.4,)))
+    assert gamma_at(t, 2, 512) == 0.1
+    assert gamma_at(t, 8, 512) == 0.4
+
+
+# ---------------------------------------------------------- predictor layer
+
+def test_predictor_interference_plumbing(cfg, blind):
+    class Bare(Predictor):
+        pass
+
+    assert Bare().predict_interference(8, 8 * 2048.0, 2048) == 0.0
+    m = _gamma_model(cfg, 0.5)
+    pred = AnalyticalPredictor(m)
+    expect = m.interference_penalty(*MIXED) * pred.safety
+    assert pred.predict_interference(*MIXED) == expect > 0.0
+    assert AnalyticalPredictor(blind).predict_interference(*MIXED) == 0.0
+    # OnlinePredictor passes the penalty through untouched
+    online = OnlinePredictor(pred)
+    assert online.predict_interference(*MIXED) == expect
+    # ClusterPredictor prices on the target worker's own γ
+    cp = ClusterPredictor({0: blind, 1: m})
+    assert cp.predict_interference(*MIXED, wid=0) == 0.0
+    assert cp.predict_interference(*MIXED, wid=1) == expect
+
+
+def test_toggle_admission_prices_the_penalty(cfg, blind):
+    from repro.core.toggle import (MultiplexingToggle, Role, ToggleConfig,
+                                   WorkerView)
+
+    m = _gamma_model(cfg, 0.8)
+    req = Request(rid=0, arrival_time=0.0, prompt_len=4096, output_len=64,
+                  slo=SLOSpec(ttft=30.0, tpot=10.0))
+
+    def view():
+        return WorkerView(wid=0, role=Role.MULTIPLEX,
+                          kv_capacity_tokens=1e9, decode_batch=8,
+                          decode_sum_ctx=8 * 2048.0)
+
+    cfg_t = ToggleConfig()
+    chunk = cfg_t.chunk_tokens
+    pred_aware = AnalyticalPredictor(m)
+    t_chunk = pred_aware.predict_prefill(chunk, int(8 * 2048.0))
+    penalty = pred_aware.predict_interference(8, 8 * 2048.0, chunk,
+                                              int(8 * 2048.0))
+    assert penalty > 0.0
+    # slack absorbs the additive chunk cost but not the contention on top
+    slack = (t_chunk + 0.5 * penalty) * cfg_t.slack_safety
+    v_blind, v_aware = view(), view()
+    v_blind.min_tpot_slack = v_aware.min_tpot_slack = slack
+    tog_blind = MultiplexingToggle([v_blind], AnalyticalPredictor(blind),
+                                   cfg_t)
+    tog_aware = MultiplexingToggle([v_aware], pred_aware, cfg_t)
+    assert tog_blind._multiplex_ok(v_blind, req)
+    assert not tog_aware._multiplex_ok(v_aware, req)
+
+
+def test_batch_rule_chunk_gate_prices_the_penalty(cfg, blind):
+    """The per-iteration chunk-insertion gate (batch_rule) must price what
+    dispatch admission prices: a chunk whose additive cost fits the slack
+    but whose contention does not stays out of the batch."""
+    from repro.core.policies import make_policy
+    from repro.core.toggle import Role, WorkerView
+
+    m = _gamma_model(cfg, 0.8)
+    head = Request(rid=0, arrival_time=0.0, prompt_len=4096, output_len=64,
+                   slo=SLOSpec(ttft=30.0, tpot=10.0))
+
+    def policy_and_view(cost_model):
+        views = [WorkerView(wid=0, role=Role.MULTIPLEX,
+                            kv_capacity_tokens=1e9, decode_batch=8,
+                            decode_sum_ctx=8 * 2048.0)]
+        return make_policy("tropical", views,
+                           AnalyticalPredictor(cost_model)), views[0]
+
+    pol_aware, v_aware = policy_and_view(m)
+    chunk = pol_aware.toggle.cfg.chunk_tokens
+    t_add = AnalyticalPredictor(m).predict_prefill(chunk, int(8 * 2048.0))
+    penalty = AnalyticalPredictor(m).predict_interference(
+        8, 8 * 2048.0, chunk, int(8 * 2048.0))
+    slack = (t_add + 0.5 * penalty) * pol_aware.toggle.cfg.slack_safety
+    v_aware.min_tpot_slack = slack
+    pol_blind, v_blind = policy_and_view(blind)
+    v_blind.min_tpot_slack = slack
+    assert pol_blind.batch_rule(v_blind, 0.0, head).prefill_budget > 0
+    assert pol_aware.batch_rule(v_aware, 0.0, head).prefill_budget == 0
+
+
+def test_slack_chunking_shrinks_chunk_instead_of_rejecting(cfg, blind):
+    """tropical++'s slack-sized chunking must fold the penalty into the
+    binary search: with γ on, the same slack budget buys a smaller chunk
+    — not a full-size chunk the admission gate then refuses."""
+    from repro.core.toggle import (MultiplexingToggle, Role, ToggleConfig,
+                                   WorkerView)
+
+    m = _gamma_model(cfg, 0.8)
+    cfg_t = ToggleConfig(slack_chunking=True)
+
+    def view():
+        v = WorkerView(wid=0, role=Role.MULTIPLEX, kv_capacity_tokens=1e9,
+                       decode_batch=8, decode_sum_ctx=8 * 2048.0)
+        # slack that fits a mid-size additive chunk comfortably
+        v.min_tpot_slack = AnalyticalPredictor(blind).predict_prefill(
+            1024, int(8 * 2048.0)) * cfg_t.slack_safety
+        return v
+
+    tog_blind = MultiplexingToggle([view()], AnalyticalPredictor(blind),
+                                   cfg_t)
+    tog_aware = MultiplexingToggle([view()], AnalyticalPredictor(m), cfg_t)
+    c_blind = tog_blind.chunk_for(view(), 10.0)
+    c_aware = tog_aware.chunk_for(view(), 10.0)
+    assert cfg_t.min_chunk <= c_aware < c_blind
+
+
+# ---------------------------------------------------- kernel-grid calibration
+
+def test_time_fn_median_and_repeats_guard(monkeypatch):
+    import types
+
+    import repro.perf.calibrate as cal
+
+    with pytest.raises(ValueError, match="repeats"):
+        cal._time_fn(lambda: None, 0)
+    with pytest.raises(ValueError, match="repeats"):
+        cal._time_fn(lambda: None, -3)
+
+    def fake_clock(deltas):
+        ticks = []
+        t = 0.0
+        for d in deltas:
+            ticks += [t, t + d]
+            t += d + 100.0
+        it = iter(ticks)
+        return types.SimpleNamespace(perf_counter=lambda: next(it))
+
+    # even repeats: the mean of the two middle samples, NOT the
+    # upper-middle sample times[len//2] (the old biased pick -> 5.0)
+    monkeypatch.setattr(cal, "time", fake_clock([1.0, 5.0, 2.0, 100.0]))
+    assert cal._time_fn(lambda: None, 4) == 3.5
+    # odd repeats: the true middle
+    monkeypatch.setattr(cal, "time", fake_clock([9.0, 1.0, 5.0]))
+    assert cal._time_fn(lambda: None, 3) == 5.0
+
+
+def test_calibrate_interference_measures_a_bounded_grid():
+    table, cal = calibrate_interference(
+        V5E, decode_batches=(2, 1), chunk_sizes=(64,), heads=2, head_dim=64,
+        page_size=16, pages_per_seq=2, repeats=2)
+    assert table.decode_edges == (1, 2)       # grid values sorted into edges
+    assert table.chunk_edges == (64,)
+    assert all(0.0 <= g <= 1.0 for row in table.gamma for g in row)
+    assert all(t > 0.0 for t in cal.pure_prefill_s + cal.pure_decode_s)
+    assert all(t > 0.0 for row in cal.mixed_s for t in row)
+    assert cal.table is table
+    with pytest.raises(ValueError, match="grid"):
+        calibrate_interference(V5E, decode_batches=(), chunk_sizes=(64,))
+
+
+def test_calibrated_backend_solves_gamma_against_measured_spec(monkeypatch):
+    """measure_interference=True must solve γ with the MEASURED constants
+    — the β's the model recomputes when applying the penalty — not the
+    assumed spec's."""
+    import repro.perf.calibrate as cal
+    from repro.configs import get_smoke
+
+    captured = {}
+    real = cal.calibrate_interference
+
+    def spy(hw, **kw):
+        captured["hw"] = hw
+        return real(hw, **kw)
+
+    monkeypatch.setattr(cal, "calibrate_interference", spy)
+    backend = cal.CalibratedRooflineBackend(
+        get_smoke("deepseek-7b"), WorkerSpec(tp=1), seq=128, heads=2,
+        head_dim=64, batch=2, page_size=16, pages_per_seq=2, repeats=1,
+        measure_interference=True,
+        interference_kw=dict(decode_batches=(1,), chunk_sizes=(64,),
+                             heads=2, head_dim=64, page_size=16,
+                             pages_per_seq=2, repeats=1))
+    assert captured["hw"].name.endswith("-measured")
+    assert isinstance(backend.cost.worker.hw.interference, InterferenceTable)
+    assert backend.interference_calibration is not None
+
+
+def test_online_predictor_does_not_absorb_the_gamma_penalty(cfg):
+    """Observed mixed durations include the γ penalty; the phase-scale
+    EWMAs must strip it before apportioning, or admission prices the
+    contention twice (once in the inflated scales, once via
+    predict_interference)."""
+    m = _gamma_model(cfg, 0.8)
+    pred = OnlinePredictor(AnalyticalPredictor(m))
+    t_mixed = m.iteration_time(*MIXED)       # truth = the model's own γ
+    for _ in range(60):
+        pred.observe_iteration(8, 8 * 2048.0, 2048, 0.0, t_mixed)
+    # an unbiased model converges to scale ~1.0 — no phantom inflation
+    assert pred.prefill_scale == pytest.approx(1.0, abs=0.1)
+    assert pred.decode_scale == pytest.approx(1.0, abs=0.1)
+
+
+def test_calibrated_table_drops_into_a_cost_model(cfg, blind):
+    table, _ = calibrate_interference(
+        V5E, decode_batches=(1,), chunk_sizes=(64,), heads=2, head_dim=64,
+        page_size=16, pages_per_seq=2, repeats=1)
+    m = _gamma_model(cfg, table)
+    assert m.iteration_time(*MIXED) >= blind.iteration_time(*MIXED)
+
+
+# ------------------------------------------------------- online recalibration
+
+def test_drift_monitor_converges_to_injected_gamma(cfg, blind):
+    cost = CostModel(cfg, WorkerSpec(tp=8))            # starts γ-blind
+    truth = _gamma_model(cfg, 0.6)
+    dm = DriftMonitor({0: cost}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                         sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(40):
+        predicted = cost.iteration_time(*MIXED)
+        dm.observe(0, plan, predicted, truth.iteration_time(*MIXED))
+    assert dm.recalibrations >= 2
+    assert gamma_at(cost.worker.hw.interference, 8, 2048) == \
+        pytest.approx(0.6, abs=0.05)
+    # the corrected model now prices the truth
+    assert cost.iteration_time(*MIXED) == \
+        pytest.approx(truth.iteration_time(*MIXED), rel=0.05)
+
+
+def test_drift_monitor_nudges_efficiency_from_pure_residuals(cfg):
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=0,
+                         sum_ctx=0.0, prefill_tokens=4096,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    target = 2.0 * cost.prefill_time(4096)   # hardware runs 2x slower
+    for _ in range(64):
+        dm.observe(0, plan, cost.prefill_time(4096), target)
+    assert cost.worker.hw.mfu_prefill < V5E.mfu_prefill
+    assert cost.prefill_time(4096) == pytest.approx(target, rel=0.2)
+
+
+def test_drift_monitor_is_a_noop_without_drift(cfg):
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost}, every=8, floor=2)
+    mixed = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                          sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                          prefill_ctx_offset=0.0, exclusive_prefill=False)
+    pure = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=16,
+                         sum_ctx=16 * 512.0, prefill_tokens=0,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    before = [cost.iteration_time(*MIXED),
+              cost.iteration_time(16, 16 * 512.0),
+              cost.prefill_time(8192)]
+    for _ in range(24):                       # observed == predicted
+        dm.observe(0, mixed, cost.iteration_time(*MIXED),
+                   cost.iteration_time(*MIXED))
+        dm.observe(0, pure, cost.iteration_time(16, 16 * 512.0),
+                   cost.iteration_time(16, 16 * 512.0))
+    assert dm.recalibrations >= 1
+    after = [cost.iteration_time(*MIXED),
+             cost.iteration_time(16, 16 * 512.0),
+             cost.prefill_time(8192)]
+    assert before == after                    # bit-exact
+
+
+def test_drift_monitor_preserves_startup_calibrated_cells(cfg):
+    """Re-fitting from traffic that only warms one bucket must not forget
+    the startup calibration's other cells — the new table is the union of
+    warm cells and the existing grid."""
+    startup = InterferenceTable(decode_edges=(1, 8), chunk_edges=(256,),
+                                gamma=((0.2,), (0.9,)))
+    cost = _gamma_model(cfg, startup)
+    truth = _gamma_model(cfg, InterferenceTable(
+        decode_edges=(1, 8), chunk_edges=(256,), gamma=((0.5,), (0.9,))))
+    dm = DriftMonitor({0: cost}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=2,
+                         sum_ctx=2 * 2048.0, prefill_tokens=2048,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(32):                      # warms only the (2, 2048) cell
+        dm.observe(0, plan, cost.iteration_time(2, 2 * 2048.0, 2048),
+                   truth.iteration_time(2, 2 * 2048.0, 2048))
+    table = cost.worker.hw.interference
+    assert gamma_at(table, 2, 2048) == pytest.approx(0.5, abs=0.05)
+    # cells outside the traffic's hull keep their startup-measured γ
+    assert gamma_at(table, 8, 256) == 0.9
+    assert gamma_at(table, 1, 256) == 0.2
+    assert 8 in table.decode_edges and 256 in table.chunk_edges
+
+
+def test_drift_monitor_keeps_per_model_evidence_separate(cfg):
+    """One throttling worker must not corrupt a healthy peer's constants
+    (heterogeneous clusters carry one CostModel per worker)."""
+    sick = CostModel(cfg, WorkerSpec(tp=8))
+    healthy = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: sick, 1: healthy}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=16,
+                         sum_ctx=16 * 512.0, prefill_tokens=0,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(64):
+        t_sick = sick.iteration_time(16, 16 * 512.0)
+        t_ok = healthy.iteration_time(16, 16 * 512.0)
+        dm.observe(0, plan, t_sick, 2.0 * t_sick)   # worker 0 runs 2x slow
+        dm.observe(1, plan, t_ok, t_ok)             # worker 1 is fine
+    assert sick.worker.hw.mfu_decode < V5E.mfu_decode
+    assert healthy.worker.hw.mfu_decode == V5E.mfu_decode
+    assert healthy.worker.hw.bw_eff == V5E.bw_eff
+
+
+def test_drift_monitor_unbiased_under_symmetric_noise(cfg):
+    """Zero-mean noise around the additive prediction must not teach a
+    phantom γ: negative residuals pull the EWMA down (only the folded
+    table value clamps at 0)."""
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                         sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    truth = CostModel(cfg, WorkerSpec(tp=8))  # frozen γ=0 ground truth
+    unit = truth._interference(1.0, *MIXED)
+    for i in range(64):                       # observed = truth ± 0.3·unit
+        noise = 0.3 * unit * (1 if i % 2 else -1)
+        dm.observe(0, plan, cost.iteration_time(*MIXED),
+                   truth.iteration_time(*MIXED) + noise)
+    assert gamma_at(cost.worker.hw.interference, 8, 2048) == \
+        pytest.approx(0.0, abs=0.1)
+
+
+def test_drift_monitor_accumulates_subfloor_evidence_across_windows(cfg):
+    """A phase too rare to reach the evidence floor inside one window must
+    keep its evidence across applies — only a folded phase resets."""
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost}, every=4, floor=8)   # window < floor
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=0,
+                         sum_ctx=0.0, prefill_tokens=4096,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    target = 2.0 * cost.prefill_time(4096)   # frozen: hardware is 2x slow
+    for _ in range(40):
+        dm.observe(0, plan, cost.prefill_time(4096), target)
+    assert dm.recalibrations >= 8
+    # evidence survived the sub-floor windows and eventually folded
+    assert cost.worker.hw.mfu_prefill < V5E.mfu_prefill
+    assert cost.prefill_time(4096) == pytest.approx(target, rel=0.2)
+
+
+def test_drift_monitor_scalar_start_keeps_floor_below_warm_hull(cfg, blind):
+    """Starting γ-blind (scalar 0.0), evidence at a big-batch cell must
+    not leak to small batches: the folded table anchors the lowest bucket
+    at the current scalar."""
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    truth = _gamma_model(cfg, 0.8)
+    dm = DriftMonitor({0: cost}, every=16, floor=8)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                         sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(32):
+        dm.observe(0, plan, cost.iteration_time(*MIXED),
+                   truth.iteration_time(*MIXED))
+    table = cost.worker.hw.interference
+    assert gamma_at(table, 8, 2048) == pytest.approx(0.8, abs=0.05)
+    # no evidence at batch 1 / tiny chunks: stays at the scalar (0.0), so
+    # small mixed batches remain priced additively — bit-exact
+    assert gamma_at(table, 1, 64) == 0.0
+    assert cost.iteration_time(1, 2048.0, 64, 0.0) == \
+        blind.iteration_time(1, 2048.0, 64, 0.0)
+
+
+def test_build_cluster_gates_efficiency_fold_under_online_predictor(cfg):
+    """Both loops armed: the OnlinePredictor owns efficiency drift, the
+    DriftMonitor re-fits γ only — never the same correction twice."""
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2,
+                           online_predictor=True, recalibrate_every=32)
+    assert sim.sched.drift_monitor is not None
+    assert sim.sched.drift_monitor.adjust_efficiency is False
+    sim2, _ = build_cluster(cfg, "tropical", n_workers=2,
+                            recalibrate_every=32)
+    assert sim2.sched.drift_monitor.adjust_efficiency is True
+
+
+def test_drift_monitor_does_not_misread_uniform_drift_as_gamma(cfg):
+    """A uniformly 1.5x-slow backend with NO contention (the thermal-
+    drift case) must not teach γ, even when efficiency folding is off
+    (the OnlinePredictor pairing): the implied-γ solve discounts the
+    pure-phase drift ratio first."""
+    cost = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost}, every=16, floor=8,
+                      adjust_efficiency=False)
+    pre = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=0,
+                        sum_ctx=0.0, prefill_tokens=2048,
+                        prefill_ctx_offset=0.0, exclusive_prefill=False)
+    dec = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                        sum_ctx=8 * 2048.0, prefill_tokens=0,
+                        prefill_ctx_offset=0.0, exclusive_prefill=False)
+    mix = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                        sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                        prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(60):                       # evidence of uniform drift
+        dm.observe(0, pre, cost.prefill_time(2048),
+                   1.5 * cost.prefill_time(2048))
+        dm.observe(0, dec, cost.iteration_time(8, 8 * 2048.0),
+                   1.5 * cost.iteration_time(8, 8 * 2048.0))
+    for _ in range(16):                       # mixed: slow but additive
+        dm.observe(0, mix, cost.iteration_time(*MIXED),
+                   1.5 * cost.iteration_time(*MIXED))
+    assert cost.worker.hw.mfu_prefill == V5E.mfu_prefill   # fold stayed off
+    assert gamma_at(cost.worker.hw.interference, 8, 2048) == \
+        pytest.approx(0.0, abs=0.1)
+
+
+def test_drift_monitor_registers_elastic_workers(cfg):
+    """A worker added after construction (elastic clusters) must observe
+    and recalibrate like a founding one."""
+    cost0 = CostModel(cfg, WorkerSpec(tp=8))
+    dm = DriftMonitor({0: cost0}, every=16, floor=8)
+    late = CostModel(cfg, WorkerSpec(tp=8))
+    dm.register(10, late)
+    truth = _gamma_model(cfg, 0.6)
+    plan = IterationPlan(decode_reqs=[], prefill_parts=[], n_decode=8,
+                         sum_ctx=8 * 2048.0, prefill_tokens=2048,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    for _ in range(32):
+        dm.observe(10, plan, late.iteration_time(*MIXED),
+                   truth.iteration_time(*MIXED))
+    assert gamma_at(late.worker.hw.interference, 8, 2048) == \
+        pytest.approx(0.6, abs=0.05)
+    # the scheduler's elastic-add path wires the registration
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2,
+                           recalibrate_every=32)
+    w = Worker(5, CostModel(cfg, WorkerSpec(tp=8)))
+    sim.add_worker_at(0.0, w)
+    sim.run(until=1.0)
+    assert sim.sched.drift_monitor.costs.get(5) is w.cost
+
+
+def test_drift_monitor_rejects_bad_cadence(cfg, blind):
+    with pytest.raises(ValueError, match="cadence"):
+        DriftMonitor({0: blind}, every=0)
+
+
+def test_serve_cli_round_trips_recalibrate_every():
+    from repro.launch import serve
+
+    row = serve.main(["--rate", "0.5", "--duration", "10", "--seed", "3",
+                      "--recalibrate-every", "64"])
+    assert row["recalibrate_every"] == 64
+    assert row["recalibrations"] >= 0
+    assert "drift_gamma_max" in row
+    # off by default: no drift keys in the legacy row
+    row_off = serve.main(["--rate", "0.5", "--duration", "10", "--seed", "3"])
+    assert "recalibrate_every" not in row_off
+    with pytest.raises(SystemExit):
+        serve.main(["--rate", "0.5", "--duration", "10",
+                    "--recalibrate-every", "0"])
+
+
+# ------------------------------------- constant-state HBM footprint bugfix
+
+def test_state_tokens_nonzero_for_constant_state_families():
+    cm = CostModel(get_config("rwkv6-7b"), WorkerSpec(tp=4))
+    assert cm.spec.kv_bytes_per_token == 0.0
+    assert cm.spec.state_bytes > 0.0
+    # context-independent, but NOT zero: the state pins real HBM
+    assert cm.state_tokens(1) == cm.state_tokens(100_000) \
+        == float(STATE_TOKEN_EQUIV)
+    # the pool grants exactly (#states that fit) x the per-state unit,
+    # so admission gates at the true state count
+    states = cm.kv_capacity_tokens() / cm.state_tokens(0)
+    assert states == int(states) and states >= 1
+
+
+def test_dense_state_tokens_unchanged(blind):
+    assert blind.state_tokens(4096) == 4096.0
+
+
+def test_dense_kv_counter_balances_over_lifecycle(blind):
+    """Full engine flow (prefill start -> first token -> decode ->
+    finish) must return the token counter to exactly zero: the first
+    generated token's footprint is charged at prefill completion, every
+    decode step adds its delta, release frees the final context."""
+    from repro.core.policies import BatchRule
+
+    w = Worker(0, blind)
+    slo = SLOSpec(ttft=60.0, tpot=10.0)
+    r = Request(rid=0, arrival_time=0.0, prompt_len=64, output_len=4,
+                slo=slo)
+    w.admit_prefill(r, 0.0)
+    plan = w.compose_iteration(
+        BatchRule(run_decode=True, prefill_budget=10_000,
+                  prefill_exclusive=True), 0.0)
+    assert plan.prefill_tokens == 64
+    now = 1.0
+    assert w.complete_iteration(plan, now, 1.0) == [r]
+    # prompt + the first generated token are both on the books
+    assert w.view.kv_used_tokens == blind.state_tokens(r.context_len) == 65.0
+    w.admit_decode(r, now)
+    while r.phase == Phase.DECODING:
+        plan = w.compose_iteration(
+            BatchRule(run_decode=True, prefill_budget=0,
+                      prefill_exclusive=False), now)
+        dur = w.plan_duration(plan)
+        now += dur
+        w.complete_iteration(plan, now, dur)
+    assert r.phase == Phase.FINISHED
+    assert w.view.kv_used_tokens == 0.0
+    assert w.pages.used_pages == 0
+
+
+def test_sliding_window_kv_counter_balances_over_lifecycle():
+    """Past the window cap a decode step only pins 0.5 token-equivalents
+    (half the layers hold window-bounded KV); growing the counter by a
+    flat 1 leaked the other half on every finished long request."""
+    cfg = get_config("gemma2-2b")
+    cm = CostModel(cfg, WorkerSpec(tp=1))
+    assert cm.spec.ctx_cap is not None
+    w = Worker(0, cm)
+    slo = SLOSpec(ttft=60.0, tpot=10.0)
+    prompt = cm.spec.ctx_cap + 64            # already past the window
+    r = Request(rid=0, arrival_time=0.0, prompt_len=prompt, output_len=3,
+                slo=slo)
+    r.generated_tokens = 1
+    # charge admission for the live context, as admit_migrated does
+    assert w.pages.reserve(r.rid, w._page_need(r.context_len))
+    w.view.kv_used_tokens += cm.state_tokens(r.context_len)
+    w.admit_decode(r, 0.0)
+    plan = IterationPlan(decode_reqs=[r], prefill_parts=[], n_decode=1,
+                         sum_ctx=float(r.context_len), prefill_tokens=0,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    dur = cm.decode_iter_time(1, plan.sum_ctx)
+    w.complete_iteration(plan, now=dur, duration=dur)
+    # one token past the cap pins exactly 0.5 token-equivalents
+    assert w.view.kv_used_tokens == cm.state_tokens(r.context_len)
+    w.complete_iteration(plan, now=2 * dur, duration=dur)
+    assert r.phase.name == "FINISHED"
+    assert w.view.kv_used_tokens == 0.0       # fully released, no leak
+
+
+def test_constant_state_kv_counter_balances_over_lifecycle():
+    """Admission pins the constant state; decode steps must NOT grow the
+    token counter (nothing new is written), or release() — which frees
+    the constant footprint — would leak output_len tokens per finished
+    request and eventually wedge admission on an empty worker."""
+    cfg = get_config("rwkv6-7b")
+    w = Worker(0, CostModel(cfg, WorkerSpec(tp=4)))
+    slo = SLOSpec(ttft=60.0, tpot=10.0)
+    r = Request(rid=0, arrival_time=0.0, prompt_len=32, output_len=3,
+                slo=slo)
+    r.generated_tokens = 1
+    assert w.pages.reserve(r.rid, w._page_need(r.prompt_len))
+    w.view.kv_used_tokens += w.cost.state_tokens(r.prompt_len)
+    w.admit_decode(r, 0.0)
+    plan = IterationPlan(decode_reqs=[r], prefill_parts=[], n_decode=1,
+                         sum_ctx=float(r.context_len), prefill_tokens=0,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    dur = w.cost.decode_iter_time(1, plan.sum_ctx)
+    for step in range(2):
+        w.complete_iteration(plan, now=(step + 1) * dur, duration=dur)
+    assert r.phase.name == "FINISHED"
+    assert w.view.kv_used_tokens == 0.0       # fully released, no leak
+    assert w.pages.used_pages == 0
+
+
+def test_rwkv_pool_exhaustion_triggers_preemption():
+    """A pool of rwkv6 decodes must exhaust the page pool and preempt —
+    with the old zero-footprint ternary the accountant saw nothing, so
+    admission never gated and the watermark never fired."""
+    cfg = get_config("rwkv6-7b")
+    from repro.perf.model import build_cost_spec
+    spec = build_cost_spec(cfg)
+    # HBM sized so ~2.5 states fit beside the weights -> 2 concurrent
+    hbm = (spec.n_params * spec.bytes_per_weight
+           + 2.5 * spec.state_bytes) / 0.9
+    wspec = WorkerSpec(tp=1, hw=dataclasses.replace(V5E, hbm_bytes=hbm))
+    sim, cm = build_cluster(cfg, "tropical", n_workers=2, worker_spec=wspec)
+    assert cm.kv_capacity_tokens() == 2 * STATE_TOKEN_EQUIV
+    slo = SLOSpec(ttft=120.0, tpot=10.0)
+    trace = [Request(rid=i, arrival_time=0.01 * i, prompt_len=32,
+                     output_len=12, slo=slo) for i in range(6)]
+    sim.add_trace(trace)
+    m = sim.run(until=4000.0)
+    assert m.n_finished == 6                  # preempted work still completes
+    assert m.preemptions > 0, \
+        "six concurrent states in a 2-state pool must preempt"
+    assert sum(w.preemption_count for w in sim.workers.values()) > 0
+
+
+# -------------------------------------------- per-iteration interference
+
+def test_interference_charged_once_per_iteration(cfg):
+    m = _gamma_model(cfg, 0.5)
+    w = Worker(0, m)
+    slo = SLOSpec(ttft=60.0, tpot=10.0)
+    decodes = [Request(rid=i, arrival_time=0.0, prompt_len=2048,
+                       output_len=64, slo=slo) for i in range(3)]
+    for r in decodes:
+        r.generated_tokens = 1
+        w.admit_decode(r, 0.0)
+    rp = Request(rid=9, arrival_time=0.0, prompt_len=256, output_len=8,
+                 slo=slo)
+    rp.prefill_start = 0.0
+    plan = IterationPlan(
+        decode_reqs=list(decodes), prefill_parts=[(rp, 256)],
+        n_decode=3, sum_ctx=float(sum(r.context_len for r in decodes)),
+        prefill_tokens=256, prefill_ctx_offset=0.0, exclusive_prefill=False)
+    pure = m.decode_iter_time(plan.n_decode, plan.sum_ctx)
+    dur = pure + 0.25
+    w.complete_iteration(plan, now=dur, duration=dur)
+    # each blocked request's stream stalled the full interval (wall
+    # blocking is concurrent) ...
+    for r in decodes:
+        assert w.blocked_time[r.rid] == pytest.approx(0.25)
+    # ... but the worker-level machine-time counter sees it exactly ONCE
+    assert w.interference_time == pytest.approx(0.25)
+    w.complete_iteration(plan, now=2 * dur, duration=dur)
+    assert w.interference_time == pytest.approx(0.5)
+    for r in decodes:
+        assert w.blocked_time[r.rid] == pytest.approx(0.5)
+
+
+def test_pure_iterations_charge_no_interference(cfg, blind):
+    w = Worker(0, blind)
+    slo = SLOSpec(ttft=60.0, tpot=10.0)
+    r = Request(rid=0, arrival_time=0.0, prompt_len=2048, output_len=64,
+                slo=slo)
+    r.generated_tokens = 1
+    w.admit_decode(r, 0.0)
+    plan = IterationPlan(decode_reqs=[r], prefill_parts=[], n_decode=1,
+                         sum_ctx=float(r.context_len), prefill_tokens=0,
+                         prefill_ctx_offset=0.0, exclusive_prefill=False)
+    w.complete_iteration(plan, now=1.0,
+                         duration=blind.decode_iter_time(1, plan.sum_ctx))
+    assert w.interference_time == 0.0
+    assert r.rid not in w.blocked_time

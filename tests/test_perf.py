@@ -441,11 +441,18 @@ def test_bench_summary_schema():
                              "weighted_attainment": 0.95}],
         "fig_hetero": [{"config": "summary", "mean_hetero_global": 0.69,
                         "mean_hetero_pw": 0.76}],
+        "fig_interference": [{"config": "summary", "mean_gamma_blind": 0.98,
+                              "mean_gamma_aware": 0.99,
+                              "mean_gamma_drift": 0.98,
+                              "mean_gamma_abs_err": 0.01}],
     }
     s = build_summary(results)
     assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 1
     assert s["slo_attainment"] == 0.97
     assert s["weighted_attainment"] == 0.95
     assert s["hetero_per_worker_attainment"] == 0.76
+    assert s["interference_aware_attainment"] == 0.99
+    assert s["interference_blind_attainment"] == 0.98
+    assert s["interference_gamma_abs_err"] == 0.01
     assert s["ttft_p90_s"] > 0 and s["tpot_p90_s"] > 0
     assert s["mean_step_s"] > 0 and s["n_requests"] > 0
