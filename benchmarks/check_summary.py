@@ -1,0 +1,117 @@
+"""CI perf-regression gate over BENCH_summary.json.
+
+Compares a freshly generated ``benchmarks.run --quick`` summary against
+the committed snapshot and fails (exit 1) on regressions beyond per-key
+tolerances:
+
+  * attainment-like keys (fractions in [0, 1]) may not DROP by more than
+    ``ATTAINMENT_DROP`` (2 points) — rises are always fine;
+  * latency/step-time keys (``*_s`` suffixes) may not REGRESS (grow) by
+    more than ``LATENCY_REGRESS`` (25%) — speedups are always fine;
+  * counters/config keys (``n_requests``, ``ref_rate``, ``schema_version``)
+    must match exactly: a changed request count means the quick sweep
+    itself changed, which is a snapshot refresh, not noise.
+
+A key present in the snapshot but missing from the fresh run (or vice
+versa) is an error — the snapshot must be regenerated in the same PR that
+changes the summary layout (ROADMAP "CI perf gate" documents the
+legitimate-refresh workflow).
+
+Usage:
+    python benchmarks/check_summary.py BENCH_fresh.json [BENCH_summary.json]
+
+Exit 0 = within tolerances (per-key report on stdout), 1 = regression or
+schema mismatch, 2 = unreadable/invalid input.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+ATTAINMENT_DROP = 0.02       # absolute points a fraction may fall
+LATENCY_REGRESS = 0.25       # relative growth a *_s latency may show
+
+# keys outside both heuristics: identity must hold exactly
+EXACT_KEYS = {"schema_version", "ref_rate", "n_requests", "generator"}
+
+
+def classify(key: str, value) -> str:
+    """'exact' | 'latency' | 'attainment' | 'info'."""
+    if key in EXACT_KEYS:
+        return "exact"
+    if key.endswith("_s"):
+        return "latency"
+    if isinstance(value, (int, float)) and 0.0 <= float(value) <= 1.0:
+        return "attainment"
+    return "info"
+
+
+def check(fresh: dict, snapshot: dict) -> list[str]:
+    """Per-key verdict lines; lines starting with 'FAIL' gate the build."""
+    lines = []
+    missing = sorted(set(snapshot) - set(fresh))
+    extra = sorted(set(fresh) - set(snapshot))
+    for k in missing:
+        lines.append(f"FAIL {k}: in snapshot but missing from fresh run "
+                     "(regenerate the committed BENCH_summary.json)")
+    for k in extra:
+        lines.append(f"FAIL {k}: new key absent from snapshot "
+                     "(regenerate the committed BENCH_summary.json)")
+    for k in sorted(set(snapshot) & set(fresh)):
+        old, new = snapshot[k], fresh[k]
+        kind = classify(k, old)
+        if kind == "exact":
+            verdict = "ok" if old == new else "FAIL"
+            lines.append(f"{verdict} {k}: {old!r} -> {new!r} (must match)")
+        elif kind == "latency":
+            limit = old * (1.0 + LATENCY_REGRESS)
+            verdict = "ok" if new <= limit else "FAIL"
+            lines.append(f"{verdict} {k}: {old:g}s -> {new:g}s "
+                         f"(limit {limit:g}s, +{LATENCY_REGRESS:.0%})")
+        elif kind == "attainment":
+            limit = old - ATTAINMENT_DROP
+            verdict = "ok" if new >= limit else "FAIL"
+            lines.append(f"{verdict} {k}: {old:g} -> {new:g} "
+                         f"(floor {limit:g}, -{ATTAINMENT_DROP:g} pts)")
+        else:
+            lines.append(f"ok {k}: {old!r} -> {new!r} (informational)")
+    return lines
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if not 1 <= len(argv) <= 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    fresh_path = argv[0]
+    snap_path = argv[1] if len(argv) == 2 else "BENCH_summary.json"
+    loaded = {}
+    for label, path in (("fresh", fresh_path), ("snapshot", snap_path)):
+        try:
+            with open(path) as f:
+                loaded[label] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: cannot read {label} summary {path}: {e}",
+                  file=sys.stderr)
+            return 2
+    for label, d in loaded.items():
+        if not isinstance(d, dict) or "schema_version" not in d:
+            print(f"error: {label} summary carries no schema_version "
+                  f"(not a benchmarks.run summary?)", file=sys.stderr)
+            return 2
+    lines = check(loaded["fresh"], loaded["snapshot"])
+    for line in lines:
+        print(line)
+    failures = [ln for ln in lines if ln.startswith("FAIL")]
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs {snap_path}. If this "
+              "change intentionally moves the headline numbers, regenerate "
+              "the snapshot (PYTHONPATH=src python -m benchmarks.run "
+              "--quick) and commit it in the same PR.")
+        return 1
+    print(f"\nall {len(lines)} keys within tolerance vs {snap_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

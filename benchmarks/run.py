@@ -16,7 +16,8 @@ import json
 import sys
 import time
 
-SUMMARY_SCHEMA_VERSION = 1
+SUMMARY_SCHEMA_VERSION = 2   # v2: fig_tiered headline keys (tiered KV +
+                             # prefix reuse); additive over v1
 REF_RATE = 2.0
 
 
@@ -63,6 +64,13 @@ def build_summary(results: dict[str, list[dict]],
             summary["interference_blind_attainment"] = row["mean_gamma_blind"]
             summary["interference_aware_attainment"] = row["mean_gamma_aware"]
             summary["interference_gamma_abs_err"] = row["mean_gamma_abs_err"]
+    for row in results.get("fig_tiered", []):
+        if row.get("config") == "summary":
+            summary["tiered_evict_ttft_attainment"] = \
+                row["evict_ttft_attainment"]
+            summary["tiered_prefix_ttft_attainment"] = \
+                row["tiered_prefix_ttft_attainment"]
+            summary["tiered_prefix_hit_rate"] = row["prefix_hit_rate"]
     m, mean_step = _canonical_run(ref_rate)
     summary.update(
         ttft_p90_s=round(m.ttft_p90, 4),
@@ -86,8 +94,8 @@ def main(argv=None) -> None:
                             fig5_worker_allocation, fig8_slo_attainment,
                             fig9_latency, fig10_queueing, fig11_cdf,
                             fig_hetero, fig_interference, fig_migration,
-                            fig_multitenant, predictor_noise, roofline,
-                            scale)
+                            fig_multitenant, fig_tiered, predictor_noise,
+                            roofline, scale)
     benches = {
         "fig3": fig3_workload.main,
         "fig4": fig4_queue_vs_interference.main,
@@ -103,6 +111,8 @@ def main(argv=None) -> None:
         "fig_multitenant": (lambda: fig_multitenant.main(
             rates=(2.0,), duration=60.0, ref_rate=2.0))
         if args.quick else fig_multitenant.main,
+        "fig_tiered": (lambda: fig_tiered.main(duration=60.0))
+        if args.quick else fig_tiered.main,
         "fig_hetero": (lambda: fig_hetero.main(seeds=(7, 11)))
         if args.quick else fig_hetero.main,
         "fig_interference": (lambda: fig_interference.main(

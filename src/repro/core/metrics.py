@@ -63,6 +63,15 @@ class ServeMetrics:
     # slo_attainment when every request shares one class)
     per_class: dict = dataclasses.field(default_factory=dict)
     weighted_attainment: float = float("nan")
+    # tiered KV + prefix reuse (all zero when neither feature is on)
+    kv_offloads: int = 0           # decode KV spills to the host-DRAM tier
+    kv_restores: int = 0           # spills pulled back into HBM
+    pages_offloaded: int = 0
+    pages_restored: int = 0
+    pages_reprefilled: int = 0     # pages lost to evict + full re-prefill
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_rate: float = 0.0   # hits / lookups (0 when no lookups)
 
     def row(self) -> dict:
         return {k: getattr(self, k) for k in (
@@ -70,7 +79,9 @@ class ServeMetrics:
             "tpot_attainment", "ttft_avg", "ttft_p90", "tpot_avg",
             "tpot_p90", "queue_avg", "queue_p90", "blocked_time_avg",
             "migrations", "restarts", "preemptions", "migration_wait_avg",
-            "weighted_attainment")}
+            "weighted_attainment", "kv_offloads", "kv_restores",
+            "pages_offloaded", "pages_restored", "pages_reprefilled",
+            "prefix_lookups", "prefix_hits", "prefix_hit_rate")}
 
     def per_class_rows(self) -> dict:
         """{class_name: flat metric dict} — the JSON-facing projection."""
@@ -98,7 +109,8 @@ def _class_metrics(name: str, weight: float,
 
 def compute_metrics(requests: Iterable[Request],
                     queue_times: Optional[dict] = None,
-                    blocked_times: Optional[dict] = None) -> ServeMetrics:
+                    blocked_times: Optional[dict] = None,
+                    counters: Optional[dict] = None) -> ServeMetrics:
     reqs = list(requests)
     fin = [r for r in reqs if r.phase == Phase.FINISHED]
     by_class: dict[str, list[Request]] = {}
@@ -143,7 +155,20 @@ def compute_metrics(requests: Iterable[Request],
         migration_wait_avg=float(np.mean(waits)) if waits else 0.0,
         per_class=per_class,
         weighted_attainment=weighted,
+        **_tier_counters(counters or {}),
     )
+
+
+def _tier_counters(counters: dict) -> dict:
+    """Aggregate worker-level tiered-KV/prefix counters (scheduler-supplied;
+    the prefix hit *rate* is derived here so callers pass raw counts only)."""
+    keys = ("kv_offloads", "kv_restores", "pages_offloaded",
+            "pages_restored", "pages_reprefilled", "prefix_lookups",
+            "prefix_hits")
+    out = {k: int(counters.get(k, 0)) for k in keys}
+    lookups = out["prefix_lookups"]
+    out["prefix_hit_rate"] = out["prefix_hits"] / lookups if lookups else 0.0
+    return out
 
 
 def cdf(xs: Sequence[float], n_points: int = 50):

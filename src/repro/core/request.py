@@ -20,6 +20,7 @@ class Phase(enum.Enum):
     MIGRATING = "migrating"
     QUEUED_DECODE = "queued_decode"
     DECODING = "decoding"
+    OFFLOADED = "offloaded"     # KV parked in the host-DRAM tier
     FINISHED = "finished"
     FAILED = "failed"
 
@@ -69,6 +70,14 @@ class Request:
     preemptions: int = 0                  # KV evictions (watermark/pool)
     prior_tokens: int = 0                 # tokens streamed before KV loss
     stall_start: Optional[float] = None   # stream stalled (KV lost) at
+    # --- tiered KV + prefix reuse ------------------------------------------
+    offloads: int = 0                     # KV spills to the host-DRAM tier
+    restores: int = 0                     # KV pulls back from the host tier
+    prefix_key: Optional[int] = None      # shared-prompt identity (workload)
+    prefix_len: int = 0                   # leading tokens covered by the key
+    cached_prefix: int = 0                # tokens borrowed from a worker's
+                                          # prefix cache at current placement
+    prefix_hits: int = 0                  # lifetime prefix-cache hits
 
     # ------------------------------------------------------------------ SLO
     @property
@@ -174,6 +183,8 @@ class Request:
         self.prefill_start = None
         self.phase = Phase.QUEUED_PREFILL
         self.worker = None
+        self.cached_prefix = 0   # any borrowed prefix ref was released by
+                                 # the worker before this reset
         if now is not None and self.prior_tokens > 0 \
                 and self.stall_start is None:
             self.stall_start = now           # mid-stream: stall clock runs

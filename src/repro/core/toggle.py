@@ -62,6 +62,14 @@ class WorkerView:
     total_pages: int = 0                    # 0 = worker has no page pool
     free_pages: int = 0
     page_size: int = 16
+    # host-DRAM tier (tiered KV): 0 pages = tier disabled, every tier-aware
+    # branch below degenerates to the legacy evict-only decision
+    host_total_pages: int = 0
+    host_free_pages: int = 0
+    # prefix cache: {prefix_key: cached tokens} resident on this worker +
+    # the cache's EWMA hit-rate estimate (dispatch-score signal)
+    cached_prefixes: dict = dataclasses.field(default_factory=dict)
+    prefix_hit_ewma: float = 0.0
     alive: bool = True
     # hardware — relative throughput of this worker's HardwareSpec
     # (fastest worker in the cluster = 1.0; see repro.perf.relative_speeds).
@@ -173,22 +181,51 @@ class MultiplexingToggle:
                 hi = mid - 1
         return lo
 
+    # ----------------------------------------------------------- helpers
+    def _cached_span(self, w: WorkerView, req: Request) -> int:
+        """Tokens of ``req``'s prompt already resident in ``w``'s prefix
+        cache — prefill there runs (and is priced on) only the uncached
+        suffix. Capped at prompt_len - 1: one token always prefills (the
+        first-token forward pass)."""
+        if req.prefix_key is None or not w.cached_prefixes:
+            return 0
+        span = w.cached_prefixes.get(req.prefix_key, 0)
+        return max(0, min(span, req.prefix_len, req.prompt_len - 1))
+
+    def _tier_relief(self, w: WorkerView, req: Request,
+                     need_tokens: float) -> bool:
+        """HBM memory checks failed — admit anyway iff the host-DRAM tier
+        can absorb a displaced resident decode AND pulling it back is
+        predicted to cost less than the slack the batch has banked
+        (``Predictor.predict_restore``: wire time + re-prefill residue).
+        Without a tier (or an empty batch) this is False and the legacy
+        evict-only admission decision stands."""
+        if w.host_total_pages <= 0 or w.decode_batch <= 0:
+            return False
+        need_pages = w.pages_for(self._kv_need_tokens(need_tokens))
+        if need_pages > w.host_free_pages:
+            return False
+        typical_ctx = int(w.decode_sum_ctx / w.decode_batch)
+        stall = self.predictor.predict_restore(typical_ctx, wid=w.wid)
+        return stall * self.cfg.slack_safety <= max(w.min_tpot_slack, 0.0)
+
     # ----------------------------------------------------------- Path ②
     def _multiplex_ok(self, w: WorkerView, req: Request) -> bool:
-        """§IV-B / §IV-C admission: slack, decode-iter guard, HBM."""
+        """§IV-B / §IV-C admission: slack, decode-iter guard, HBM (with
+        host-tier relief when offload+restore beats rejection)."""
         cfg = self.cfg
         if w.role != Role.MULTIPLEX or not w.alive:
             return False
-        if w.hbm_util > cfg.hbm_admission:
-            return False
-        footprint = req.prompt_len + req.remaining_output
-        if (w.kv_used_tokens + footprint
-                > cfg.hbm_watermark * w.kv_capacity_tokens):
-            return False
+        footprint = (req.prompt_len - self._cached_span(w, req)
+                     + req.remaining_output)
         # page-granular headroom: block rounding + fragmentation can exhaust
         # allocatable pages well before the token counter says so
-        if not w.page_headroom_for(self._kv_need_tokens(footprint),
-                                   cfg.hbm_watermark):
+        mem_ok = (w.hbm_util <= cfg.hbm_admission
+                  and w.kv_used_tokens + footprint
+                  <= cfg.hbm_watermark * w.kv_capacity_tokens
+                  and w.page_headroom_for(self._kv_need_tokens(footprint),
+                                          cfg.hbm_watermark))
+        if not mem_ok and not self._tier_relief(w, req, footprint):
             return False
         chunk = min(self.chunk_for(w, req.slo.tpot), req.remaining_prefill
                     or req.prompt_len)
@@ -225,14 +262,18 @@ class MultiplexingToggle:
                                               wid=w.wid)
 
     def _prefill_ok(self, w: WorkerView, req: Request, now: float) -> bool:
-        t_exec = self.predictor.predict_prefill(req.prompt_len, wid=w.wid)
+        suffix = req.prompt_len - self._cached_span(w, req)
+        t_exec = self.predictor.predict_prefill(suffix, wid=w.wid)
         t_queue = self._prefill_queue_time(w)
         return t_queue + t_exec <= req.ttft_deadline_slack(now)
 
     # ---------------------------------------------------------- dispatch
     def _predict_ttft_on_prefill(self, w: WorkerView, req: Request) -> float:
+        # prefill is priced on the UNCACHED suffix: workers already holding
+        # the request's prefix predict a shorter TTFT and win dispatch
+        suffix = req.prompt_len - self._cached_span(w, req)
         return self._prefill_queue_time(w) \
-            + self.predictor.predict_prefill(req.prompt_len, wid=w.wid)
+            + self.predictor.predict_prefill(suffix, wid=w.wid)
 
     def _predict_ttft_on_multiplex(self, w: WorkerView, req: Request) -> float:
         """Chunked-prefill completion on an M worker: each chunk is admitted
@@ -252,7 +293,8 @@ class MultiplexingToggle:
         catchup = t_chunk / margin * base        # iterations to re-bank
         rate = chunk / (t_chunk + catchup)
         queue = w.queued_prefill_tokens / max(rate, 1.0)
-        return queue + req.prompt_len / max(rate, 1.0)
+        suffix = req.prompt_len - self._cached_span(w, req)
+        return queue + suffix / max(rate, 1.0)
 
     def dispatch_prefill(self, req: Request, now: float) -> Optional[int]:
         """Choose the worker minimising predicted TTFT among SLO-admissible

@@ -25,8 +25,15 @@ batch:ttft=10,tpot=0.5,frac=0.4"
 (``ttft``/``tpot`` in seconds, or ``scale=K`` for K x the light-load
 latency per §V-A; ``frac`` splits the arrival rate, default equal;
 ``weight`` enters the weighted attainment). The JSON object then carries a
-``per_class`` block and ``weighted_attainment``; ``schema_version`` is 2
-since those fields (and the v1 aggregate-only layout) changed.
+``per_class`` block and ``weighted_attainment``.
+
+``schema_version`` history: 2 added the per_class block +
+weighted_attainment (breaking the v1 aggregate-only layout); 3 added the
+tiered-KV / prefix-reuse counters (kv_offloads, kv_restores,
+pages_offloaded, pages_restored, pages_reprefilled, prefix_lookups,
+prefix_hits, prefix_hit_rate — all zero unless ``--host-kv-gb`` /
+``--prefix-cache`` arm the features). v3 is additive over v2: every v2
+key keeps its meaning.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm-20b \
@@ -41,7 +48,7 @@ import argparse
 import json
 from typing import Optional, Sequence
 
-METRICS_SCHEMA_VERSION = 2     # v2: per_class block + weighted_attainment
+METRICS_SCHEMA_VERSION = 3     # v3: tiered-KV + prefix-reuse counters
 
 
 def parse_slo_classes(spec: str) -> list[dict]:
@@ -178,6 +185,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="KV block granularity in tokens")
     ap.add_argument("--no-transfer-engine", action="store_true",
                     help="legacy fixed-delay migrations (no link contention)")
+    ap.add_argument("--host-kv-gb", type=float, default=0.0, metavar="GB",
+                    help="per-worker host-DRAM KV tier: watermark victims "
+                         "offload over the host DMA link instead of evict + "
+                         "full re-prefill when the predictor prices restore "
+                         "cheaper (default 0 = seed behaviour)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="per-worker cross-request prefix cache: requests "
+                         "sharing a workload-tagged system prompt skip the "
+                         "cached span of prefill")
     ap.add_argument("--online-predictor", action="store_true",
                     help="EWMA-correct the §IV-C predictor from observed "
                          "iteration durations (wall-clock in --mode real)")
@@ -209,6 +225,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     if args.recalibrate_every is not None and args.recalibrate_every < 1:
         ap.error("--recalibrate-every must be >= 1 iteration "
                  "(omit the flag to disable online recalibration)")
+    if args.host_kv_gb < 0:
+        ap.error("--host-kv-gb must be >= 0 (0 disables the host tier)")
 
     from repro.configs import get_config, get_smoke
     from repro.serving.costmodel import WorkerSpec
@@ -252,7 +270,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         ici_links=args.ici_links, page_size=args.page_size,
         online_predictor=args.online_predictor,
         recalibrate_every=args.recalibrate_every,
-        role_rebalance=False if args.no_rebalance else "auto")
+        role_rebalance=False if args.no_rebalance else "auto",
+        host_kv_gb=args.host_kv_gb, prefix_cache=args.prefix_cache)
     # one workload-source selection for both feeds: each leaf names the
     # (materialised, streaming) pair so --backend trace-replay can never
     # diverge from the default path on *which* workload runs

@@ -158,6 +158,12 @@ class OnlinePredictor(Predictor):
                           wid: Optional[int] = None) -> float:
         return self.base.predict_migration(ctx_tokens, wid=wid)
 
+    def predict_restore(self, ctx_tokens: int, residue_tokens: int = 0,
+                        wid: Optional[int] = None) -> float:
+        # wire-dominated like migration: no EWMA correction layer (yet)
+        return self.base.predict_restore(ctx_tokens, residue_tokens,
+                                         wid=wid)
+
     def predict_interference(self, n_decode: int, sum_ctx: float,
                              prefill_tokens: int, ctx_offset: float = 0.0,
                              wid: Optional[int] = None) -> float:

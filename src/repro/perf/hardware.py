@@ -106,6 +106,12 @@ class HardwareSpec:
     bw_eff: float = 0.8
     t_fixed: float = 0.003            # per-iteration dispatch overhead (s)
     migration_latency: float = 0.001  # per-migration fixed cost (s)
+    # Host-DRAM tier link (tiered KV offload/restore): aggregate DMA
+    # bandwidth between one worker's HBM and host memory, PCIe-class —
+    # far below ICI, which is exactly why restore cost must be priced
+    # before choosing offload over re-prefill.
+    host_bw: float = 32e9             # bytes/s per worker, each direction
+    host_latency: float = 0.0005      # per-offload/restore fixed cost (s)
     # §IV interference: decode tokens co-batched with prefill chunks pay a
     # contention penalty (the mixed iteration is NOT the sum of its parts —
     # it is worse). A scalar γ (0.0 = the legacy purely-additive roofline,

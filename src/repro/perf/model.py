@@ -359,6 +359,35 @@ class CostModel:
         bw = hw.ici_bw * hw.ici_links
         return hw.migration_latency + self.kv_transfer_bytes(ctx_tokens) / bw
 
+    # ---------------------------------------------------------- tiered KV
+    def host_capacity_pages(self, host_bytes: float) -> int:
+        """Pages of KV a ``host_bytes``-sized host-DRAM tier holds for this
+        model (same page arithmetic as the HBM pool; constant-state
+        families count states via their token-equivalent grant)."""
+        if host_bytes <= 0:
+            return 0
+        if self.spec.kv_bytes_per_token <= 0:
+            per = max(self.spec.state_bytes, 1.0)
+            tokens = int(host_bytes / per) * STATE_TOKEN_EQUIV
+        else:
+            tokens = int(host_bytes / self.spec.kv_bytes_per_token)
+        return max(0, tokens // self.page_size)
+
+    def restore_time(self, ctx_tokens: int, residue_tokens: int = 0) -> float:
+        """Uncontended lower bound on pulling an offloaded request's KV
+        back from the host tier: host-link wire time plus the prefill cost
+        of any ``residue_tokens`` not captured by the offload (tokens
+        generated after the snapshot that must be re-prefilled). The
+        contended wire path lives in serving/transfer.py; the offload
+        direction costs the same (symmetric host link)."""
+        hw = self.worker.hw
+        if hw.host_bw <= 0:
+            return float("inf")
+        t = hw.host_latency + self.kv_transfer_bytes(ctx_tokens) / hw.host_bw
+        if residue_tokens > 0:
+            t += self.prefill_time(residue_tokens, ctx_offset=ctx_tokens)
+        return t
+
 
 def canonical_iteration_time(cost: IterationCostModel) -> float:
     """One canonical mixed iteration (decode batch of 8 at ctx 2048 each,

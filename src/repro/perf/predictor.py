@@ -53,6 +53,15 @@ class Predictor:
         so interference-blind predictors keep legacy decision parity."""
         return 0.0
 
+    def predict_restore(self, ctx_tokens: int, residue_tokens: int = 0,
+                        wid: Optional[int] = None) -> float:
+        """Tiered-KV restore cost: wire time to pull an offloaded request's
+        KV back over the host link plus any re-prefill residue. The engine
+        offloads instead of evicting only when this beats re-prefilling the
+        whole context; the default inf means 'no tier knowledge — never
+        prefer offload', keeping tier-blind predictors safe."""
+        return float("inf")
+
 
 @dataclasses.dataclass
 class AnalyticalPredictor(Predictor):
@@ -76,6 +85,11 @@ class AnalyticalPredictor(Predictor):
                              wid: Optional[int] = None) -> float:
         return self.cost.interference_penalty(
             n_decode, sum_ctx, prefill_tokens, ctx_offset) * self.safety
+
+    def predict_restore(self, ctx_tokens: int, residue_tokens: int = 0,
+                        wid: Optional[int] = None) -> float:
+        return self.cost.restore_time(ctx_tokens, residue_tokens) \
+            * self.safety
 
 
 class BiasedPredictor(AnalyticalPredictor):
@@ -144,6 +158,15 @@ class ClusterPredictor(Predictor):
             return 0.0
         return penalty(n_decode, sum_ctx, prefill_tokens, ctx_offset) \
             * self.safety
+
+    def predict_restore(self, ctx_tokens: int, residue_tokens: int = 0,
+                        wid: Optional[int] = None) -> float:
+        # IterationCostModel does not require restore_time; tier-blind
+        # models keep the base's 'never prefer offload' answer
+        restore = getattr(self._cost(wid), "restore_time", None)
+        if restore is None:
+            return float("inf")
+        return restore(ctx_tokens, residue_tokens) * self.safety
 
 
 class ProfiledPredictor(Predictor):

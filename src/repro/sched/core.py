@@ -15,6 +15,8 @@ Event kinds (payloads):
   iter_done       (wid, IterationPlan, duration)
   migration_done  (dst_wid, Request, started_at, src_wid)
   transfer_tick   transfer-engine version stamp
+  offload_done    (wid, Request)        KV landed in the host-DRAM tier
+  restore_done    (wid, Request)        KV pulled back into HBM
   fail            (wid, recover_after | None)
   recover         wid
   add_worker      Worker
@@ -30,7 +32,7 @@ from repro.core.request import Phase, Request
 from repro.sched.backend import CostModelBackend, ExecutionBackend
 from repro.sched.rebalance import RoleRebalancer
 from repro.serving.engine import IterationPlan, Worker, _slack_key
-from repro.serving.transfer import LinkSpec
+from repro.serving.transfer import LinkSpec, host_node
 
 
 class ClusterScheduler:
@@ -51,6 +53,9 @@ class ClusterScheduler:
             for w in workers:
                 transfer.add_worker(
                     w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
+                if w.pages.host_total_pages > 0:
+                    transfer.add_host(
+                        w.wid, LinkSpec.from_host_hardware(w.cost.worker.hw))
         self.rebalancer = rebalancer
         self.global_queue: list[Request] = []
         self.requests: list[Request] = []
@@ -73,10 +78,22 @@ class ClusterScheduler:
 
     def metrics(self) -> ServeMetrics:
         qt, bt = {}, {}
+        counters = {"prefix_lookups": 0, "prefix_hits": 0,
+                    "kv_offloads": 0, "kv_restores": 0,
+                    "pages_offloaded": 0, "pages_restored": 0,
+                    "pages_reprefilled": 0}
         for w in self.workers.values():
             qt.update(w.queue_times)
             bt.update(w.blocked_time)
-        return compute_metrics(self.requests, qt, bt)
+            counters["kv_offloads"] += w.offload_count
+            counters["kv_restores"] += w.restore_count
+            counters["pages_offloaded"] += w.pages_offloaded
+            counters["pages_restored"] += w.pages_restored
+            counters["pages_reprefilled"] += w.pages_reprefilled
+            if w.prefix_cache is not None:
+                counters["prefix_lookups"] += w.prefix_cache.lookups
+                counters["prefix_hits"] += w.prefix_cache.hits
+        return compute_metrics(self.requests, qt, bt, counters=counters)
 
     # --------------------------------------------------------------- events
     def _on_arrival(self, now: float, req: Request) -> None:
@@ -145,6 +162,11 @@ class ClusterScheduler:
         for req in w.drain_preempted():
             self.backend.on_finish(req)      # execution state restarts too
             self._try_dispatch(req, now)
+        # watermark offloads spill to the host tier over the DMA link;
+        # freed HBM may in turn let a parked request come back
+        for req in w.drain_offload_started():
+            self._start_offload(w, req, now)
+        self._maybe_restore(w, now)
         self._drain_global_queue(now)
         self._kick(wid, now)
         self._arm_rebalance(now)
@@ -172,18 +194,84 @@ class ClusterScheduler:
                             payload=(target, req, now, src.wid))
         self._schedule_transfer_tick(now)
 
+    # ------------------------------------------------- tiered KV (host DRAM)
+    def _start_offload(self, w: Worker, req: Request, now: float) -> None:
+        """Push a watermark victim's KV pages over the host DMA link. The
+        pages were already moved to the host tier in the accountant (HBM is
+        freed immediately — that is the point of the spill); the flow models
+        the wire time before the copy is *restorable*."""
+        if self.decisions is not None:
+            self.decisions.append(("offload", req.rid, w.wid))
+        if self.transfer is None:
+            delay = w.cost.restore_time(req.context_len)
+            self._defer("offload_done", now + delay, (w.wid, req))
+            return
+        nbytes = w.cost.kv_transfer_bytes(req.context_len)
+        self.transfer.start(w.wid, host_node(w.wid), nbytes, now,
+                            payload=("offload", w.wid, req))
+        self._schedule_transfer_tick(now)
+
+    def _on_offload_done(self, now: float, payload) -> None:
+        wid, req = payload
+        w = self.workers.get(wid)
+        if w is None or not w.view.alive:
+            return          # fail() already restarted the request
+        if w.offloading.get(req.rid) is not req:
+            return          # stale (worker failed and recovered meanwhile)
+        w.offload_landed(req)
+        self._maybe_restore(w, now)
+
+    def _maybe_restore(self, w: Worker, now: float) -> None:
+        """Pull parked requests back into HBM while they fit below the
+        watermark (FIFO over the parked set — oldest spill returns first)."""
+        if not w.view.alive:
+            return
+        while True:
+            req = w.next_restorable()
+            if req is None or not w.begin_restore(req, now):
+                return
+            if self.decisions is not None:
+                self.decisions.append(("restore", req.rid, w.wid))
+            if self.transfer is None:
+                delay = w.cost.restore_time(req.context_len)
+                self._defer("restore_done", now + delay, (w.wid, req))
+                continue
+            nbytes = w.cost.kv_transfer_bytes(req.context_len)
+            self.transfer.start(host_node(w.wid), w.wid, nbytes, now,
+                                payload=("restore", w.wid, req))
+            self._schedule_transfer_tick(now)
+
+    def _on_restore_done(self, now: float, payload) -> None:
+        wid, req = payload
+        w = self.workers.get(wid)
+        if w is None or not w.view.alive:
+            return          # fail() already restarted the request
+        if w.finish_restore(req, now):
+            self._kick(wid, now)
+
     # -------------------------------------------------- contended transfers
     def _schedule_transfer_tick(self, now: float) -> None:
         t = self.transfer.next_completion()
         if t is not None:
             self._defer("transfer_tick", max(t, now), self.transfer.version)
 
+    @staticmethod
+    def _flow_event(flow) -> tuple[str, object]:
+        """Map a completed flow to its event. Host-tier flows carry
+        string-tagged payloads ("offload"|"restore", wid, req); migration
+        flows keep the legacy 4-tuple (target, req, started, src_wid)."""
+        p = flow.payload
+        if isinstance(p, tuple) and p and p[0] in ("offload", "restore"):
+            return f"{p[0]}_done", p[1:]
+        return "migration_done", p
+
     def _on_transfer_tick(self, now: float, version) -> None:
         if version != self.transfer.version:
             return                           # rates changed since scheduling
         for flow in self.transfer.pop_completed(now):
             latency = self.transfer.delivery_latency(flow.src)
-            self._defer("migration_done", now + latency, flow.payload)
+            kind, payload = self._flow_event(flow)
+            self._defer(kind, now + latency, payload)
         self._schedule_transfer_tick(now)
 
     def _on_migration_done(self, now: float, payload) -> None:
@@ -218,8 +306,14 @@ class ClusterScheduler:
         lost = w.fail(now)
         self.policy.on_worker_failure(wid)
         if self.transfer is not None:
-            # KV in flight to OR from the dead worker is lost: restart
-            for flow in self.transfer.drop_flows_touching(wid, now):
+            # KV in flight to OR from the dead worker is lost: restart.
+            # Host-tier flows (tagged payloads) touch the worker's own host
+            # node; their requests were already restarted by w.fail().
+            dropped = self.transfer.drop_flows_touching(wid, now)
+            dropped += self.transfer.drop_flows_touching(host_node(wid), now)
+            for flow in dropped:
+                if self._flow_event(flow)[0] != "migration_done":
+                    continue
                 _, req, started, _src = flow.payload
                 req.migration_wait += now - started
                 req.restarts += 1
@@ -250,6 +344,9 @@ class ClusterScheduler:
         if self.transfer is not None:
             self.transfer.add_worker(
                 w.wid, LinkSpec.from_hardware(w.cost.worker.hw))
+            if w.pages.host_total_pages > 0:
+                self.transfer.add_host(
+                    w.wid, LinkSpec.from_host_hardware(w.cost.worker.hw))
         self.policy.workers[w.wid] = w.view
         if getattr(self.policy, "toggle", None) is not None:
             self.policy.toggle.workers[w.wid] = w.view

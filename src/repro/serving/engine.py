@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import math
 
@@ -19,7 +19,7 @@ from repro.core.policies import BatchRule, Policy
 from repro.core.request import Phase, Request
 from repro.core.toggle import Role, WorkerView
 from repro.perf import CostModel
-from repro.serving.kvcache import PageAccountant
+from repro.serving.kvcache import PageAccountant, PrefixIndex
 
 
 def _slack_key(now: float):
@@ -54,25 +54,42 @@ class IterationPlan:
 class Worker:
     def __init__(self, wid: int, cost: CostModel, role: Role = Role.MULTIPLEX,
                  queue_discipline: str = "fcfs",
-                 kv_preempt_watermark: float = 0.98):
+                 kv_preempt_watermark: float = 0.98,
+                 host_pages: int = 0,
+                 prefix_cache: Optional[PrefixIndex] = None,
+                 offload_gate: Optional[Callable[[Request], bool]] = None):
         self.wid = wid
         self.cost = cost
         self.queue_discipline = queue_discipline   # fcfs | edf
         # page-granular HBM accounting: admission and growth gate on real
         # allocatable pages; crossing the watermark evicts decodes (which
-        # pay a re-prefill on readmission)
-        self.pages = PageAccountant(cost.kv_capacity_pages(), cost.page_size)
+        # pay a re-prefill on readmission) — unless a host-DRAM tier
+        # (``host_pages`` > 0) can absorb the spill and the ``offload_gate``
+        # (predictor-priced: restore beats re-prefill) approves
+        self.pages = PageAccountant(cost.kv_capacity_pages(), cost.page_size,
+                                    host_pages=host_pages)
         self.kv_preempt_watermark = kv_preempt_watermark
+        self.prefix_cache = prefix_cache
+        self.offload_gate = offload_gate
         self.view = WorkerView(
             wid=wid, role=role,
             kv_capacity_tokens=float(max(cost.kv_capacity_tokens(), 1)),
             total_pages=self.pages.total_pages,
             free_pages=self.pages.total_pages,
             page_size=self.pages.page_size,
+            host_total_pages=self.pages.host_total_pages,
+            host_free_pages=self.pages.host_total_pages,
         )
         self.prefill_queue: deque[Request] = deque()
         self.decode_running: list[Request] = []
         self.preempted: list[Request] = []       # drained by the simulator
+        # tiered-KV lifecycle (scheduler drains/advances these):
+        # offload_started -> engine starts the worker->host flow;
+        # offloading (wire) -> offloaded (parked) -> restoring (wire back)
+        self.offload_started: list[Request] = []
+        self.offloading: dict[int, Request] = {}
+        self.offloaded: dict[int, Request] = {}
+        self.restoring: dict[int, Request] = {}
         self.busy = False
         # metrics
         self.blocked_time: dict[int, float] = {}
@@ -84,6 +101,11 @@ class Worker:
         # interval to every blocked request — see complete_iteration)
         self.interference_time = 0.0
         self.preemption_count = 0
+        self.offload_count = 0
+        self.restore_count = 0
+        self.pages_offloaded = 0
+        self.pages_restored = 0
+        self.pages_reprefilled = 0
 
     # ------------------------------------------------------------- admission
     def admit_prefill(self, req: Request, now: float) -> None:
@@ -101,9 +123,10 @@ class Worker:
         """Admit a request whose KV just arrived over the links. False when
         the page pool cannot hold the migrated context (caller restarts the
         request elsewhere — the re-prefill cost of a failed placement)."""
-        if not self.pages.reserve(req.rid, self._page_need(req.context_len)):
+        if not self.pages.reserve(req.rid, self._page_need(req.context_len,
+                                                           req.cached_prefix)):
             return False
-        self.view.kv_used_tokens += self.cost.state_tokens(req.context_len)
+        self.view.kv_used_tokens += self._own_state(req, req.context_len)
         self.admit_decode(req, now)
         return True
 
@@ -200,14 +223,17 @@ class Worker:
         for r in plan.decode_reqs:
             if r.phase != Phase.DECODING or r not in self.decode_running:
                 continue
-            need = self._page_need(r.context_len)
+            need = self._page_need(r.context_len, r.cached_prefix)
             while not self.pages.reserve(r.rid, need):
+                if self._evict_prefix_lru():
+                    continue       # unreferenced cached prefixes go first
                 if not self._preempt_one(now, keep=r):
                     self._preempt(r, now)      # nobody else to evict
                     break
-        while (self.pages.utilization > self.kv_preempt_watermark
-               and len(self.decode_running) > 1):
-            if not self._preempt_one(now):
+        while self.pages.utilization > self.kv_preempt_watermark:
+            if self._evict_prefix_lru():
+                continue
+            if len(self.decode_running) <= 1 or not self._preempt_one(now):
                 break
         # decode requests stalled behind an exclusive prefill count as blocked
         if plan.exclusive_prefill:
@@ -228,6 +254,12 @@ class Worker:
                 self.view.kv_used_tokens += \
                     self.cost.state_tokens(req.context_len) \
                     - self.cost.state_tokens(req.prompt_len)
+                if (self.prefix_cache is not None
+                        and req.prefix_key is not None
+                        and req.cached_prefix == 0):
+                    # first bearer of this shared prompt on this worker:
+                    # retain a copy of the prefix span for later arrivals
+                    self._cache_prefix(req)
                 if req.remaining_output == 0:
                     req.phase = Phase.FINISHED
                     req.finish_time = now
@@ -240,10 +272,14 @@ class Worker:
         return finished_prefills
 
     def release(self, req: Request) -> None:
-        """Free KV held by a finished/migrated request."""
+        """Free KV held by a finished/migrated request (both tiers), and
+        return any borrowed prefix-cache reference."""
         self.view.kv_used_tokens = max(
-            0.0, self.view.kv_used_tokens - self.cost.state_tokens(req.context_len))
+            0.0, self.view.kv_used_tokens - self._own_state(req, req.context_len))
         self.pages.release(req.rid)
+        if req.cached_prefix > 0 and self.prefix_cache is not None:
+            self.prefix_cache.unref(req.prefix_key)
+            req.cached_prefix = 0
         if req in self.decode_running:
             self.decode_running.remove(req)
         self._refresh_view()
@@ -254,16 +290,22 @@ class Worker:
         context (the §IV-B eviction cost) wherever dispatch next places it."""
         req.preemptions += 1
         self.preemption_count += 1
+        self.pages_reprefilled += self.pages.held_pages(req.rid)
         self.release(req)
         req.reset_for_reprefill(now)
         self.preempted.append(req)
 
     def _preempt_one(self, now: float, keep: Optional[Request] = None) -> bool:
-        """Evict the most recently admitted decode (least sunk prefill work,
-        vLLM-style LIFO recomputation). Returns False when there is no
-        eligible victim."""
+        """Displace the most recently admitted decode (least sunk prefill
+        work, vLLM-style LIFO recomputation). Prefers *offloading* its
+        pages to the host-DRAM tier (restore later, no re-prefill) when the
+        tier has room and the offload gate prices restore below re-prefill;
+        falls back to eviction. Returns False when there is no eligible
+        victim."""
         for victim in reversed(self.decode_running):
             if victim is not keep:
+                if self._try_offload(victim, now):
+                    return True
                 self._preempt(victim, now)
                 return True
         return False
@@ -272,15 +314,124 @@ class Worker:
         out, self.preempted = self.preempted, []
         return out
 
+    # ------------------------------------------------------------- tiered KV
+    def _try_offload(self, victim: Request, now: float) -> bool:
+        """Move ``victim``'s KV accounting to the host tier instead of
+        discarding it. The scheduler drains ``offload_started`` and puts
+        the bytes on the host link."""
+        if (self.offload_gate is None or self.pages.host_total_pages <= 0
+                or not self.pages.can_offload(victim.rid)
+                or not self.offload_gate(victim)):
+            return False
+        moved = self.pages.offload(victim.rid)
+        if moved <= 0:
+            return False
+        victim.offloads += 1
+        self.offload_count += 1
+        self.pages_offloaded += moved
+        victim.phase = Phase.OFFLOADED
+        if victim.stall_start is None:
+            victim.stall_start = now    # stream stalls until restore lands
+        self.view.kv_used_tokens = max(
+            0.0,
+            self.view.kv_used_tokens - self._own_state(victim,
+                                                       victim.context_len))
+        # a borrowed prefix ref stays held across the park: the cached span
+        # must still be resident when the restore lands
+        self.decode_running.remove(victim)
+        self.offloading[victim.rid] = victim
+        self.offload_started.append(victim)
+        return True
+
+    def drain_offload_started(self) -> list[Request]:
+        out, self.offload_started = self.offload_started, []
+        return out
+
+    def offload_landed(self, req: Request) -> None:
+        """The worker->host flow completed; the request is restore-eligible."""
+        if self.offloading.pop(req.rid, None) is not None:
+            self.offloaded[req.rid] = req
+
+    def next_restorable(self) -> Optional[Request]:
+        """Oldest parked request whose pages fit back in HBM without
+        pushing utilization past the preempt watermark (restoring must not
+        immediately re-trigger the preemption it was meant to avoid)."""
+        for rid, req in self.offloaded.items():
+            pages = self.pages.host_held_pages(rid)
+            would = (self.pages.used_pages + pages) \
+                / max(self.pages.total_pages, 1)
+            if pages <= self.pages.free_pages \
+                    and would <= self.kv_preempt_watermark:
+                return req
+        return None
+
+    def begin_restore(self, req: Request, now: float) -> bool:
+        """Reserve the HBM destination and mark the restore in flight."""
+        if req.rid not in self.offloaded or not self.pages.can_restore(req.rid):
+            return False
+        self.pages.restore(req.rid)
+        del self.offloaded[req.rid]
+        self.restoring[req.rid] = req
+        self._refresh_view()
+        return True
+
+    def finish_restore(self, req: Request, now: float) -> bool:
+        """Restore flow landed: rejoin the decode batch. The whole parked
+        interval (offload wire + host dwell + restore wire) is inter-token
+        latency the user saw — charged like migration wait."""
+        if self.restoring.pop(req.rid, None) is None:
+            return False               # stale completion (failure raced it)
+        self.restore_count += 1
+        self.pages_restored += self.pages.held_pages(req.rid)
+        self.view.kv_used_tokens += self._own_state(req, req.context_len)
+        req.restores += 1
+        if req.stall_start is not None:
+            gap = now - req.stall_start
+            req.decode_time += gap
+            req.tpot_slack -= gap
+            req.stall_start = None
+        self.admit_decode(req, now)
+        return True
+
     # ------------------------------------------------------------- internals
-    def _page_need(self, ctx_tokens: int) -> int:
-        return int(math.ceil(self.cost.state_tokens(ctx_tokens)))
+    def _page_need(self, ctx_tokens: int, cached: int = 0) -> int:
+        """Token-footprint the request's OWN reservation must cover: its
+        full context minus any span borrowed from the prefix cache (whose
+        pages are pinned under the cache entry's pseudo rid)."""
+        st = self.cost.state_tokens(ctx_tokens)
+        if cached > 0:
+            st -= self.cost.state_tokens(cached)
+        return int(math.ceil(max(st, 0.0)))
+
+    def _own_state(self, req: Request, ctx_tokens: int) -> float:
+        """``state_tokens`` charged to ``req`` itself (excludes the
+        borrowed prefix span — the cache entry carries those tokens)."""
+        st = self.cost.state_tokens(ctx_tokens)
+        if req.cached_prefix > 0:
+            st -= self.cost.state_tokens(req.cached_prefix)
+        return max(st, 0.0)
+
+    def _prefix_span(self, req: Request) -> int:
+        """Tokens of ``req``'s prompt a prefill start here would borrow
+        from the cache (0 without a hit). Capped at prompt_len - 1 so at
+        least one prefill token always runs — the forward pass that emits
+        the first token. Pure peek: no counters, no LRU touch."""
+        if req.cached_prefix > 0:
+            return req.cached_prefix
+        if self.prefix_cache is None or req.prefix_key is None:
+            return 0
+        span = self.prefix_cache.peek(req.prefix_key)
+        return max(0, min(span, req.prefix_len, req.prompt_len - 1))
 
     def _kv_room_for(self, req: Request) -> bool:
-        if not self.pages.can_fit(self._page_need(req.prompt_len),
+        span = self._prefix_span(req)
+        if not self.pages.can_fit(self._page_need(req.prompt_len, span),
                                   rid=req.rid):
             return False
-        return self.view.kv_used_tokens + self.cost.state_tokens(req.prompt_len) \
+        st = self.cost.state_tokens(req.prompt_len)
+        if span > 0:
+            st -= self.cost.state_tokens(span)
+        return self.view.kv_used_tokens + max(st, 0.0) \
             <= self.view.kv_capacity_tokens
 
     def _has_admissible_prefill(self) -> bool:
@@ -344,15 +495,64 @@ class Worker:
         """Reserve prompt KV and mark the prefill started. False (state
         untouched) when the page pool can't hold the prompt — unreachable
         behind the ``_kv_room_for`` admission gate, kept as the contract
-        for callers."""
+        for callers. A prefix-cache hit borrows the cached span: only the
+        uncached suffix reserves pages and runs prefill compute."""
         if req.prefill_start is None:
+            span = self._prefix_span(req)
             if not self.pages.reserve(req.rid,
-                                      self._page_need(req.prompt_len)):
+                                      self._page_need(req.prompt_len, span)):
                 return False
+            if self.prefix_cache is not None and req.prefix_key is not None:
+                entry = self.prefix_cache.lookup(req.prefix_key)  # counted
+                if entry is not None and span > 0:
+                    entry.refs += 1
+                    req.cached_prefix = span
+                    req.prefilled_tokens = span
+                    req.prefix_hits += 1
             req.prefill_start = now
             req.phase = Phase.PREFILLING
             self.queue_times[req.rid] = now - req.arrival_time
-            self.view.kv_used_tokens += self.cost.state_tokens(req.prompt_len)
+            self.view.kv_used_tokens += self._own_state(req, req.prompt_len)
+        return True
+
+    def _cache_prefix(self, req: Request) -> None:
+        """Retain a copy of ``req``'s just-prefilled shared-prompt span for
+        later arrivals. Skipped when the key is already cached, the span
+        exceeds the cache's page budget, or HBM lacks free pages (the
+        cache must never squeeze live decodes to populate itself)."""
+        if self.cost.spec.kv_bytes_per_token <= 0:
+            return          # constant-state families have no prefix KV
+        if self.prefix_cache.peek(req.prefix_key) > 0:
+            return          # another bearer landed first
+        tokens = min(req.prefix_len, req.prompt_len)
+        if tokens <= 0:
+            return
+        need = self._page_need(tokens)
+        pages = self.pages.pages_for(need)
+        if pages <= 0 or pages > self.prefix_cache.max_pages:
+            return
+        while self.prefix_cache.used_pages + pages > self.prefix_cache.max_pages:
+            if not self._evict_prefix_lru():
+                return
+        if self.pages.free_pages < pages:
+            return
+        entry = self.prefix_cache.insert(req.prefix_key, tokens, pages)
+        self.pages.reserve(entry.rid, need)
+        self.view.kv_used_tokens += self.cost.state_tokens(tokens)
+
+    def _evict_prefix_lru(self) -> bool:
+        """Drop the LRU *unreferenced* cache entry and free its pages.
+        False when the cache is off, empty, or every entry has a live
+        borrower (those pages must not dangle under a mid-decode)."""
+        if self.prefix_cache is None:
+            return False
+        entry = self.prefix_cache.evict_lru()
+        if entry is None:
+            return False
+        self.pages.release(entry.rid)
+        self.view.kv_used_tokens = max(
+            0.0, self.view.kv_used_tokens
+            - self.cost.state_tokens(entry.tokens))
         return True
 
     def _refresh_view(self) -> None:
@@ -377,15 +577,32 @@ class Worker:
         v.total_pages = self.pages.total_pages
         v.free_pages = self.pages.free_pages
         v.page_size = self.pages.page_size
+        v.host_total_pages = self.pages.host_total_pages
+        v.host_free_pages = self.pages.host_free_pages
+        if self.prefix_cache is not None:
+            v.cached_prefixes = self.prefix_cache.spans()
+            v.prefix_hit_ewma = self.prefix_cache.hit_ewma
 
     # -------------------------------------------------------------- failure
     def fail(self, now: Optional[float] = None) -> list[Request]:
-        """Worker dies: every held request must restart elsewhere."""
+        """Worker dies: every held request must restart elsewhere — the
+        host tier dies with its worker (it hangs off the same host), so
+        parked/in-flight offloads are lost too, accounted exactly once
+        (``offload_started`` entries are already in ``offloading``)."""
         self.view.alive = False
-        lost = list(self.prefill_queue) + list(self.decode_running)
+        lost = list(self.prefill_queue) + list(self.decode_running) \
+            + list(self.offloading.values()) + list(self.offloaded.values()) \
+            + list(self.restoring.values())
         self.prefill_queue.clear()
         self.decode_running.clear()
+        self.offload_started.clear()
+        self.offloading.clear()
+        self.offloaded.clear()
+        self.restoring.clear()
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()   # entries died with the HBM
         self.view.kv_used_tokens = 0.0
+        self.view.cached_prefixes = {}
         self.pages.reset()
         for r in lost:
             r.restarts += 1

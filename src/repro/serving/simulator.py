@@ -176,6 +176,9 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   rebalance_config: Optional[RebalanceConfig] = None,
                   record_decisions: bool = False,
                   backend: Optional[ExecutionBackend] = None,
+                  host_kv_gb: float = 0.0,
+                  prefix_cache: bool = False,
+                  prefix_cache_frac: float = 0.2,
                   **policy_kw):
     """Convenience: workers + cost models + policy + scheduler, wired.
 
@@ -207,10 +210,20 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
     ``role_rebalance``: "auto" (windowed-attainment rebalancing for
     policies that own a toggle, i.e. tropical), True (same, but a
     ValueError on policies without role lifecycle), or False (keep the
-    legacy dispatch-count ``review_roles`` side effect)."""
+    legacy dispatch-count ``review_roles`` side effect).
+
+    ``host_kv_gb``: per-worker host-DRAM KV tier (GB). 0 (default) keeps
+    the seed's evict + full re-prefill watermark behaviour bit-exact;
+    > 0 lets watermark victims offload over the host DMA link when the
+    predictor prices restore below re-prefill.
+    ``prefix_cache=True`` arms a per-worker cross-request prefix cache
+    (LRU over at most ``prefix_cache_frac`` of HBM pages): requests
+    sharing a workload-tagged system prompt skip the cached span of
+    prefill."""
     from repro.core.policies import make_policy
     from repro.perf import (AnalyticalPredictor, ClusterPredictor, CostModel,
                             OnlinePredictor, WorkerSpec, relative_speeds)
+    from repro.serving.kvcache import PrefixIndex
     from repro.serving.transfer import TransferEngine
 
     worker_spec = worker_spec or WorkerSpec()
@@ -232,7 +245,13 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                  for i, s in enumerate(specs)}
     else:
         costs = {i: cost for i in range(n_workers)}
-    workers = [Worker(i, costs[i]) for i in range(n_workers)]
+    workers = [
+        Worker(i, costs[i],
+               host_pages=costs[i].host_capacity_pages(host_kv_gb * 1e9),
+               prefix_cache=PrefixIndex(max_pages=int(
+                   prefix_cache_frac * costs[i].kv_capacity_pages()))
+               if prefix_cache else None)
+        for i in range(n_workers)]
     for wid, speed in relative_speeds(costs).items():
         workers[wid].view.speed = speed
     if predictor is None:
@@ -242,6 +261,16 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
         per_worker = heterogeneous if per_worker_calibration == "auto" \
             else bool(per_worker_calibration)
         predictor = OnlinePredictor(predictor, per_worker=per_worker)
+    if host_kv_gb > 0:
+        # offload only when the predictor prices restore (wire + residue)
+        # below a full re-prefill of the same context — the ISSUE's tier
+        # decision rule, evaluated per victim at preemption time
+        def _gate(req, _p=predictor, _w=None):
+            return _p.predict_restore(req.context_len, wid=_w) \
+                < _p.predict_prefill(req.context_len, wid=_w)
+        for w in workers:
+            w.offload_gate = \
+                lambda req, _p=predictor, _w=w.wid: _gate(req, _p, _w)
     policy = make_policy(policy_name, [w.view for w in workers], predictor,
                          **policy_kw)
     transfer = TransferEngine() if use_transfer_engine else None

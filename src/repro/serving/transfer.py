@@ -12,6 +12,13 @@ argument rests on this cost being real).
 The engine is clock-agnostic: the simulator advances it to event times and
 asks for the next flow completion; real deployments would swap it for a
 NIXL/UCX-style transfer layer with the same interface.
+
+Tiered-KV offload/restore traffic rides the same engine: each worker with
+a host-DRAM tier registers a *host node* (``host_node(wid)``, a negative
+id that can never collide with a worker id) whose ``LinkSpec`` models the
+worker's DMA path to host memory. Offloads are worker→host flows, restores
+host→worker — so KV spills contend with migrations for the worker's real
+link capacity instead of teleporting.
 """
 from __future__ import annotations
 
@@ -19,6 +26,12 @@ import dataclasses
 import itertools
 import math
 from typing import Optional
+
+
+def host_node(wid: int) -> int:
+    """Pseudo node id for worker ``wid``'s host-DRAM endpoint. Worker ids
+    are non-negative, so the mapping is collision-free and invertible."""
+    return -(int(wid) + 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +45,13 @@ class LinkSpec:
     def from_hardware(cls, hw) -> "LinkSpec":
         bw = hw.ici_bw * hw.ici_links
         return cls(egress_bw=bw, ingress_bw=bw, latency=hw.migration_latency)
+
+    @classmethod
+    def from_host_hardware(cls, hw) -> "LinkSpec":
+        """Host-DRAM DMA endpoint (PCIe/DMA, not ICI): symmetric, slower,
+        with its own setup latency."""
+        return cls(egress_bw=hw.host_bw, ingress_bw=hw.host_bw,
+                   latency=hw.host_latency)
 
 
 @dataclasses.dataclass
@@ -74,6 +94,13 @@ class TransferEngine:
     # ------------------------------------------------------------- topology
     def add_worker(self, wid: int, spec: Optional[LinkSpec] = None) -> None:
         self.links.setdefault(wid, spec or self.default_spec)
+
+    def add_host(self, wid: int, spec: LinkSpec) -> int:
+        """Register worker ``wid``'s host-DRAM endpoint; returns its node
+        id. Offload flows are ``start(wid, host_node(wid), ...)``."""
+        node = host_node(wid)
+        self.links[node] = spec
+        return node
 
     def _spec(self, wid: int) -> LinkSpec:
         return self.links.get(wid, self.default_spec)

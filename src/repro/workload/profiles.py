@@ -44,9 +44,16 @@ class TraceProfile:
     # burstiness: per-window Gamma(shape k) rate modulation; k->inf = Poisson
     burst_window: float = 10.0      # seconds
     burst_shape: float = 2.0
+    # shared system prompts: requests whose prompt exceeds ``prefix_tokens``
+    # carry one of ``shared_prefixes`` prefix identities (uniformly drawn
+    # from a dedicated RNG substream, so tagging never perturbs the
+    # length/arrival streams). 0 = no sharing; the tags are inert unless a
+    # worker-side prefix cache is armed.
+    shared_prefixes: int = 0
+    prefix_tokens: int = 0
 
 
-MOONCAKE = TraceProfile()
+MOONCAKE = TraceProfile(shared_prefixes=8, prefix_tokens=512)
 STEADY = TraceProfile(name="steady", tail_frac=0.05, burst_shape=50.0)
 LONGCTX = TraceProfile(
     name="longctx", tail_frac=0.45, tail_median=24576.0, tail_sigma=0.5,
@@ -54,7 +61,10 @@ LONGCTX = TraceProfile(
 AGENTIC = TraceProfile(
     name="agentic", body_median=512.0, body_sigma=0.8, tail_frac=0.02,
     tail_median=4096.0, out_median=1024.0, out_sigma=0.9,
-    min_output=64, max_output=4096)
+    min_output=64, max_output=4096,
+    # agents re-enter with the same system prompt + tool schema: few
+    # identities, high re-use — the prefix-cache sweet spot
+    shared_prefixes=4, prefix_tokens=256)
 
 
 def sample_lengths(rng: np.random.Generator, n: int,

@@ -73,25 +73,44 @@ class Scenario:
         average arrival rate, split across components by ``rate_frac``.
         Each component draws from a substream keyed by its NAME (not its
         position), so adding/removing/reordering components never perturbs
-        the survivors' traffic."""
-        rows: list[tuple[float, int, int, SLOClass]] = []
+        the survivors' traffic. Profiles with ``shared_prefixes`` > 0 tag
+        eligible requests (prompt > ``prefix_tokens``) with a shared-prompt
+        identity from a *separate* RNG substream — arrival/length streams
+        are bit-identical with tagging on or off, and the tags themselves
+        are inert unless a worker-side prefix cache is armed."""
+        rows: list[tuple[float, int, int, SLOClass, Optional[int], int]] = []
         for comp in self.components:
             rng = np.random.default_rng(
                 [seed, zlib.crc32(comp.name.encode())])
             times = comp.arrivals.sample(rng, rate * comp.rate_frac,
                                          duration)
             inputs, outputs = sample_lengths(rng, len(times), comp.profile)
-            for t, pl, ol in zip(times, inputs, outputs):
+            prof = comp.profile
+            pkeys: list[Optional[int]] = [None] * len(times)
+            if prof.shared_prefixes > 0 and prof.prefix_tokens > 0:
+                prng = np.random.default_rng(
+                    [seed, zlib.crc32(comp.name.encode()),
+                     zlib.crc32(b"prefix")])
+                draws = prng.integers(prof.shared_prefixes, size=len(times))
+                # identities are globally unique per (component, slot):
+                # two components can never alias each other's prompts
+                pkeys = [
+                    zlib.crc32(f"{comp.name}:{int(k)}".encode())
+                    if int(pl) > prof.prefix_tokens else None
+                    for k, pl in zip(draws, inputs)]
+            for t, pl, ol, pkey in zip(times, inputs, outputs, pkeys):
                 if comp.slo is not None:
                     slo = comp.slo
                 else:
                     slo = dataclasses.replace(
                         derive_slos(cost_model, int(pl), *comp.slo_scale),
                         name=comp.name, weight=comp.weight)
-                rows.append((float(t), int(pl), int(ol), slo))
+                rows.append((float(t), int(pl), int(ol), slo, pkey,
+                             prof.prefix_tokens if pkey is not None else 0))
         rows.sort(key=lambda x: x[0])
         return [Request(rid=i, arrival_time=t, prompt_len=pl, output_len=ol,
-                        slo=slo) for i, (t, pl, ol, slo) in enumerate(rows)]
+                        slo=slo, prefix_key=pkey, prefix_len=plen)
+                for i, (t, pl, ol, slo, pkey, plen) in enumerate(rows)]
 
     def replay(self, rate: float, duration: float, cost_model,
                seed: int = 0) -> Iterator[tuple[float, Request]]:

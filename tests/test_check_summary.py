@@ -1,0 +1,97 @@
+"""CI perf gate (benchmarks/check_summary.py): tolerance classification,
+the demonstrated-failure path, and snapshot-layout mismatch handling."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_summary import (ATTAINMENT_DROP, LATENCY_REGRESS,
+                                      check, classify, main)
+
+SNAPSHOT = {
+    "schema_version": 2,
+    "ref_rate": 2.0,
+    "generator": "benchmarks.run --quick",
+    "n_requests": 80,
+    "slo_attainment": 0.976,
+    "weighted_attainment": 1.0,
+    "ttft_p90_s": 0.9635,
+    "mean_step_s": 0.01365,
+}
+
+
+def _fails(lines):
+    return [ln for ln in lines if ln.startswith("FAIL")]
+
+
+def test_classify_heuristics():
+    assert classify("schema_version", 2) == "exact"
+    assert classify("ttft_p90_s", 0.9) == "latency"
+    assert classify("slo_attainment", 0.97) == "attainment"
+    assert classify("goodput_ratio", 2.1) == "info"
+
+
+def test_identical_summaries_pass():
+    assert _fails(check(dict(SNAPSHOT), SNAPSHOT)) == []
+
+
+def test_attainment_drop_beyond_tolerance_fails():
+    fresh = dict(SNAPSHOT)
+    fresh["slo_attainment"] = SNAPSHOT["slo_attainment"] \
+        - ATTAINMENT_DROP - 0.01
+    fails = _fails(check(fresh, SNAPSHOT))
+    assert len(fails) == 1 and "slo_attainment" in fails[0]
+    # a drop inside tolerance (and any rise) passes
+    fresh["slo_attainment"] = SNAPSHOT["slo_attainment"] - 0.01
+    assert _fails(check(fresh, SNAPSHOT)) == []
+    fresh["slo_attainment"] = 1.0
+    assert _fails(check(fresh, SNAPSHOT)) == []
+
+
+def test_latency_regression_beyond_tolerance_fails():
+    fresh = dict(SNAPSHOT)
+    fresh["ttft_p90_s"] = SNAPSHOT["ttft_p90_s"] * (1 + LATENCY_REGRESS) * 1.1
+    fails = _fails(check(fresh, SNAPSHOT))
+    assert len(fails) == 1 and "ttft_p90_s" in fails[0]
+    # within tolerance / speedups pass
+    fresh["ttft_p90_s"] = SNAPSHOT["ttft_p90_s"] * 1.2
+    assert _fails(check(fresh, SNAPSHOT)) == []
+    fresh["ttft_p90_s"] = SNAPSHOT["ttft_p90_s"] * 0.5
+    assert _fails(check(fresh, SNAPSHOT)) == []
+
+
+def test_schema_and_layout_mismatches_fail():
+    fresh = dict(SNAPSHOT)
+    fresh["schema_version"] = SNAPSHOT["schema_version"] + 1
+    assert _fails(check(fresh, SNAPSHOT))
+    fresh = dict(SNAPSHOT)
+    del fresh["mean_step_s"]                      # key vanished
+    assert _fails(check(fresh, SNAPSHOT))
+    fresh = dict(SNAPSHOT)
+    fresh["brand_new_key"] = 1.0                  # key appeared
+    assert _fails(check(fresh, SNAPSHOT))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    """The blocking CI job's contract: 0 within tolerance, 1 on
+    regression, 2 on unreadable input — demonstrated end to end."""
+    snap = tmp_path / "snap.json"
+    snap.write_text(json.dumps(SNAPSHOT))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(SNAPSHOT))
+    assert main([str(good), str(snap)]) == 0
+
+    bad = tmp_path / "bad.json"
+    regressed = dict(SNAPSHOT, slo_attainment=0.90)   # -7.6 pts
+    bad.write_text(json.dumps(regressed))
+    assert main([str(bad), str(snap)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL slo_attainment" in out
+    assert "regenerate" in out.lower()
+
+    assert main([str(tmp_path / "missing.json"), str(snap)]) == 2
+    unversioned = tmp_path / "unversioned.json"
+    unversioned.write_text(json.dumps({"hello": 1}))
+    assert main([str(unversioned), str(snap)]) == 2
+    capsys.readouterr()

@@ -445,14 +445,20 @@ def test_bench_summary_schema():
                               "mean_gamma_aware": 0.99,
                               "mean_gamma_drift": 0.98,
                               "mean_gamma_abs_err": 0.01}],
+        "fig_tiered": [{"config": "summary", "evict_ttft_attainment": 0.957,
+                        "tiered_prefix_ttft_attainment": 0.996,
+                        "prefix_hit_rate": 0.958}],
     }
     s = build_summary(results)
-    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 1
+    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 2
     assert s["slo_attainment"] == 0.97
     assert s["weighted_attainment"] == 0.95
     assert s["hetero_per_worker_attainment"] == 0.76
     assert s["interference_aware_attainment"] == 0.99
     assert s["interference_blind_attainment"] == 0.98
     assert s["interference_gamma_abs_err"] == 0.01
+    assert s["tiered_evict_ttft_attainment"] == 0.957
+    assert s["tiered_prefix_ttft_attainment"] == 0.996
+    assert s["tiered_prefix_hit_rate"] == 0.958
     assert s["ttft_p90_s"] > 0 and s["tpot_p90_s"] > 0
     assert s["mean_step_s"] > 0 and s["n_requests"] > 0

@@ -1,0 +1,133 @@
+"""Cross-request prefix reuse: index semantics, borrow/evict safety,
+workload tagging determinism, end-to-end hit behaviour."""
+import copy
+import dataclasses
+
+from repro.configs import get_config
+from repro.perf import CostModel, WorkerSpec
+from repro.serving.kvcache import PrefixIndex
+from repro.serving.simulator import build_cluster
+from repro.workload import get_scenario
+from repro.workload.profiles import AGENTIC, MOONCAKE
+
+
+# ------------------------------------------------------------ PrefixIndex
+def test_index_lookup_counts_and_lru():
+    idx = PrefixIndex(max_pages=100)
+    idx.insert(11, tokens=256, pages=16)
+    idx.insert(22, tokens=128, pages=8)
+    assert idx.lookup(11) is not None
+    assert idx.lookup(99) is None
+    assert idx.lookups == 2 and idx.hits == 1
+    assert idx.hit_rate == 0.5
+    # peek never counts
+    assert idx.peek(22) == 128 and idx.lookups == 2
+    # 22 is now LRU (11 was touched by the counted lookup)
+    evicted = idx.evict_lru()
+    assert evicted.key == 22
+    assert idx.peek(22) == 0
+
+
+def test_index_never_evicts_borrowed_entry():
+    """Evicting a prefix some decode still borrows would dangle its pages
+    under a live request — refs > 0 entries must survive LRU pressure."""
+    idx = PrefixIndex(max_pages=100)
+    e = idx.insert(11, tokens=256, pages=16)
+    e.refs += 1                         # a borrower is mid-decode
+    idx.insert(22, tokens=128, pages=8)
+    idx.lookup(22)                      # 11 is strictly older AND colder
+    evicted = idx.evict_lru()
+    assert evicted is not None and evicted.key == 22    # skipped the borrowed
+    assert idx.evict_lru() is None      # only the borrowed entry remains
+    assert idx.peek(11) == 256
+    e.refs -= 1
+    assert idx.evict_lru().key == 11    # released -> evictable again
+
+
+def test_index_pseudo_rids_unique_and_negative():
+    idx = PrefixIndex(max_pages=100)
+    a = idx.insert(1, 64, 4)
+    b = idx.insert(2, 64, 4)
+    assert a.rid < 0 and b.rid < 0 and a.rid != b.rid
+
+
+def test_index_clear_resets_entries_not_counters():
+    idx = PrefixIndex(max_pages=100)
+    idx.insert(1, 64, 4)
+    idx.lookup(1)
+    idx.clear()
+    assert idx.peek(1) == 0 and idx.used_pages == 0
+    assert idx.lookups == 1             # lifetime stats survive HBM loss
+
+
+# ------------------------------------------------------- workload tagging
+def test_scenario_prefix_tagging_deterministic():
+    cm = CostModel(get_config("internlm-20b"), WorkerSpec(tp=8))
+    sc = get_scenario("agentic")
+    a = sc.generate(4.0, 30.0, cm, seed=7)
+    b = sc.generate(4.0, 30.0, cm, seed=7)
+    assert [(r.prefix_key, r.prefix_len) for r in a] \
+        == [(r.prefix_key, r.prefix_len) for r in b]
+    c = sc.generate(4.0, 30.0, cm, seed=8)
+    assert [r.prefix_key for r in a] != [r.prefix_key for r in c]
+    tagged = [r for r in a if r.prefix_key is not None]
+    assert tagged and all(r.prompt_len > r.prefix_len > 0 for r in tagged)
+    assert len({r.prefix_key for r in tagged}) <= AGENTIC.shared_prefixes
+
+
+def test_prefix_tagging_never_perturbs_length_streams():
+    """Arming shared prefixes must not shift arrival/length RNG draws:
+    the identity stream is a separate substream."""
+    cm = CostModel(get_config("internlm-20b"), WorkerSpec(tp=8))
+    sc = get_scenario("agentic")
+    untagged_prof = dataclasses.replace(AGENTIC, shared_prefixes=0,
+                                        prefix_tokens=0)
+    sc_off = dataclasses.replace(sc, components=tuple(
+        dataclasses.replace(comp, profile=untagged_prof)
+        for comp in sc.components))
+    a = sc.generate(4.0, 30.0, cm, seed=7)
+    b = sc_off.generate(4.0, 30.0, cm, seed=7)
+    assert [(r.arrival_time, r.prompt_len, r.output_len) for r in a] \
+        == [(r.arrival_time, r.prompt_len, r.output_len) for r in b]
+    assert all(r.prefix_key is None for r in b)
+
+
+def test_mooncake_and_agentic_profiles_carry_shared_prefixes():
+    assert MOONCAKE.shared_prefixes > 0 and MOONCAKE.prefix_tokens > 0
+    assert AGENTIC.shared_prefixes > 0 and AGENTIC.prefix_tokens > 0
+
+
+# ------------------------------------------------------------ end-to-end
+def _run(prefix_cache, seed=23, rate=6.0, duration=60.0):
+    spec = dataclasses.replace(WorkerSpec(tp=8), hw=dataclasses.replace(
+        WorkerSpec(tp=8).hw, hbm_bytes=WorkerSpec(tp=8).hw.hbm_bytes / 2))
+    cfg = get_config("internlm-20b")
+    cm = CostModel(cfg, spec)
+    trace = get_scenario("agentic").generate(rate, duration, cm, seed=seed)
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=spec,
+                           host_kv_gb=16.0, prefix_cache=prefix_cache,
+                           record_decisions=True)
+    sim.add_trace(copy.deepcopy(trace))
+    m = sim.run(until=duration * 10)
+    return m, sim
+
+
+def test_sim_prefix_hits_deterministic_and_positive():
+    m1, sim1 = _run(prefix_cache=True)
+    m2, sim2 = _run(prefix_cache=True)
+    assert m1.prefix_lookups > 0 and m1.prefix_hits > 0
+    assert 0.0 < m1.prefix_hit_rate <= 1.0
+    # same seed + scenario => identical hit sequence and decision trace
+    assert (m1.prefix_lookups, m1.prefix_hits) \
+        == (m2.prefix_lookups, m2.prefix_hits)
+    assert sim1.decisions == sim2.decisions
+    assert m1.n_finished == m1.n_total
+    # hits shorten real work: requests record their borrowed spans
+    assert sum(r.prefix_hits for r in sim1.requests) == m1.prefix_hits
+
+
+def test_sim_prefix_cache_off_is_inert():
+    m, sim = _run(prefix_cache=False)
+    assert m.prefix_lookups == 0 and m.prefix_hits == 0
+    assert m.prefix_hit_rate == 0.0
+    assert all(r.cached_prefix == 0 for r in sim.requests)

@@ -12,6 +12,9 @@ REQUIRED_KEYS = {
     "queue_avg", "queue_p90", "blocked_time_avg", "migrations", "restarts",
     "preemptions", "migration_wait_avg", "weighted_attainment",
     "per_class", "scenario",
+    # v3: tiered-KV + prefix-reuse counters
+    "kv_offloads", "kv_restores", "pages_offloaded", "pages_restored",
+    "pages_reprefilled", "prefix_lookups", "prefix_hits", "prefix_hit_rate",
 }
 
 
@@ -24,10 +27,14 @@ def test_serve_sim_json_schema(capsys):
     row = _run(["--seed", "1"])
     out = capsys.readouterr().out
     data = json.loads(out)          # stdout is exactly one JSON object
-    # v2: per_class block + weighted_attainment (multi-tenant SLO classes)
-    assert data["schema_version"] == serve.METRICS_SCHEMA_VERSION == 2
+    # v3: tiered-KV + prefix-reuse counters (additive over the v2
+    # per_class/weighted_attainment layout)
+    assert data["schema_version"] == serve.METRICS_SCHEMA_VERSION == 3
     assert REQUIRED_KEYS <= set(data)
     assert data["mode"] == "sim" and data["seed"] == 1
+    # both features default OFF: counters exist but must read zero
+    assert data["kv_offloads"] == 0 and data["prefix_lookups"] == 0
+    assert data["prefix_hit_rate"] == 0.0
     assert data["n_total"] > 0
     assert data["n_finished"] == data["n_total"]
     assert row["n_total"] == data["n_total"]

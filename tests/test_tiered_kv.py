@@ -1,0 +1,250 @@
+"""Two-tier KV hierarchy: accountant, restore pricing, offload lifecycle,
+and the fail-mid-offload exactly-once guarantee."""
+import copy
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.perf import AnalyticalPredictor, CostModel, Predictor, WorkerSpec
+from repro.serving.engine import Worker
+from repro.serving.kvcache import PageAccountant
+from repro.serving.simulator import build_cluster
+from repro.serving.transfer import LinkSpec, TransferEngine, host_node
+from repro.workload import get_scenario
+
+GB = 1e9
+
+
+def _cost(tp=8, hbm_frac=1.0):
+    spec = WorkerSpec(tp=tp)
+    if hbm_frac != 1.0:
+        spec = dataclasses.replace(spec, hw=dataclasses.replace(
+            spec.hw, hbm_bytes=spec.hw.hbm_bytes * hbm_frac))
+    return CostModel(get_config("internlm-20b"), spec)
+
+
+def _req(rid=1, prompt=1024, out=64):
+    return Request(rid=rid, arrival_time=0.0, prompt_len=prompt,
+                   output_len=out, slo=SLOSpec(ttft=5.0, tpot=0.5))
+
+
+# --------------------------------------------------------- PageAccountant
+def test_accountant_two_tier_roundtrip():
+    pa = PageAccountant(total_pages=10, page_size=16, host_pages=6)
+    assert pa.reserve(1, 64)             # 4 pages
+    assert pa.used_pages == 4 and pa.host_used_pages == 0
+    assert pa.can_offload(1)
+    assert pa.offload(1) == 4
+    assert pa.used_pages == 0 and pa.host_used_pages == 4
+    assert pa.host_free_pages == 2
+    assert pa.host_held_pages(1) == 4
+    assert pa.can_restore(1)
+    assert pa.restore(1) == 4
+    assert pa.used_pages == 4 and pa.host_used_pages == 0
+    # release clears whichever tier holds the pages
+    assert pa.offload(1) == 4
+    pa.release(1)
+    assert pa.used_pages == 0 and pa.host_used_pages == 0
+
+
+def test_accountant_offload_requires_host_room():
+    pa = PageAccountant(total_pages=10, page_size=16, host_pages=2)
+    assert pa.reserve(1, 64)             # 4 pages > 2 host pages
+    assert not pa.can_offload(1)
+    assert pa.offload(1) == 0            # refused, nothing moved
+    assert pa.used_pages == 4 and pa.host_used_pages == 0
+    # zero host tier: never offloadable
+    pa0 = PageAccountant(total_pages=10, page_size=16)
+    assert pa0.reserve(1, 32)
+    assert not pa0.can_offload(1)
+
+
+def test_accountant_restore_requires_hbm_room():
+    pa = PageAccountant(total_pages=4, page_size=16, host_pages=8)
+    assert pa.reserve(1, 64)
+    assert pa.offload(1) == 4
+    assert pa.reserve(2, 48)             # 3 of 4 HBM pages now taken
+    assert not pa.can_restore(1)
+    assert pa.restore(1) == 0
+    pa.release(2)
+    assert pa.can_restore(1) and pa.restore(1) == 4
+
+
+def test_accountant_reset_clears_both_tiers():
+    pa = PageAccountant(total_pages=10, page_size=16, host_pages=6)
+    pa.reserve(1, 64)
+    pa.offload(1)
+    pa.reserve(2, 32)
+    pa.reset()
+    assert pa.used_pages == 0 and pa.host_used_pages == 0
+    assert pa.held_pages(1) == 0 and pa.host_held_pages(1) == 0
+
+
+# --------------------------------------------------- restore-cost pricing
+def test_host_capacity_and_restore_time():
+    cm = _cost()
+    assert cm.host_capacity_pages(0.0) == 0
+    assert cm.host_capacity_pages(-1.0) == 0
+    pages = cm.host_capacity_pages(16 * GB)
+    assert pages > 0
+    # restore = host link latency + wire time; strictly cheaper than a
+    # full re-prefill for a long context (the reason the tier exists)
+    t = cm.restore_time(4096)
+    assert 0 < t < cm.prefill_time(4096)
+    # residue tokens append a suffix prefill at the restored offset
+    assert cm.restore_time(4096, residue_tokens=256) > t
+    # a zero-bandwidth host link can never restore
+    dead = CostModel(get_config("internlm-20b"), dataclasses.replace(
+        cm.worker, hw=dataclasses.replace(cm.worker.hw, host_bw=0.0)))
+    assert math.isinf(dead.restore_time(4096))
+
+
+def test_predictor_restore_hierarchy():
+    cm = _cost()
+    base = Predictor()
+    assert math.isinf(base.predict_restore(4096))   # no tier knowledge
+    ana = AnalyticalPredictor(cm, safety=1.2)
+    assert ana.predict_restore(4096) == pytest.approx(
+        cm.restore_time(4096) * 1.2)
+    assert ana.predict_restore(4096) < ana.predict_prefill(4096)
+
+
+# ------------------------------------------------- worker offload lifecycle
+def test_worker_offload_restore_lifecycle():
+    cm = _cost()
+    w = Worker(0, cm, host_pages=cm.host_capacity_pages(16 * GB),
+               offload_gate=lambda r: True)
+    req = _req(prompt=2048)
+    req.phase = Phase.DECODING
+    req.generated_tokens = 4
+    assert w.pages.reserve(req.rid, req.context_len)
+    w.decode_running.append(req)
+    w.view.kv_used_tokens = float(req.context_len)
+    held = w.pages.held_pages(req.rid)
+
+    assert w._try_offload(req, now=1.0)
+    assert req.phase == Phase.OFFLOADED and req.offloads == 1
+    assert req.stall_start == 1.0
+    assert req not in w.decode_running
+    assert w.pages.used_pages == 0 and w.pages.host_used_pages == held
+    assert w.drain_offload_started() == [req]
+    assert w.drain_offload_started() == []      # drained exactly once
+
+    w.offload_landed(req)
+    assert req.rid in w.offloaded and req.rid not in w.offloading
+    assert w.next_restorable() is req
+    assert w.begin_restore(req, now=2.0)
+    assert req.rid in w.restoring
+    assert w.pages.used_pages == held and w.pages.host_used_pages == 0
+    assert w.finish_restore(req, now=3.0)
+    assert req in w.decode_running and req.restores == 1
+    # the whole parked interval charged as inter-token latency
+    assert req.decode_time == pytest.approx(2.0)
+    assert req.stall_start is None
+
+
+def test_worker_fail_mid_offload_counts_pages_exactly_once():
+    """A worker dying with one request offload-in-flight and one landed
+    must hand each back for restart exactly once and zero both tiers."""
+    cm = _cost()
+    w = Worker(0, cm, host_pages=cm.host_capacity_pages(16 * GB),
+               offload_gate=lambda r: True)
+    a, b = _req(rid=1, prompt=2048), _req(rid=2, prompt=1024)
+    for r in (a, b):
+        r.phase = Phase.DECODING
+        r.generated_tokens = 2
+        assert w.pages.reserve(r.rid, r.context_len)
+        w.decode_running.append(r)
+    w.view.kv_used_tokens = float(a.context_len + b.context_len)
+    assert w._try_offload(a, 1.0) and w._try_offload(b, 1.0)
+    w.drain_offload_started()
+    w.offload_landed(a)                  # a landed; b still in flight
+    assert set(w.offloaded) == {1} and set(w.offloading) == {2}
+
+    lost = w.fail(2.0)
+    assert sorted(r.rid for r in lost) == [1, 2]        # each exactly once
+    assert len(lost) == len({id(r) for r in lost})
+    assert w.pages.used_pages == 0 and w.pages.host_used_pages == 0
+    assert w.offloading == {} and w.offloaded == {} and w.restoring == {}
+    assert w.drain_offload_started() == []
+    for r in lost:
+        assert r.phase == Phase.QUEUED_PREFILL          # reset for re-prefill
+
+
+def test_stale_restore_completion_after_fail_is_ignored():
+    cm = _cost()
+    w = Worker(0, cm, host_pages=cm.host_capacity_pages(16 * GB),
+               offload_gate=lambda r: True)
+    req = _req(prompt=2048)
+    req.phase = Phase.DECODING
+    assert w.pages.reserve(req.rid, req.context_len)
+    w.decode_running.append(req)
+    w.view.kv_used_tokens = float(req.context_len)
+    assert w._try_offload(req, 1.0)
+    w.drain_offload_started()
+    w.offload_landed(req)
+    assert w.begin_restore(req, 2.0)
+    w.fail(3.0)
+    w.view.alive = True
+    assert not w.finish_restore(req, 4.0)   # stale: failure already reset
+    assert w.restore_count == 0 and w.pages.used_pages == 0
+
+
+# ---------------------------------------------- transfer-engine host nodes
+def test_host_node_flows_drop_with_worker():
+    eng = TransferEngine()
+    eng.add_worker(0, LinkSpec(egress_bw=10 * GB, ingress_bw=10 * GB))
+    eng.add_worker(1, LinkSpec(egress_bw=10 * GB, ingress_bw=10 * GB))
+    hn = eng.add_host(0, LinkSpec(egress_bw=32 * GB, ingress_bw=32 * GB))
+    assert hn == host_node(0) == -1
+    eng.start(0, hn, 1 * GB, 0.0, payload=("offload", 0, "a"))
+    eng.start(hn, 0, 1 * GB, 0.0, payload=("restore", 0, "b"))
+    eng.start(0, 1, 1 * GB, 0.0, payload=("mig", "r", 0.0, 0))
+    # dropping the worker catches flows touching it AND its host node
+    dropped = eng.drop_flows_touching(0, 1e-3)
+    dropped += eng.drop_flows_touching(hn, 1e-3)
+    assert len(dropped) == 3
+    assert eng.next_completion() is None
+
+
+# -------------------------------------------------- end-to-end (scheduler)
+def _tiered_sim(host_kv_gb, duration=60.0, rate=6.0, **kw):
+    spec = dataclasses.replace(WorkerSpec(tp=8), hw=dataclasses.replace(
+        WorkerSpec(tp=8).hw, hbm_bytes=WorkerSpec(tp=8).hw.hbm_bytes / 2))
+    cfg = get_config("internlm-20b")
+    cm = CostModel(cfg, spec)
+    trace = get_scenario("agentic").generate(rate, duration, cm, seed=23)
+    sim, _ = build_cluster(cfg, "tropical", n_workers=2, worker_spec=spec,
+                           host_kv_gb=host_kv_gb, **kw)
+    sim.add_trace(copy.deepcopy(trace))
+    return sim, duration
+
+
+def test_sim_offloads_replace_evictions_under_pressure():
+    sim0, dur = _tiered_sim(host_kv_gb=0.0)
+    m0 = sim0.run(until=dur * 10)
+    sim1, dur = _tiered_sim(host_kv_gb=16.0)
+    m1 = sim1.run(until=dur * 10)
+    assert m0.preemptions > 0 and m0.kv_offloads == 0
+    assert m1.kv_offloads > 0 and m1.kv_restores == m1.kv_offloads
+    assert m1.preemptions < m0.preemptions
+    assert m1.n_finished == m1.n_total
+    # nothing left parked in either tier at the end of the run
+    for w in sim1.workers.values():
+        assert not w.offloading and not w.offloaded and not w.restoring
+        assert w.pages.host_used_pages == 0
+
+
+def test_sim_fail_during_tiered_run_accounts_once():
+    sim, dur = _tiered_sim(host_kv_gb=16.0)
+    sim.inject_failure(20.0, 0, recover_after=10.0)
+    m = sim.run(until=dur * 20)
+    assert m.n_finished == m.n_total
+    for w in sim.workers.values():
+        assert not w.offloading and not w.offloaded and not w.restoring
+        assert w.pages.host_used_pages == 0
+        # only prefix pseudo-rids (negative) may outlive the run
+        assert all(rid < 0 for rid in w.pages._pages)
