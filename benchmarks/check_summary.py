@@ -8,6 +8,8 @@ tolerances:
     ``ATTAINMENT_DROP`` (2 points) — rises are always fine;
   * latency/step-time keys (``*_s`` suffixes) may not REGRESS (grow) by
     more than ``LATENCY_REGRESS`` (25%) — speedups are always fine;
+  * throughput keys (``*_rps`` suffixes) may not DROP by more than
+    ``RPS_DROP`` (20%) — improvements always pass;
   * counters/config keys (``n_requests``, ``ref_rate``, ``schema_version``)
     must match exactly: a changed request count means the quick sweep
     itself changed, which is a snapshot refresh, not noise.
@@ -30,17 +32,23 @@ import sys
 
 ATTAINMENT_DROP = 0.02       # absolute points a fraction may fall
 LATENCY_REGRESS = 0.25       # relative growth a *_s latency may show
+RPS_DROP = 0.20              # relative fall a *_rps throughput may show
 
 # keys outside both heuristics: identity must hold exactly
 EXACT_KEYS = {"schema_version", "ref_rate", "n_requests", "generator"}
 
 
 def classify(key: str, value) -> str:
-    """'exact' | 'latency' | 'attainment' | 'info'."""
+    """'exact' | 'latency' | 'throughput' | 'attainment' | 'info'."""
     if key in EXACT_KEYS:
         return "exact"
     if key.endswith("_s"):
         return "latency"
+    # *_rps must classify before the [0, 1] heuristic: a slow enough sim
+    # could report a sub-1.0 requests-per-second figure, and gating that
+    # as attainment would invert the direction of the tolerance
+    if key.endswith("_rps"):
+        return "throughput"
     if isinstance(value, (int, float)) and 0.0 <= float(value) <= 1.0:
         return "attainment"
     return "info"
@@ -68,6 +76,11 @@ def check(fresh: dict, snapshot: dict) -> list[str]:
             verdict = "ok" if new <= limit else "FAIL"
             lines.append(f"{verdict} {k}: {old:g}s -> {new:g}s "
                          f"(limit {limit:g}s, +{LATENCY_REGRESS:.0%})")
+        elif kind == "throughput":
+            limit = old * (1.0 - RPS_DROP)
+            verdict = "ok" if new >= limit else "FAIL"
+            lines.append(f"{verdict} {k}: {old:g} -> {new:g} rps "
+                         f"(floor {limit:g}, -{RPS_DROP:.0%})")
         elif kind == "attainment":
             limit = old - ATTAINMENT_DROP
             verdict = "ok" if new >= limit else "FAIL"

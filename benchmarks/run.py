@@ -6,18 +6,45 @@ schema-versioned record of the headline numbers (weighted attainment at
 the reference rate, P90 TTFT/TPOT, mean step time) that the bench-smoke
 CI job uploads on every push, seeding the perf-trajectory history.
 
+``--profile`` wraps the whole sweep in ``cProfile`` and prints the top-25
+cumulative-time entries to stderr — the first stop when a bench tier gets
+slower.
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8]
-                                               [--summary PATH]
+                                               [--summary PATH] [--profile]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import sys
 import time
 
-SUMMARY_SCHEMA_VERSION = 2   # v2: fig_tiered headline keys (tiered KV +
-                             # prefix reuse); additive over v1
+
+@contextlib.contextmanager
+def maybe_profile(enabled: bool, top: int = 25):
+    """Optionally run the body under cProfile, reporting the ``top``
+    cumulative entries to stderr on exit (shared by run.py and serve.py)."""
+    if not enabled:
+        yield
+        return
+    import cProfile
+    import pstats
+    pr = cProfile.Profile()
+    pr.enable()
+    try:
+        yield
+    finally:
+        pr.disable()
+        stats = pstats.Stats(pr, stream=sys.stderr)
+        stats.sort_stats("cumulative")
+        print(f"# --profile: top {top} by cumulative time", file=sys.stderr)
+        stats.print_stats(top)
+
+SUMMARY_SCHEMA_VERSION = 3   # v3: sim_throughput_rps (vectorized-scheduler
+                             # scale tier); additive over v2 (fig_tiered
+                             # headline keys)
 REF_RATE = 2.0
 
 
@@ -71,6 +98,16 @@ def build_summary(results: dict[str, list[dict]],
             summary["tiered_prefix_ttft_attainment"] = \
                 row["tiered_prefix_ttft_attainment"]
             summary["tiered_prefix_hit_rate"] = row["prefix_hit_rate"]
+    # vectorized-scheduler throughput at the largest scale-tier size: the
+    # *_rps key class in check_summary.py gates drops > 20%
+    tp_rows = [r for r in results.get("scale", [])
+               if r.get("tier") == "throughput"
+               and r.get("mode") == "vectorized"]
+    if tp_rows:
+        best = max(tp_rows, key=lambda r: r["workers"])
+        summary["sim_throughput_rps"] = best["sim_throughput_rps"]
+        summary["sim_throughput_workers"] = best["workers"]
+        summary["sim_throughput_speedup"] = best["speedup_x"]
     m, mean_step = _canonical_run(ref_rate)
     summary.update(
         ttft_p90_s=round(m.ttft_p90, 4),
@@ -88,6 +125,9 @@ def main(argv=None) -> None:
     ap.add_argument("--summary", default=None, metavar="PATH",
                     help="write the BENCH_summary.json record here "
                          "(default: BENCH_summary.json when --quick)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile; print the top-25 "
+                         "cumulative-time entries to stderr")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig3_workload, fig4_queue_vs_interference,
@@ -118,26 +158,28 @@ def main(argv=None) -> None:
         "fig_interference": (lambda: fig_interference.main(
             rates=(2.0,), seeds=(11, 13)))
         if args.quick else fig_interference.main,
-        "scale": (lambda: scale.main(scales=[(4, 4.0), (16, 16.0)],
-                                     duration=60.0))
+        "scale": (lambda: scale.main(
+            scales=[(4, 4.0), (16, 16.0)], duration=60.0,
+            throughput_scales=scale.THROUGHPUT_SCALES_QUICK))
         if args.quick else scale.main,
         "predictor_noise": (lambda: predictor_noise.main(quick=True))
         if args.quick else predictor_noise.main,
         "roofline": roofline.main,
     }
     results: dict[str, list[dict]] = {}
-    for name, fn in benches.items():
-        if args.only and name != args.only:
-            continue
-        t0 = time.perf_counter()
-        try:
-            results[name] = fn() or []
-            print(f"# {name}: done in {time.perf_counter() - t0:.1f}s",
-                  file=sys.stderr)
-        except Exception as e:  # noqa: BLE001 — keep the suite running
-            print(f"# {name}: FAILED {type(e).__name__}: {e}",
-                  file=sys.stderr)
-            raise
+    with maybe_profile(args.profile):
+        for name, fn in benches.items():
+            if args.only and name != args.only:
+                continue
+            t0 = time.perf_counter()
+            try:
+                results[name] = fn() or []
+                print(f"# {name}: done in {time.perf_counter() - t0:.1f}s",
+                      file=sys.stderr)
+            except Exception as e:  # noqa: BLE001 — keep the suite running
+                print(f"# {name}: FAILED {type(e).__name__}: {e}",
+                      file=sys.stderr)
+                raise
 
     # an explicit --summary is always honoured (with --only the record
     # carries whatever that one bench produced plus the canonical-run

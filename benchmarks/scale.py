@@ -2,38 +2,64 @@
 scheduler must hold SLO attainment as workers and load scale together
 (64 workers x TP8 = 512 chips — one dry-run pod-pair worth of serving).
 
-Checks (a) attainment stays flat under proportional scaling (no
-centralised-scheduler collapse), (b) simulated-cluster throughput, (c)
-scheduler decision cost per request stays O(workers), and (d) the
-proportional role-rebalancer (ceil(deficit x workers) moves per review
-with two-window hysteresis, ``rebalance=proportional`` rows) keeps pace
-with breaches the legacy one-worker-per-review controller chases at
-100+-worker scale; its attainment must stay >= flat-minus-noise of the
-legacy rows.
+Two tiers:
+
+* **attainment** — checks (a) attainment stays flat under proportional
+  scaling (no centralised-scheduler collapse), (b) simulated-cluster
+  throughput, (c) scheduler decision cost per request stays O(workers),
+  and (d) the proportional role-rebalancer (``rebalance=proportional``
+  rows) keeps pace with the legacy one-worker-per-review controller; its
+  attainment must stay >= flat-minus-noise of the legacy rows.
+* **throughput** — simulated-requests-per-second of the vectorized
+  scheduler hot path against the scalar reference at 256+ workers, on a
+  dispatch-heavy workload (short outputs, so the O(workers) placement
+  decision dominates each request's cost — the regime the batched cost
+  evaluation exists for). The vectorized rows carry ``speedup_x`` vs the
+  scalar row at the same scale; the largest scale's vectorized
+  ``sim_throughput_rps`` is the number ``benchmarks.run --quick`` records
+  in ``BENCH_summary.json`` for the CI perf gate.
+
+The master trace for each (rate, duration, seed) is generated once and
+every run receives a cheap replay clone (``common.clone_trace``) — the
+per-policy regenerate + ``copy.deepcopy`` the original version of this
+sweep paid dominated its own wall clock at scale.
 
 Usage: PYTHONPATH=src python -m benchmarks.scale [--quick]
+                                                 [--throughput-only]
 """
 from __future__ import annotations
 
 import argparse
-import copy
 import time
 
-from benchmarks.common import MODEL, WORKER, cost_model, emit, make_trace
+from benchmarks.common import (MODEL, WORKER, clone_trace, cost_model, emit,
+                               fixed_slo, make_trace)
 from repro.configs import get_config
 from repro.sched.rebalance import RebalanceConfig
 from repro.serving.simulator import build_cluster
+from repro.workload.profiles import TraceProfile
+from repro.workload.scenario import generate_trace
 
 SCALES = [(4, 4.0), (16, 16.0), (64, 64.0)]
 DURATION = 120.0
 
+# throughput tier: (workers, rate, duration). The workload keeps outputs
+# short so dispatch — not decode iterations — dominates per-request cost.
+THROUGHPUT_SCALES = [(256, 256.0, 6.0), (1024, 1024.0, 4.0),
+                     (2048, 2048.0, 3.0)]
+THROUGHPUT_SCALES_QUICK = [(256, 256.0, 6.0), (1024, 1024.0, 4.0)]
+DISPATCH_HEAVY = TraceProfile(
+    name="dispatch-heavy", body_median=1024.0, body_sigma=0.8,
+    tail_frac=0.02, out_median=4.0, out_sigma=0.3,
+    min_output=2, max_output=8)
 
-def _run(cm, pol, n_workers, rate, duration, rebalance_config=None):
-    trace = make_trace(rate, duration, cm, seed=5)
+
+def _attainment_run(cm, pol, n_workers, trace, duration,
+                    rebalance_config=None):
     sim, _ = build_cluster(get_config(MODEL), pol, n_workers=n_workers,
                            worker_spec=WORKER,
                            rebalance_config=rebalance_config)
-    sim.add_trace(copy.deepcopy(trace))
+    sim.add_trace(clone_trace(trace))
     t0 = time.perf_counter()
     m = sim.run(until=duration * 6)
     wall = time.perf_counter() - t0
@@ -42,18 +68,21 @@ def _run(cm, pol, n_workers, rate, duration, rebalance_config=None):
     return m, wall, transitions
 
 
-def main(scales=SCALES, duration=DURATION) -> list[dict]:
+def attainment_tier(scales=SCALES, duration=DURATION) -> list[dict]:
     cm = cost_model()
     rows = []
     proportional = RebalanceConfig(confirm_windows=2, max_move_frac=0.25)
     for n_workers, rate in scales:
+        # one master trace per scale; every policy run replays a clone
+        trace = make_trace(rate, duration, cm, seed=5)
         for pol, rb_cfg, tag in (
                 ("tropical", None, "legacy"),
                 ("tropical++", None, "legacy"),
                 ("tropical", proportional, "proportional")):
-            m, wall, transitions = _run(cm, pol, n_workers, rate, duration,
-                                        rebalance_config=rb_cfg)
+            m, wall, transitions = _attainment_run(
+                cm, pol, n_workers, trace, duration, rebalance_config=rb_cfg)
             rows.append({
+                "tier": "attainment",
                 "policy": pol, "rebalance": tag,
                 "workers": n_workers, "rate": rate,
                 "chips": n_workers * WORKER.tp,
@@ -74,6 +103,59 @@ def main(scales=SCALES, duration=DURATION) -> list[dict]:
         prop = by[("proportional", n_workers)]["slo_attainment"]
         assert prop >= legacy - 0.02, \
             (n_workers, prop, legacy)
+    return rows
+
+
+def _throughput_run(trace, n_workers, vectorized):
+    sim, _ = build_cluster(get_config(MODEL), "tropical",
+                           n_workers=n_workers, worker_spec=WORKER,
+                           vectorized=vectorized)
+    sim.add_trace(clone_trace(trace))
+    t0 = time.perf_counter()
+    m = sim.run()
+    return m, time.perf_counter() - t0
+
+
+def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2) -> list[dict]:
+    """Vectorized-vs-scalar sim throughput. The vectorized measurement is
+    best-of-``repeats`` (it is the gated number and short enough to
+    repeat; the scalar baseline runs once). Both modes replay clones of
+    one master trace, so the decision streams — and therefore the
+    attainment columns — are identical by construction."""
+    cm = cost_model()
+    rows = []
+    for n_workers, rate, duration in scales:
+        trace = generate_trace(rate=rate, duration=duration, cost_model=cm,
+                               seed=5, profile=DISPATCH_HEAVY,
+                               fixed_slo=fixed_slo(cm))
+        walls = {}
+        for mode, vec in (("scalar", False), ("vectorized", True)):
+            n_runs = repeats if vec else 1
+            best = None
+            for _ in range(n_runs):
+                m, wall = _throughput_run(trace, n_workers, vec)
+                best = wall if best is None else min(best, wall)
+            walls[mode] = best
+            row = {
+                "tier": "throughput", "mode": mode,
+                "workers": n_workers, "rate": rate,
+                "requests": m.n_total,
+                "slo_attainment": round(m.slo_attainment, 3),
+                "sim_wall_s": round(best, 3),
+                "sim_throughput_rps": round(m.n_total / max(best, 1e-9), 1),
+            }
+            if mode == "vectorized":
+                row["speedup_x"] = round(walls["scalar"] / max(best, 1e-9),
+                                         2)
+            rows.append(row)
+    return rows
+
+
+def main(scales=SCALES, duration=DURATION,
+         throughput_scales=THROUGHPUT_SCALES,
+         throughput_only=False) -> list[dict]:
+    rows = [] if throughput_only else attainment_tier(scales, duration)
+    rows += throughput_tier(throughput_scales)
     emit("scale", rows)
     return rows
 
@@ -81,8 +163,13 @@ def main(scales=SCALES, duration=DURATION) -> list[dict]:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--throughput-only", action="store_true",
+                    help="skip the attainment sweep (CI scale-throughput "
+                         "tier)")
     a = ap.parse_args()
     if a.quick:
-        main(scales=[(4, 4.0), (16, 16.0)], duration=60.0)
+        main(scales=[(4, 4.0), (16, 16.0)], duration=60.0,
+             throughput_scales=THROUGHPUT_SCALES_QUICK,
+             throughput_only=a.throughput_only)
     else:
-        main()
+        main(throughput_only=a.throughput_only)

@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.predictor import Predictor
 from repro.core.request import Request
 from repro.core.toggle import MultiplexingToggle, Role, ToggleConfig, WorkerView
@@ -39,6 +41,8 @@ class Policy:
     toggle = None                 # policies owning a MultiplexingToggle set
                                   # this; the ClusterScheduler keys role
                                   # rebalancing and worker registration on it
+    vectorized = False            # build_cluster(vectorized=True) flips this
+                                  # (and the toggle's) to the batched paths
 
     def __init__(self, workers: Sequence[WorkerView], predictor: Predictor):
         self.workers = {w.wid: w for w in workers}
@@ -78,8 +82,15 @@ class Policy:
         # relative hardware speed: on a heterogeneous cluster the same
         # token backlog clears later on a straggler. Homogeneous speeds
         # are exactly 1.0, so orderings (and decisions) are unchanged.
-        return min(ws, key=lambda w: w.unfinished_tokens / w.speed).wid \
-            if ws else None
+        if not ws:
+            return None
+        if self.vectorized:
+            # same keys, same first-wins tie-break: np.argmin returns the
+            # first minimum exactly as min() keeps the first smallest
+            loads = np.fromiter((w.unfinished_tokens / w.speed for w in ws),
+                                dtype=np.float64, count=len(ws))
+            return ws[int(np.argmin(loads))].wid
+        return min(ws, key=lambda w: w.unfinished_tokens / w.speed).wid
 
 
 # ---------------------------------------------------------------------------

@@ -46,7 +46,11 @@ class SLOClass:
 SLOSpec = SLOClass
 
 
-@dataclasses.dataclass
+# eq=False: requests are identities, not values — every membership /
+# equality check in the stack compares the same live object, and identity
+# comparison keeps hot ``in``-list checks O(1) per element instead of a
+# 25-field structural compare (it also restores hashability).
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     arrival_time: float

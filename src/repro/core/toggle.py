@@ -27,6 +27,8 @@ import enum
 import math
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.predictor import Predictor
 from repro.core.request import Phase, Request
 
@@ -38,7 +40,13 @@ class Role(enum.Enum):
 
 @dataclasses.dataclass
 class WorkerView:
-    """Scheduler-visible state of one worker (kept current by the engine)."""
+    """Scheduler-visible state of one worker (kept current by the engine).
+
+    When a ``ViewColumns`` mirror is attached (vectorized dispatch), every
+    field assignment marks this view's row dirty so the column arrays
+    re-pull it before the next batched decision — writers (engine refresh,
+    role transitions, failure paths) never need to know about the mirror.
+    """
     wid: int
     role: Role
     # prefill side
@@ -80,6 +88,18 @@ class WorkerView:
     # scheduler.
     speed: float = 1.0
 
+    # ViewColumns back-reference; CLASS attributes (not dataclass fields)
+    # so unattached views — and the dataclass __init__'s own assignments,
+    # which run before attach — resolve them without per-instance state.
+    _cols = None
+    _row = -1
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        c = self._cols
+        if c is not None:
+            c.dirty.add(self._row)
+
     @property
     def hbm_util(self) -> float:
         if self.total_pages > 0:
@@ -103,6 +123,64 @@ class WorkerView:
     def unfinished_tokens(self) -> float:
         """InFaaS-style load metric: fewest unfinished token count."""
         return self.queued_prefill_tokens + self.decode_sum_ctx
+
+
+class ViewColumns:
+    """Dirty-flagged structure-of-arrays mirror of the worker views.
+
+    Batched dispatch reads whole per-worker columns (pages, KV usage,
+    batch sizes, slack, load) as numpy arrays instead of re-gathering
+    them from Python objects on every decision. ``WorkerView.__setattr__``
+    marks a row dirty on ANY field write, and ``sync`` re-pulls exactly
+    the dirty rows — one event touches one worker, so the per-dispatch
+    sync cost is O(touched workers), not O(cluster). The dict-valued
+    fields (``decode_tpot_floor``, ``cached_prefixes``) stay on the view
+    objects; the few code paths that need them walk only the rows that
+    survived the array gates."""
+
+    def __init__(self, views: Sequence[WorkerView]):
+        self.views = list(views)
+        n = len(self.views)
+        self.dirty: set = set()
+        self.wid = np.empty(n, dtype=np.int64)
+        self.total_pages = np.empty(n, dtype=np.int64)
+        self.free_pages = np.empty(n, dtype=np.int64)
+        self.page_size = np.empty(n, dtype=np.int64)
+        self.decode_batch = np.empty(n, dtype=np.int64)
+        self.queued_prefill_tokens = np.empty(n, dtype=np.int64)
+        self.kv_used_tokens = np.empty(n, dtype=np.float64)
+        self.kv_capacity_tokens = np.empty(n, dtype=np.float64)
+        self.decode_sum_ctx = np.empty(n, dtype=np.float64)
+        self.min_tpot_slack = np.empty(n, dtype=np.float64)
+        self.speed = np.empty(n, dtype=np.float64)
+        self.alive = np.empty(n, dtype=bool)
+        self.is_prefill = np.empty(n, dtype=bool)
+        for i, v in enumerate(self.views):
+            self._pull(i, v)
+            object.__setattr__(v, "_row", i)
+            object.__setattr__(v, "_cols", self)
+
+    def _pull(self, i: int, v: WorkerView) -> None:
+        self.wid[i] = v.wid
+        self.total_pages[i] = v.total_pages
+        self.free_pages[i] = v.free_pages
+        self.page_size[i] = v.page_size
+        self.decode_batch[i] = v.decode_batch
+        self.queued_prefill_tokens[i] = v.queued_prefill_tokens
+        self.kv_used_tokens[i] = v.kv_used_tokens
+        self.kv_capacity_tokens[i] = v.kv_capacity_tokens
+        self.decode_sum_ctx[i] = v.decode_sum_ctx
+        self.min_tpot_slack[i] = v.min_tpot_slack
+        self.speed[i] = v.speed
+        self.alive[i] = v.alive
+        self.is_prefill[i] = v.role is Role.PREFILL
+
+    def sync(self) -> None:
+        if self.dirty:
+            views = self.views
+            for i in self.dirty:
+                self._pull(i, views[i])
+            self.dirty.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +222,13 @@ class MultiplexingToggle:
         self.state_tokens_fn = None
         self._ttft_pressure = 0           # recent Path-① slack violations
         self._dispatches = 0
+        # batched dispatch: price a candidate against every worker in one
+        # numpy evaluation (Predictor.predict_*_batch) instead of a
+        # per-worker Python loop. Decisions are bit-identical either way
+        # (tests/test_vectorized.py pins it); build_cluster(vectorized=...)
+        # sets this, default off so the toggle alone stays scalar-shaped.
+        self.vectorized = False
+        self._columns: Optional[ViewColumns] = None   # lazy SoA mirror
 
     # ------------------------------------------------------------- helpers
     def _alive(self, role: Optional[Role] = None):
@@ -296,6 +381,309 @@ class MultiplexingToggle:
         suffix = req.prompt_len - self._cached_span(w, req)
         return queue + suffix / max(rate, 1.0)
 
+    # ------------------------------------------------- vectorized dispatch
+    # The batched twins of chunk_for / _multiplex_ok / the TTFT predictors:
+    # per-worker state comes from the dirty-synced ``ViewColumns`` mirror
+    # (no Python re-gathering), and the candidate is priced against ALL
+    # workers in one Predictor.*_batch evaluation. Every arithmetic
+    # expression mirrors its scalar twin operation-for-operation (same
+    # association order, same masked terms), so selections are
+    # bit-identical — tests/test_vectorized.py pins decision parity.
+
+    def _cols_sync(self) -> ViewColumns:
+        c = self._columns
+        if c is None:
+            c = self._columns = ViewColumns(list(self.workers.values()))
+        elif c.dirty:
+            c.sync()
+        return c
+
+    def _chunk_for_vec(self, c: ViewColumns, gidx: np.ndarray,
+                       tpot_slo: float) -> np.ndarray:
+        """``chunk_for`` for many workers: one lockstep masked binary
+        search. Rows converge at different interval lengths, so finished
+        rows (lo == hi) freeze under an active mask while the rest keep
+        bisecting; frozen rows re-price at ``lo`` (pure, discarded)."""
+        cfg = self.cfg
+        n = gidx.size
+        if not cfg.slack_chunking:
+            return np.full(n, cfg.chunk_tokens, dtype=np.int64)
+        wids = c.wid[gidx].tolist()
+        sumctx = c.decode_sum_ctx[gidx]
+        ictx = sumctx.astype(np.int64)
+        batch = c.decode_batch[gidx]
+        has_b = batch > 0
+        any_b = bool(has_b.any())
+
+        def chunk_cost(tokens: np.ndarray) -> np.ndarray:
+            t = self.predictor.predict_prefill_batch(wids, tokens, ictx)
+            if any_b:
+                t_int = self.predictor.predict_interference_batch(
+                    wids, batch, sumctx, tokens, ictx)
+                t = t + np.where(has_b, t_int, 0.0)
+            return t
+
+        lo = np.full(n, cfg.min_chunk, dtype=np.int64)
+        hi = np.full(n, cfg.chunk_tokens, dtype=np.int64)
+        budget = c.min_tpot_slack[gidx] / cfg.slack_safety
+        # rows whose minimum chunk already busts the budget return min_chunk
+        hi = np.where(chunk_cost(lo) > budget, lo, hi)
+        active = lo < hi
+        while np.any(active):
+            mid = (lo + hi + 1) // 2
+            fits = chunk_cost(np.where(active, mid, lo)) <= budget
+            lo = np.where(active & fits, mid, lo)
+            hi = np.where(active & ~fits, mid - 1, hi)
+            active = lo < hi
+        return lo
+
+    def _other_floor_vec(self, c: ViewColumns, gidx: np.ndarray,
+                         name: str) -> np.ndarray:
+        """Tightest resident TPOT SLO of a *different* class, per row.
+        The floor dicts stay Python-side; single-class rows (empty dict or
+        only the arriving class — the overwhelmingly common shape) resolve
+        without building a generator."""
+        inf = float("inf")
+        out = np.empty(gidx.size, dtype=np.float64)
+        views = c.views
+        for j, i in enumerate(gidx.tolist()):
+            fl = views[i].decode_tpot_floor
+            if not fl or (name in fl and len(fl) == 1):
+                out[j] = inf
+            elif name not in fl:
+                out[j] = min(fl.values())
+            else:
+                out[j] = min(t for nm, t in fl.items() if nm != name)
+        return out
+
+    def _multiplex_ok_vec(self, c: ViewColumns, midx: np.ndarray,
+                          req: Request) -> np.ndarray:
+        """``_multiplex_ok`` over all M workers at once — returns the
+        admissible rows of ``midx``. The memory gates run as column
+        arithmetic (the footprint is one scalar when the request carries
+        no prefix key — the common case); the predictor-priced chunk and
+        iteration gates run as one batched evaluation over the rows that
+        survive. Only the rare tier-relief fallback (mem-failing rows that
+        actually have a host tier and a resident batch) drops to the
+        scalar helper with its restore prediction."""
+        cfg = self.cfg
+        total = c.total_pages[midx]
+        free = c.free_pages[midx]
+        used = c.kv_used_tokens[midx]
+        cap = c.kv_capacity_tokens[midx]
+        ps = c.page_size[midx]
+        if req.prefix_key is None:
+            # no prefix -> every cached span is 0 -> uniform footprint
+            fparr = req.prompt_len + req.remaining_output
+            kvi = max(int(self._kv_need_tokens(fparr)), 0)
+        else:
+            fparr = np.array(
+                [req.prompt_len - self._cached_span(c.views[i], req)
+                 + req.remaining_output for i in midx.tolist()],
+                dtype=np.int64)
+            if self.state_tokens_fn is None:
+                kvi = np.maximum(fparr, 0)
+            else:
+                kvi = np.maximum(np.fromiter(
+                    (int(self.state_tokens_fn(int(f)))
+                     for f in fparr.tolist()), np.int64, midx.size), 0)
+        # pages_for, vectorised: ceil-div by the (clamped) page size
+        pages = -(-kvi // np.maximum(ps, 1))
+        util = np.where(total > 0, 1.0 - free / np.maximum(total, 1),
+                        used / np.maximum(cap, 1.0))
+        ok = ((util <= cfg.hbm_admission)
+              & (used + fparr <= cfg.hbm_watermark * cap)
+              & ((total <= 0)
+                 | (total - free + pages <= cfg.hbm_watermark * total)))
+        if not ok.all():
+            for j in np.nonzero(~ok)[0].tolist():
+                w = c.views[midx[j]]
+                # replicate _tier_relief's own cheap pre-checks so tierless
+                # rows never pay the predictor call
+                if w.host_total_pages > 0 and w.decode_batch > 0:
+                    f = fparr if req.prefix_key is None else int(fparr[j])
+                    ok[j] = self._tier_relief(w, req, f)
+        gidx = midx[ok] if not ok.all() else midx
+        if gidx.size == 0:
+            return gidx
+        batch = c.decode_batch[gidx]
+        has_b = batch > 0
+        if not has_b.any():
+            return gidx        # no decode batches: the chunk gates all pass
+        # only rows with a resident decode batch can fail the chunk gates,
+        # so the predictor-priced tail runs on that subset alone — the
+        # evaluations are elementwise, so each surviving row's values are
+        # bit-identical to a full-width evaluation
+        bidx = np.nonzero(has_b)[0]
+        sub = gidx[bidx]
+        wids = c.wid[sub].tolist()
+        batch_b = batch[bidx]
+        sumctx = c.decode_sum_ctx[sub]
+        ictx = sumctx.astype(np.int64)
+        rp = req.remaining_prefill or req.prompt_len
+        if cfg.slack_chunking:
+            chunks = np.minimum(
+                self._chunk_for_vec(c, sub, req.slo.tpot), rp)
+        else:
+            chunks = min(cfg.chunk_tokens, rp)   # uniform: scalar broadcast
+        t_chunk = self.predictor.predict_prefill_batch(wids, chunks, ictx)
+        t_int = self.predictor.predict_interference_batch(
+            wids, batch_b, sumctx, chunks, ictx)
+        t_chunk = t_chunk + t_int
+        slack_arr = np.maximum(c.min_tpot_slack[sub], 0.0)
+        other = self._other_floor_vec(c, sub, req.slo.name)
+        t_iter = self.predictor.predict_decode_iter_batch(
+            wids, batch_b, sumctx)
+        fail = ((t_chunk * cfg.slack_safety > slack_arr)
+                | (t_iter > cfg.decode_iter_guard
+                   * np.minimum(req.slo.tpot, other)))
+        if not fail.any():
+            return gidx
+        keep = np.ones(gidx.size, dtype=bool)
+        keep[bidx[fail]] = False
+        return gidx[keep]
+
+    def _ttft_prefill_vec(self, c: ViewColumns, pidx: np.ndarray,
+                          req: Request) -> np.ndarray:
+        # queue + exec priced in ONE stacked batch call (rows 0..n-1 the
+        # queue drains, rows n..2n-1 the uncached suffixes), then the
+        # halves are summed — elementwise, so bit-identical to two calls
+        n = pidx.size
+        wids = c.wid[pidx].tolist()
+        qtok = np.maximum(c.queued_prefill_tokens[pidx], 0)
+        if req.prefix_key is None:
+            stok = np.full(n, req.prompt_len, dtype=np.int64)
+        else:
+            stok = np.array(
+                [req.prompt_len - self._cached_span(c.views[i], req)
+                 for i in pidx.tolist()], dtype=np.int64)
+        t = self.predictor.predict_prefill_batch(
+            wids + wids, np.concatenate([qtok, stok]))
+        return t[:n] + t[n:]
+
+    def _ttft_multiplex_vec(self, c: ViewColumns, gidx: np.ndarray,
+                            req: Request) -> np.ndarray:
+        cfg = self.cfg
+        wids = c.wid[gidx].tolist()
+        sumctx = c.decode_sum_ctx[gidx]
+        ictx = sumctx.astype(np.int64)
+        batch = c.decode_batch[gidx]
+        chunk = cfg.chunk_tokens
+        t_chunk = self.predictor.predict_prefill_batch(wids, chunk, ictx)
+        has_b = batch > 0
+        if has_b.any():
+            # price interference only where a decode batch exists; the
+            # other rows add an exact 0.0 either way
+            bidx = np.nonzero(has_b)[0]
+            t_int = np.zeros(gidx.size)
+            t_int[bidx] = self.predictor.predict_interference_batch(
+                c.wid[gidx[bidx]].tolist(), batch[bidx], sumctx[bidx],
+                chunk, ictx[bidx])
+            t_chunk = t_chunk + t_int
+        base = self.predictor.predict_decode_iter_batch(
+            wids, np.maximum(batch, 1), sumctx)
+        margin = np.maximum(req.slo.tpot - base, 1e-3)
+        catchup = t_chunk / margin * base
+        rate = chunk / (t_chunk + catchup)
+        queued = c.queued_prefill_tokens[gidx]
+        if req.prefix_key is None:
+            suffix = float(req.prompt_len)     # uniform: scalar broadcast
+        else:
+            suffix = np.array(
+                [req.prompt_len - self._cached_span(c.views[i], req)
+                 for i in gidx.tolist()], dtype=np.float64)
+        floor = np.maximum(rate, 1.0)
+        return queued / floor + suffix / floor
+
+    def _dispatch_prefill_vec(self, req: Request,
+                              now: float) -> Optional[int]:
+        slack = req.ttft_deadline_slack(now)
+        c = self._cols_sync()
+        live = c.alive
+        pidx = np.nonzero(live & c.is_prefill)[0]
+        midx = np.nonzero(live & ~c.is_prefill)[0]
+        parts: list[np.ndarray] = []
+        wids: list[int] = []
+        if pidx.size:
+            parts.append(self._ttft_prefill_vec(c, pidx, req))
+            wids.extend(c.wid[pidx].tolist())
+        if midx.size:
+            gidx = self._multiplex_ok_vec(c, midx, req)
+            if gidx.size:
+                parts.append(self._ttft_multiplex_vec(c, gidx, req))
+                wids.extend(c.wid[gidx].tolist())
+        if not wids:
+            m_any = [c.views[i] for i in midx.tolist()] or self._alive()
+            if not m_any:
+                return None
+            self._ttft_pressure += 1
+            return min(m_any, key=lambda w: w.unfinished_tokens / w.speed).wid
+        t = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        in_slo = np.nonzero(t <= slack)[0]
+        if in_slo.size:
+            return wids[int(in_slo[int(np.argmin(t[in_slo]))])]
+        self._ttft_pressure += 1
+        return wids[int(np.argmin(t))]
+
+    def _dispatch_decode_vec(self, req: Request,
+                             now: float) -> Optional[int]:
+        cfg = self.cfg
+        c = self._cols_sync()
+        midx = np.nonzero(c.alive & ~c.is_prefill)[0]
+        cidx = midx
+        if midx.size:
+            need = req.context_len + req.remaining_output
+            kvi = max(int(self._kv_need_tokens(need)), 0)
+            total = c.total_pages[midx]
+            free = c.free_pages[midx]
+            # pages_for, vectorised: ceil-div by the (clamped) page size
+            pages = -(-kvi // np.maximum(c.page_size[midx], 1))
+            fits = ((c.kv_used_tokens[midx] + need
+                     <= cfg.hbm_watermark * c.kv_capacity_tokens[midx])
+                    & ((total <= 0)
+                       | (total - free + pages
+                          <= cfg.hbm_watermark * total)))
+            if not fits.all():
+                cidx = midx[fits]
+        if cidx.size == 0:
+            src = self.workers.get(req.worker) \
+                if req.worker is not None else None
+            if src is not None and src.alive:
+                return None
+            cidx = midx            # src dead: least-bad
+        if cidx.size == 0:
+            return None
+        tpot = max(req.slo.tpot, 1e-6)
+        cw = c.wid[cidx]
+        if self.transfer is None or self.kv_bytes_fn is None \
+                or req.worker is None:
+            remote = None
+        else:
+            remote = cw != req.worker
+        if remote is None or not remote.any():
+            # matches the scalar short-circuit exactly: src == dst (or no
+            # transfer awareness) never touches the engine, so its drain
+            # arithmetic stays untouched too
+            stalls = np.zeros(cidx.size)
+        else:
+            nbytes = self.kv_bytes_fn(req.context_len)
+            stalls = np.zeros(cidx.size)
+            stalls[remote] = self.transfer \
+                .predict_transfer_times(req.worker, cw[remote], nbytes,
+                                        now=now)
+        q = stalls / tpot
+        # int(q) truncates; q >= 0 so trunc == floor == int()
+        bucket = np.where(np.isinf(stalls), q, np.trunc(q))
+        load = (c.queued_prefill_tokens[cidx] + c.decode_sum_ctx[cidx]) \
+            / c.speed[cidx]
+        # lexsort: last key is primary -> (bucket, load, wid) tuple order;
+        # wid is unique, so ties resolve identically to the scalar min
+        best = int(np.lexsort((cw, load, bucket))[0])
+        if req.worker is not None and float(stalls[best]) > \
+                req.tpot_slack + cfg.migrate_stall_budget * tpot:
+            return None
+        return int(cw[best])
+
     def dispatch_prefill(self, req: Request, now: float) -> Optional[int]:
         """Choose the worker minimising predicted TTFT among SLO-admissible
         paths (Path ① prefill workers / Path ② multiplexing workers); the
@@ -304,6 +692,8 @@ class MultiplexingToggle:
         if self.cfg.role_transitions and \
                 self._dispatches % self.cfg.queue_violation_window == 0:
             self.review_roles(now)
+        if self.vectorized:
+            return self._dispatch_prefill_vec(req, now)
 
         slack = req.ttft_deadline_slack(now)
         cands: list[tuple[float, int, bool]] = []   # (t_pred, wid, in_slo)
@@ -351,6 +741,8 @@ class MultiplexingToggle:
         stalls the first decode tokens however idle its batch is, so stall
         (quantised to TPOT budgets — the granularity at which it burns
         slack) ranks ahead of queue depth."""
+        if self.vectorized:
+            return self._dispatch_decode_vec(req, now)
         need = req.context_len + req.remaining_output
         cands = [w for w in self._alive(Role.MULTIPLEX)
                  if w.kv_used_tokens + need

@@ -208,6 +208,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="keep the legacy dispatch-count role review "
                          "instead of windowed-attainment rebalancing")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the simulation under cProfile; print the "
+                         "top-25 cumulative-time entries to stderr")
     return ap
 
 
@@ -316,7 +319,23 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     if args.fail_worker is not None:
         sim.inject_failure(args.duration / 2, args.fail_worker,
                            recover_after=args.duration / 4)
-    m = sim.run(until=args.duration * 10)
+    if args.profile:
+        import cProfile
+        import pstats
+        import sys as _sys
+        pr = cProfile.Profile()
+        pr.enable()
+        try:
+            m = sim.run(until=args.duration * 10)
+        finally:
+            pr.disable()
+            stats = pstats.Stats(pr, stream=_sys.stderr)
+            stats.sort_stats("cumulative")
+            print("# --profile: top 25 by cumulative time",
+                  file=_sys.stderr)
+            stats.print_stats(25)
+    else:
+        m = sim.run(until=args.duration * 10)
 
     # label the workload that actually ran: CSV replay and --slo-classes
     # both bypass the named generator, and the JSON is the machine-read

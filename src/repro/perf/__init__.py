@@ -29,7 +29,7 @@ from repro.perf.calibrate import (CalibratedRooflineBackend,
                                   calibrate_interference)
 from repro.perf.calibration import OnlinePredictor
 from repro.perf.hardware import (V5E, HardwareSpec, InterferenceTable,
-                                 WorkerSpec, gamma_at)
+                                 WorkerSpec, gamma_at, gamma_at_batch)
 from repro.perf.model import (STATE_TOKEN_EQUIV, CostModel,
                               IterationCostModel, ModelCostSpec,
                               build_cost_spec, canonical_iteration_time,
@@ -46,6 +46,6 @@ __all__ = [
     "KernelCalibration", "ModelCostSpec", "OnlinePredictor", "Predictor",
     "ProfiledPredictor", "STATE_TOKEN_EQUIV", "V5E", "WorkerSpec",
     "build_cost_spec", "calibrate_hardware", "calibrate_interference",
-    "canonical_iteration_time", "gamma_at", "profile_worker",
-    "relative_speeds",
+    "canonical_iteration_time", "gamma_at", "gamma_at_batch",
+    "profile_worker", "relative_speeds",
 ]

@@ -27,9 +27,11 @@ global correction.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.perf.predictor import Predictor
+import numpy as np
+
+from repro.perf.predictor import Predictor, _seq
 
 
 class OnlinePredictor(Predictor):
@@ -172,6 +174,34 @@ class OnlinePredictor(Predictor):
         # per-phase EWMA scales correct the *additive* estimates only
         return self.base.predict_interference(
             n_decode, sum_ctx, prefill_tokens, ctx_offset, wid=wid)
+
+    # ------------------------------------------------- batched entry points
+    # base batch estimate × gathered per-element EWMA scales: the scale
+    # lookup hierarchy is dict-bound Python either way, so gathering it
+    # into a vector is exactly the scalar sequence of lookups.
+    def predict_prefill_batch(self, wids: Sequence[Optional[int]], tokens,
+                              ctx_offset=0) -> np.ndarray:
+        base = self.base.predict_prefill_batch(wids, tokens, ctx_offset)
+        toks = _seq(tokens, len(wids))
+        scales = np.array(
+            [self._scale_for("prefill", t, self.prefill_scale, w)
+             for w, t in zip(wids, toks)], dtype=np.float64)
+        return base * scales
+
+    def predict_decode_iter_batch(self, wids: Sequence[Optional[int]],
+                                  n_decode, sum_ctx) -> np.ndarray:
+        base = self.base.predict_decode_iter_batch(wids, n_decode, sum_ctx)
+        nds = _seq(n_decode, len(wids))
+        scales = np.array(
+            [self._scale_for("decode", b, self.decode_scale, w)
+             for w, b in zip(wids, nds)], dtype=np.float64)
+        return base * scales
+
+    def predict_interference_batch(self, wids: Sequence[Optional[int]],
+                                   n_decode, sum_ctx, prefill_tokens,
+                                   ctx_offset=0.0) -> np.ndarray:
+        return self.base.predict_interference_batch(
+            wids, n_decode, sum_ctx, prefill_tokens, ctx_offset)
 
     # ------------------------------------------------------------- feedback
     def _ewma(self, scale: float, ratio: float) -> float:

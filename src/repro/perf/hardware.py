@@ -16,6 +16,8 @@ import bisect
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class InterferenceTable:
@@ -91,6 +93,27 @@ def gamma_at(interference, n_decode: float, prefill_tokens: float) -> float:
     if isinstance(interference, InterferenceTable):
         return interference.lookup(n_decode, prefill_tokens)
     return float(interference)
+
+
+def gamma_at_batch(interference, n_decode, prefill_tokens) -> np.ndarray:
+    """Vectorized ``gamma_at``: resolve γ for many mixed batches at once.
+
+    ``np.searchsorted(edges, x, side="right") - 1`` clipped at 0 is
+    bit-identical to ``InterferenceTable._cell``'s
+    ``bisect.bisect_right`` (bucket lower bounds and batch sizes are
+    small integers, exactly representable in float64), so every element
+    equals the scalar lookup."""
+    n = np.asarray(n_decode, dtype=np.float64)
+    p = np.asarray(prefill_tokens, dtype=np.float64)
+    n, p = np.broadcast_arrays(n, p)
+    if isinstance(interference, InterferenceTable):
+        de = np.asarray(interference.decode_edges, dtype=np.float64)
+        ce = np.asarray(interference.chunk_edges, dtype=np.float64)
+        grid = np.asarray(interference.gamma, dtype=np.float64)
+        i = np.maximum(np.searchsorted(de, n, side="right") - 1, 0)
+        j = np.maximum(np.searchsorted(ce, p, side="right") - 1, 0)
+        return grid[i, j]
+    return np.full(n.shape, float(interference))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -37,9 +37,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Protocol, runtime_checkable
 
+import numpy as np
+
 from repro.models.layers import ModelConfig
 from repro.perf.hardware import (V5E, HardwareSpec, InterferenceTable,
-                                 WorkerSpec, gamma_at)
+                                 WorkerSpec, gamma_at, gamma_at_batch)
 
 # One constant-state request (rwkv/mamba/hybrid) is granted this many
 # token-equivalents of HBM budget: ``kv_capacity_tokens`` sizes the pool
@@ -177,6 +179,13 @@ class CostModel:
         self.worker = worker
         self.page_size = page_size          # KV block granularity (tokens)
         self.params_bytes = self.spec.n_params * self.spec.bytes_per_weight
+        # opt-in iteration-time memo (build_cluster(vectorized=True) arms
+        # it): the scheduler re-prices identical (n, ctx, chunk) shapes many
+        # times per event. Keyed on args; invalidated when ``self.worker``
+        # is replaced (DriftMonitor recalibration swaps the WorkerSpec).
+        self.cached = False
+        self._memo: dict = {}
+        self._memo_worker: Optional[WorkerSpec] = None
 
     # ------------------------------------------------------------ capacity
     def kv_capacity_pages(self, reserve_frac: float = 0.1) -> int:
@@ -252,6 +261,25 @@ class CostModel:
         """One engine iteration: a decode batch (n_decode requests whose
         contexts sum to sum_ctx) plus an optional piggybacked prefill chunk
         of ``prefill_tokens`` starting at context ``prefill_ctx_offset``."""
+        if not self.cached:
+            return self._iteration_time(n_decode, sum_ctx, prefill_tokens,
+                                        prefill_ctx_offset)
+        if self._memo_worker is not self.worker:
+            self._memo_worker = self.worker
+            self._memo.clear()
+        key = (n_decode, sum_ctx, prefill_tokens, prefill_ctx_offset)
+        t = self._memo.get(key)
+        if t is None:
+            if len(self._memo) >= 4096:
+                self._memo.clear()
+            t = self._iteration_time(n_decode, sum_ctx, prefill_tokens,
+                                     prefill_ctx_offset)
+            self._memo[key] = t
+        return t
+
+    def _iteration_time(self, n_decode: int, sum_ctx: float,
+                        prefill_tokens: int = 0,
+                        prefill_ctx_offset: float = 0.0) -> float:
         flops = 0.0
         bytes_ = 0.0
         if n_decode > 0:
@@ -344,6 +372,174 @@ class CostModel:
 
     def decode_iter_time(self, n_decode: int, sum_ctx: float) -> float:
         return self.iteration_time(n_decode, sum_ctx)
+
+    # ------------------------------------------------- batched entry points
+    # One candidate priced against many workers (or many candidates against
+    # one worker) in a single numpy evaluation. Every elementwise operation
+    # mirrors the scalar path's exact association order, masked terms enter
+    # through ``np.where(mask, term, 0.0)`` and ``x + 0.0`` is exact in
+    # IEEE-754, so each element is bit-identical to the scalar call —
+    # tests/test_vectorized.py pins that.
+
+    def _attn_ctx_batch(self, ctx: np.ndarray) -> np.ndarray:
+        cap = self.spec.ctx_cap
+        if cap is None:
+            return ctx
+        return 0.5 * ctx + 0.5 * np.minimum(ctx, float(cap))
+
+    def _batch_terms(self, n, sc, p, c):
+        """Unmasked decode/prefill accounting terms, elementwise mirrors of
+        ``_decode_terms``/``_prefill_terms``."""
+        s = self.spec
+        df_gemm = 2.0 * s.n_active * n
+        df_attn = s.attn_flops_per_ctx_token * self._attn_ctx_batch(sc)
+        db_kv = s.kv_bytes_per_token * self._attn_ctx_batch(sc)
+        db_state = s.state_bytes * n * 2
+        pf_gemm = 2.0 * s.n_active * p
+        pf_attn = s.attn_flops_per_ctx_token \
+            * self._attn_ctx_batch(c + p / 2) * p
+        pb_kv = s.kv_bytes_per_token * (self._attn_ctx_batch(c + p) + p)
+        return df_gemm, df_attn, db_kv, db_state, pf_gemm, pf_attn, pb_kv
+
+    def _interference_batch(self, gamma: np.ndarray, terms) -> np.ndarray:
+        hw = self.worker.hw
+        comp = self.worker.peak_flops
+        mem = self.worker.hbm_bw * hw.bw_eff
+        df_gemm, df_attn, db_kv, db_state, pf_gemm, pf_attn, pb_kv = terms
+        d_flops = df_gemm + df_attn
+        d_bytes = db_kv + db_state + self.params_bytes
+        p_flops = pf_gemm + pf_attn
+        p_bytes = pb_kv + self.params_bytes
+        t_cp = p_flops / (comp * hw.mfu_prefill)
+        t_mp = p_bytes / mem
+        t_cd = d_flops / (comp * hw.mfu_decode)
+        t_md = d_bytes / mem
+        t_p = np.maximum(t_cp, t_mp)
+        t_d = np.maximum(t_cd, t_md)
+        live = (t_p > 0.0) & (t_d > 0.0)
+        beta_p = t_cp / np.where(live, t_p, 1.0)
+        beta_d = t_md / np.where(live, t_d, 1.0)
+        pen = gamma * beta_p * beta_d * np.minimum(t_p, t_d)
+        return np.where(live, pen, 0.0)
+
+    def _prefill_only_batch(self, prefill_tokens, prefill_ctx_offset
+                            ) -> np.ndarray:
+        """``iteration_time_batch`` lane for pure prefill rows (scalar
+        n_decode == 0): only the prefill terms are evaluated. Bit-identical
+        to the general path — its masked sums associate as
+        ``((0.0+0.0)+a)+b`` and IEEE-754 ``0.0+x == x``."""
+        p = np.asarray(prefill_tokens, dtype=np.float64)
+        c = np.asarray(prefill_ctx_offset, dtype=np.float64)
+        p, c = np.broadcast_arrays(p, c)
+        s = self.spec
+        hw = self.worker.hw
+        pf_gemm = 2.0 * s.n_active * p
+        pf_attn = s.attn_flops_per_ctx_token \
+            * self._attn_ctx_batch(c + p / 2) * p
+        pb_kv = s.kv_bytes_per_token * (self._attn_ctx_batch(c + p) + p)
+        has_p = p > 0
+        flops = np.where(has_p, pf_gemm, 0.0) + np.where(has_p, pf_attn, 0.0)
+        bytes_ = np.where(has_p, pb_kv, 0.0)
+        zero = (flops == 0.0) & (bytes_ == 0.0)
+        bytes_ = bytes_ + self.params_bytes
+        mfu = np.where(has_p, hw.mfu_prefill, hw.mfu_decode)
+        t_c = flops / (self.worker.peak_flops * mfu)
+        t_m = bytes_ / (self.worker.hbm_bw * hw.bw_eff)
+        t = np.maximum(t_c, t_m) + hw.t_fixed
+        return np.where(zero, 0.0, t)
+
+    def _decode_only_batch(self, n_decode, sum_ctx) -> np.ndarray:
+        """``iteration_time_batch`` lane for pure decode rows (scalar
+        prefill_tokens == 0): only the decode terms are evaluated. The
+        general path's masked sums associate as ``((a+b)+0.0)+0.0`` and its
+        mfu select resolves to the scalar ``mfu_decode``, so this is
+        bit-identical."""
+        n = np.asarray(n_decode, dtype=np.float64)
+        sc = np.asarray(sum_ctx, dtype=np.float64)
+        n, sc = np.broadcast_arrays(n, sc)
+        s = self.spec
+        hw = self.worker.hw
+        df_gemm = 2.0 * s.n_active * n
+        df_attn = s.attn_flops_per_ctx_token * self._attn_ctx_batch(sc)
+        db_kv = s.kv_bytes_per_token * self._attn_ctx_batch(sc)
+        db_state = s.state_bytes * n * 2
+        has_d = n > 0
+        flops = np.where(has_d, df_gemm, 0.0) + np.where(has_d, df_attn, 0.0)
+        bytes_ = np.where(has_d, db_kv, 0.0) + np.where(has_d, db_state, 0.0)
+        zero = (flops == 0.0) & (bytes_ == 0.0)
+        bytes_ = bytes_ + self.params_bytes
+        t_c = flops / (self.worker.peak_flops * hw.mfu_decode)
+        t_m = bytes_ / (self.worker.hbm_bw * hw.bw_eff)
+        t = np.maximum(t_c, t_m) + hw.t_fixed
+        return np.where(zero, 0.0, t)
+
+    def iteration_time_batch(self, n_decode, sum_ctx, prefill_tokens=0,
+                             prefill_ctx_offset=0.0) -> np.ndarray:
+        """Elementwise ``iteration_time`` over broadcast scalar-or-array
+        arguments; returns float64 with the broadcast shape."""
+        # Uniform-phase fast lanes: dispatch prices pure prefill chunks and
+        # pure decode batches far more often than mixed iterations, and a
+        # scalar 0 for the absent phase proves every row skips it — so only
+        # the present phase's terms are evaluated. (sum_ctx is ignored when
+        # n_decode == 0, exactly as the general path masks it out.)
+        if isinstance(n_decode, (int, float)) and n_decode == 0:
+            return self._prefill_only_batch(prefill_tokens,
+                                            prefill_ctx_offset)
+        if isinstance(prefill_tokens, (int, float)) and prefill_tokens == 0:
+            return self._decode_only_batch(n_decode, sum_ctx)
+        n = np.asarray(n_decode, dtype=np.float64)
+        sc = np.asarray(sum_ctx, dtype=np.float64)
+        p = np.asarray(prefill_tokens, dtype=np.float64)
+        c = np.asarray(prefill_ctx_offset, dtype=np.float64)
+        n, sc, p, c = np.broadcast_arrays(n, sc, p, c)
+        hw = self.worker.hw
+        terms = self._batch_terms(n, sc, p, c)
+        df_gemm, df_attn, db_kv, db_state, pf_gemm, pf_attn, pb_kv = terms
+        has_d = n > 0
+        has_p = p > 0
+        flops = np.where(has_d, df_gemm, 0.0) \
+            + np.where(has_d, df_attn, 0.0) \
+            + np.where(has_p, pf_gemm, 0.0) \
+            + np.where(has_p, pf_attn, 0.0)
+        bytes_ = np.where(has_d, db_kv, 0.0) \
+            + np.where(has_d, db_state, 0.0) \
+            + np.where(has_p, pb_kv, 0.0)
+        zero = (flops == 0.0) & (bytes_ == 0.0)
+        bytes_ = bytes_ + self.params_bytes
+        mfu = np.where(has_p, hw.mfu_prefill, hw.mfu_decode)
+        t_c = flops / (self.worker.peak_flops * mfu)
+        t_m = bytes_ / (self.worker.hbm_bw * hw.bw_eff)
+        t = np.maximum(t_c, t_m) + hw.t_fixed
+        mixed = has_d & has_p
+        if np.any(mixed):
+            gamma = gamma_at_batch(hw.interference, n, p)
+            if gamma.any():     # all-zero gamma adds exact 0.0 everywhere
+                pen = self._interference_batch(gamma, terms)
+                t = t + np.where(mixed & (gamma != 0.0), pen, 0.0)
+        return np.where(zero, 0.0, t)
+
+    def interference_penalty_batch(self, n_decode, sum_ctx, prefill_tokens,
+                                   prefill_ctx_offset=0.0) -> np.ndarray:
+        """Elementwise ``interference_penalty`` over broadcast args."""
+        n = np.asarray(n_decode, dtype=np.float64)
+        sc = np.asarray(sum_ctx, dtype=np.float64)
+        p = np.asarray(prefill_tokens, dtype=np.float64)
+        c = np.asarray(prefill_ctx_offset, dtype=np.float64)
+        n, sc, p, c = np.broadcast_arrays(n, sc, p, c)
+        mixed = (n > 0) & (p > 0)
+        if not np.any(mixed):
+            return np.zeros(n.shape)
+        gamma = gamma_at_batch(self.worker.hw.interference, n, p)
+        if not gamma.any():     # γ=0 table: the masked result is all 0.0
+            return np.zeros(n.shape)
+        pen = self._interference_batch(gamma, self._batch_terms(n, sc, p, c))
+        return np.where(mixed & (gamma != 0.0), pen, 0.0)
+
+    def prefill_time_batch(self, prompt_tokens, ctx_offset=0) -> np.ndarray:
+        return self.iteration_time_batch(0, 0.0, prompt_tokens, ctx_offset)
+
+    def decode_iter_time_batch(self, n_decode, sum_ctx) -> np.ndarray:
+        return self.iteration_time_batch(n_decode, sum_ctx)
 
     # ----------------------------------------------------------- migration
     def kv_transfer_bytes(self, ctx_tokens: int) -> float:

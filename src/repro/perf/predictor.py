@@ -26,8 +26,29 @@ import bisect
 import dataclasses
 from typing import Callable, Optional, Sequence
 
+import numpy as np
+
 from repro.perf.model import (CostModel, IterationCostModel,
                               canonical_iteration_time)
+
+
+def _col(x, n: int) -> np.ndarray:
+    """Broadcast a scalar-or-sequence argument to a length-``n`` float64
+    column (a read-only broadcast view for scalars — callers never write)."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim == 0:
+        return np.broadcast_to(a, (n,))
+    return a
+
+
+def _seq(x, n: int) -> Sequence:
+    """Per-element view of a scalar-or-sequence argument, preserving the
+    original Python scalar types for exact scalar-fallback loops."""
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, (list, tuple)):
+        return x
+    return [x] * n
 
 
 class Predictor:
@@ -62,6 +83,41 @@ class Predictor:
         prefer offload', keeping tier-blind predictors safe."""
         return float("inf")
 
+    # ------------------------------------------------- batched entry points
+    # Price one candidate against many workers in a single call: ``wids``
+    # is a length-n sequence of worker ids (None allowed, same meaning as
+    # the scalar calls); the other arguments broadcast scalar-or-length-n.
+    # The base implementations are scalar loops — bit-identical by
+    # construction, so any Predictor subclass is batch-callable; the
+    # analytic subclasses override with one-shot numpy evaluations that
+    # tests/test_vectorized.py pins against the loops element-for-element.
+
+    def predict_prefill_batch(self, wids: Sequence[Optional[int]], tokens,
+                              ctx_offset=0) -> np.ndarray:
+        n = len(wids)
+        toks, offs = _seq(tokens, n), _seq(ctx_offset, n)
+        return np.array([self.predict_prefill(t, o, wid=w)
+                         for w, t, o in zip(wids, toks, offs)],
+                        dtype=np.float64)
+
+    def predict_decode_iter_batch(self, wids: Sequence[Optional[int]],
+                                  n_decode, sum_ctx) -> np.ndarray:
+        n = len(wids)
+        nds, scs = _seq(n_decode, n), _seq(sum_ctx, n)
+        return np.array([self.predict_decode_iter(b, s, wid=w)
+                         for w, b, s in zip(wids, nds, scs)],
+                        dtype=np.float64)
+
+    def predict_interference_batch(self, wids: Sequence[Optional[int]],
+                                   n_decode, sum_ctx, prefill_tokens,
+                                   ctx_offset=0.0) -> np.ndarray:
+        n = len(wids)
+        nds, scs = _seq(n_decode, n), _seq(sum_ctx, n)
+        pts, offs = _seq(prefill_tokens, n), _seq(ctx_offset, n)
+        return np.array([self.predict_interference(b, s, p, o, wid=w)
+                         for w, b, s, p, o in zip(wids, nds, scs, pts, offs)],
+                        dtype=np.float64)
+
 
 @dataclasses.dataclass
 class AnalyticalPredictor(Predictor):
@@ -91,6 +147,26 @@ class AnalyticalPredictor(Predictor):
         return self.cost.restore_time(ctx_tokens, residue_tokens) \
             * self.safety
 
+    def predict_prefill_batch(self, wids: Sequence[Optional[int]], tokens,
+                              ctx_offset=0) -> np.ndarray:
+        n = len(wids)
+        return self.cost.prefill_time_batch(
+            _col(tokens, n), _col(ctx_offset, n)) * self.safety
+
+    def predict_decode_iter_batch(self, wids: Sequence[Optional[int]],
+                                  n_decode, sum_ctx) -> np.ndarray:
+        n = len(wids)
+        return self.cost.decode_iter_time_batch(
+            _col(n_decode, n), _col(sum_ctx, n)) * self.safety
+
+    def predict_interference_batch(self, wids: Sequence[Optional[int]],
+                                   n_decode, sum_ctx, prefill_tokens,
+                                   ctx_offset=0.0) -> np.ndarray:
+        n = len(wids)
+        return self.cost.interference_penalty_batch(
+            _col(n_decode, n), _col(sum_ctx, n), _col(prefill_tokens, n),
+            _col(ctx_offset, n)) * self.safety
+
 
 class BiasedPredictor(AnalyticalPredictor):
     """Systematically ``bias``×-miscalibrated analytical predictor — a
@@ -108,6 +184,16 @@ class BiasedPredictor(AnalyticalPredictor):
     def predict_decode_iter(self, n_decode: int, sum_ctx: float,
                             wid: Optional[int] = None) -> float:
         return super().predict_decode_iter(n_decode, sum_ctx, wid) * self.bias
+
+    def predict_prefill_batch(self, wids: Sequence[Optional[int]], tokens,
+                              ctx_offset=0) -> np.ndarray:
+        return super().predict_prefill_batch(wids, tokens, ctx_offset) \
+            * self.bias
+
+    def predict_decode_iter_batch(self, wids: Sequence[Optional[int]],
+                                  n_decode, sum_ctx) -> np.ndarray:
+        return super().predict_decode_iter_batch(wids, n_decode, sum_ctx) \
+            * self.bias
 
 
 class ClusterPredictor(Predictor):
@@ -167,6 +253,70 @@ class ClusterPredictor(Predictor):
         if restore is None:
             return float("inf")
         return restore(ctx_tokens, residue_tokens) * self.safety
+
+    def _groups(self, wids: Sequence[Optional[int]]):
+        """(cost_model, row_indices) groups — workers sharing one CostModel
+        instance (the homogeneous common case: a single group) price in one
+        batched evaluation each."""
+        groups: dict[int, tuple[IterationCostModel, list[int]]] = {}
+        for i, w in enumerate(wids):
+            c = self._cost(w)
+            g = groups.get(id(c))
+            if g is None:
+                groups[id(c)] = (c, [i])
+            else:
+                g[1].append(i)
+        return groups.values()
+
+    def predict_prefill_batch(self, wids: Sequence[Optional[int]], tokens,
+                              ctx_offset=0) -> np.ndarray:
+        n = len(wids)
+        toks, offs = _col(tokens, n), _col(ctx_offset, n)
+        out = np.empty(n, dtype=np.float64)
+        for cost, idxs in self._groups(wids):
+            if isinstance(cost, CostModel):
+                ii = np.asarray(idxs)
+                out[ii] = cost.prefill_time_batch(toks[ii], offs[ii]) \
+                    * self.safety
+            else:
+                for i in idxs:
+                    out[i] = cost.prefill_time(toks[i], offs[i]) * self.safety
+        return out
+
+    def predict_decode_iter_batch(self, wids: Sequence[Optional[int]],
+                                  n_decode, sum_ctx) -> np.ndarray:
+        n = len(wids)
+        nds, scs = _col(n_decode, n), _col(sum_ctx, n)
+        out = np.empty(n, dtype=np.float64)
+        for cost, idxs in self._groups(wids):
+            if isinstance(cost, CostModel):
+                ii = np.asarray(idxs)
+                out[ii] = cost.decode_iter_time_batch(nds[ii], scs[ii]) \
+                    * self.safety
+            else:
+                for i in idxs:
+                    out[i] = cost.decode_iter_time(nds[i], scs[i]) \
+                        * self.safety
+        return out
+
+    def predict_interference_batch(self, wids: Sequence[Optional[int]],
+                                   n_decode, sum_ctx, prefill_tokens,
+                                   ctx_offset=0.0) -> np.ndarray:
+        n = len(wids)
+        nds, scs = _col(n_decode, n), _col(sum_ctx, n)
+        pts, offs = _col(prefill_tokens, n), _col(ctx_offset, n)
+        out = np.empty(n, dtype=np.float64)
+        for cost, idxs in self._groups(wids):
+            if isinstance(cost, CostModel):
+                ii = np.asarray(idxs)
+                out[ii] = cost.interference_penalty_batch(
+                    nds[ii], scs[ii], pts[ii], offs[ii]) * self.safety
+            else:
+                penalty = getattr(cost, "interference_penalty", None)
+                for i in idxs:
+                    out[i] = 0.0 if penalty is None else \
+                        penalty(nds[i], scs[i], pts[i], offs[i]) * self.safety
+        return out
 
 
 class ProfiledPredictor(Predictor):

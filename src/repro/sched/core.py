@@ -57,8 +57,16 @@ class ClusterScheduler:
                     transfer.add_host(
                         w.wid, LinkSpec.from_host_hardware(w.cost.worker.hw))
         self.rebalancer = rebalancer
-        self.global_queue: list[Request] = []
+        # overflow queue as an insertion-ordered dict {rid: req}: O(1)
+        # membership/removal where the old list paid O(n) scans per event,
+        # while iteration keeps exact arrival order (drain parity)
+        self.global_queue: dict[int, Request] = {}
+        # live class-name counts for the queued set, maintained
+        # incrementally so the multi-tenant drain check below is O(1)
+        # instead of a full rescan per drain
+        self._gq_classes: dict[str, int] = {}
         self.requests: list[Request] = []
+        self._handlers: dict[str, Callable] = {}
         self._busy: dict[int, bool] = {w.wid: False for w in workers}
         # decision log: dispatch targets, batch compositions, decode routes.
         # The backend-parity test replays one trace through two backends and
@@ -74,7 +82,10 @@ class ClusterScheduler:
         self._defer = defer
 
     def handle(self, kind: str, now: float, payload=None) -> None:
-        getattr(self, f"_on_{kind}")(now, payload)
+        h = self._handlers.get(kind)
+        if h is None:
+            h = self._handlers[kind] = getattr(self, f"_on_{kind}")
+        h(now, payload)
 
     def metrics(self) -> ServeMetrics:
         qt, bt = {}, {}
@@ -108,17 +119,24 @@ class ClusterScheduler:
         if self.decisions is not None:
             self.decisions.append(("dispatch", req.rid, wid if ok else None))
         if not ok:
-            if req not in self.global_queue:
-                self.global_queue.append(req)
+            if req.rid not in self.global_queue:
+                self.global_queue[req.rid] = req
+                name = req.slo.name
+                self._gq_classes[name] = self._gq_classes.get(name, 0) + 1
             return
-        if req in self.global_queue:
-            self.global_queue.remove(req)
+        if self.global_queue.pop(req.rid, None) is not None:
+            name = req.slo.name
+            left = self._gq_classes[name] - 1
+            if left:
+                self._gq_classes[name] = left
+            else:
+                del self._gq_classes[name]
         self.workers[wid].admit_prefill(req, now)
         self._kick(wid, now)
 
     def _drain_global_queue(self, now: float) -> None:
-        queue = list(self.global_queue)
-        if len({r.slo.name for r in queue}) > 1:
+        queue = list(self.global_queue.values())
+        if len(self._gq_classes) > 1:
             # multi-tenant overflow: offer dispatch slots tightest-relative-
             # TTFT-slack first across classes (absolute seconds don't
             # compare across SLO tiers), hopeless requests last; a single-

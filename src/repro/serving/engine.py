@@ -69,6 +69,12 @@ class Worker:
         self.pages = PageAccountant(cost.kv_capacity_pages(), cost.page_size,
                                     host_pages=host_pages)
         self.kv_preempt_watermark = kv_preempt_watermark
+        # fast mode (build_cluster(vectorized=True)): coalesce the per-event
+        # view rebuild into one refresh per completed iteration, use
+        # phase-only membership checks and the view's maintained decode
+        # context sum in place of O(batch) rescans. State transitions are
+        # identical — tests/test_vectorized.py pins decision parity.
+        self.fast = False
         self.prefix_cache = prefix_cache
         self.offload_gate = offload_gate
         self.view = WorkerView(
@@ -162,7 +168,13 @@ class Worker:
                     take = min(req.remaining_prefill, budget)
                     prefill_parts.append((req, take))
 
-        sum_ctx = float(sum(r.context_len for r in decode_reqs))
+        if self.fast and rule.run_decode and not run_prefill_exclusively:
+            # decode_reqs is exactly decode_running, whose context sum the
+            # view maintains (refreshed after every mutation) — same value,
+            # no O(batch) rescan
+            sum_ctx = self.view.decode_sum_ctx
+        else:
+            sum_ctx = float(sum(r.context_len for r in decode_reqs))
         p_tokens = sum(t for _, t in prefill_parts)
         ctx_off = float(prefill_parts[0][0].prefilled_tokens) if prefill_parts else 0.0
         return IterationPlan(
@@ -198,8 +210,13 @@ class Worker:
         interference = max(0.0, duration - pure_decode)
         if plan.n_decode and plan.prefill_tokens > 0:
             self.interference_time += interference
+        fast = self.fast
         for r in plan.decode_reqs:
-            if r.phase != Phase.DECODING or r not in self.decode_running:
+            # fast mode drops the list scan: every site that removes a
+            # request from decode_running sets its phase away from DECODING
+            # first, so the phase test alone is equivalent
+            if r.phase != Phase.DECODING or \
+                    (not fast and r not in self.decode_running):
                 continue        # evicted mid-compose (page preemption)
             r.record_decode_iteration(duration)
             # grow the token counter by the request's true footprint
@@ -217,11 +234,12 @@ class Worker:
             if r.remaining_output == 0:
                 r.phase = Phase.FINISHED
                 r.finish_time = now
-                self.release(r)
+                self.release(r, refresh=not fast)
         # page growth for the tokens just written; evict newest decodes
         # when the pool can't supply it, then enforce the watermark
         for r in plan.decode_reqs:
-            if r.phase != Phase.DECODING or r not in self.decode_running:
+            if r.phase != Phase.DECODING or \
+                    (not fast and r not in self.decode_running):
                 continue
             need = self._page_need(r.context_len, r.cached_prefix)
             while not self.pages.reserve(r.rid, need):
@@ -263,7 +281,7 @@ class Worker:
                 if req.remaining_output == 0:
                     req.phase = Phase.FINISHED
                     req.finish_time = now
-                    self.release(req)
+                    self.release(req, refresh=not fast)
                 else:
                     finished_prefills.append(req)
                 if req in self.prefill_queue:
@@ -271,9 +289,12 @@ class Worker:
         self._refresh_view()
         return finished_prefills
 
-    def release(self, req: Request) -> None:
+    def release(self, req: Request, refresh: bool = True) -> None:
         """Free KV held by a finished/migrated request (both tiers), and
-        return any borrowed prefix-cache reference."""
+        return any borrowed prefix-cache reference. ``refresh=False`` lets
+        ``complete_iteration`` coalesce many releases into its single
+        trailing view rebuild (the rebuild is a full recompute, so the
+        final state is identical)."""
         self.view.kv_used_tokens = max(
             0.0, self.view.kv_used_tokens - self._own_state(req, req.context_len))
         self.pages.release(req.rid)
@@ -282,7 +303,8 @@ class Worker:
             req.cached_prefix = 0
         if req in self.decode_running:
             self.decode_running.remove(req)
-        self._refresh_view()
+        if refresh:
+            self._refresh_view()
 
     # ------------------------------------------------------------ preemption
     def _preempt(self, req: Request, now: float) -> None:
@@ -291,7 +313,9 @@ class Worker:
         req.preemptions += 1
         self.preemption_count += 1
         self.pages_reprefilled += self.pages.held_pages(req.rid)
-        self.release(req)
+        # preemption only happens inside complete_iteration, whose trailing
+        # _refresh_view covers fast mode's skipped intermediate rebuild
+        self.release(req, refresh=not self.fast)
         req.reset_for_reprefill(now)
         self.preempted.append(req)
 

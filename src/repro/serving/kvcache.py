@@ -64,11 +64,15 @@ class PageAccountant:
         self.host_total_pages = int(host_pages)
         self._host_pages: dict[int, int] = {}
         self._host_tokens: dict[int, int] = {}
+        # maintained totals: admission checks read used/free pages on every
+        # dispatch, which must not re-sum the per-rid dicts each time
+        self._used = 0
+        self._host_used = 0
 
     # ---------------------------------------------------------------- query
     @property
     def used_pages(self) -> int:
-        return sum(self._pages.values())
+        return self._used
 
     @property
     def free_pages(self) -> int:
@@ -80,7 +84,7 @@ class PageAccountant:
 
     @property
     def host_used_pages(self) -> int:
-        return sum(self._host_pages.values())
+        return self._host_used
 
     @property
     def host_free_pages(self) -> int:
@@ -110,7 +114,9 @@ class PageAccountant:
         need = self.pages_for(tokens) - self._pages.get(rid, 0)
         if need > self.free_pages:
             return False
-        self._pages[rid] = self._pages.get(rid, 0) + max(0, need)
+        grow = max(0, need)
+        self._pages[rid] = self._pages.get(rid, 0) + grow
+        self._used += grow
         self._tokens[rid] = max(self._tokens.get(rid, 0), tokens)
         return True
 
@@ -120,8 +126,10 @@ class PageAccountant:
         restarted request must never leave residue in either pool)."""
         self._tokens.pop(rid, None)
         self._host_tokens.pop(rid, None)
-        self._host_pages.pop(rid, None)
-        return self._pages.pop(rid, 0)
+        self._host_used -= self._host_pages.pop(rid, 0)
+        pages = self._pages.pop(rid, 0)
+        self._used -= pages
+        return pages
 
     def held_pages(self, rid: int) -> int:
         return self._pages.get(rid, 0)
@@ -131,6 +139,8 @@ class PageAccountant:
         self._tokens.clear()
         self._host_pages.clear()
         self._host_tokens.clear()
+        self._used = 0
+        self._host_used = 0
 
     # ------------------------------------------------------- host-DRAM tier
     def can_offload(self, rid: int) -> bool:
@@ -148,6 +158,8 @@ class PageAccountant:
             return 0
         pages = self._pages.pop(rid)
         tokens = self._tokens.pop(rid, 0)
+        self._used -= pages
+        self._host_used += pages
         self._host_pages[rid] = self._host_pages.get(rid, 0) + pages
         self._host_tokens[rid] = max(self._host_tokens.get(rid, 0), tokens)
         return pages
@@ -163,6 +175,8 @@ class PageAccountant:
             return 0
         pages = self._host_pages.pop(rid)
         tokens = self._host_tokens.pop(rid, 0)
+        self._host_used -= pages
+        self._used += pages
         self._pages[rid] = self._pages.get(rid, 0) + pages
         self._tokens[rid] = max(self._tokens.get(rid, 0), tokens)
         return pages

@@ -85,7 +85,7 @@ class Simulator:
         return self.sched.requests
 
     @property
-    def global_queue(self) -> list[Request]:
+    def global_queue(self) -> dict[int, Request]:
         return self.sched.global_queue
 
     @property
@@ -179,6 +179,7 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                   host_kv_gb: float = 0.0,
                   prefix_cache: bool = False,
                   prefix_cache_frac: float = 0.2,
+                  vectorized: bool = True,
                   **policy_kw):
     """Convenience: workers + cost models + policy + scheduler, wired.
 
@@ -219,7 +220,15 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
     ``prefix_cache=True`` arms a per-worker cross-request prefix cache
     (LRU over at most ``prefix_cache_frac`` of HBM pages): requests
     sharing a workload-tagged system prompt skip the cached span of
-    prefill."""
+    prefill.
+    ``vectorized`` (default True) switches the scheduler hot path to the
+    batched implementations: dispatch prices a candidate against every
+    worker in one numpy evaluation (``Predictor.predict_*_batch``), the
+    cost model memoizes per-signature iteration times, and workers run
+    their fast bookkeeping paths. Decisions are bit-identical either way
+    (tests/test_vectorized.py pins it); ``vectorized=False`` keeps the
+    per-worker scalar loops — the reference the scale benchmark's
+    sim-throughput speedup is measured against."""
     from repro.core.policies import make_policy
     from repro.perf import (AnalyticalPredictor, ClusterPredictor, CostModel,
                             OnlinePredictor, WorkerSpec, relative_speeds)
@@ -273,6 +282,14 @@ def build_cluster(cfg, policy_name: str, n_workers: int = 4,
                 lambda req, _p=predictor, _w=w.wid: _gate(req, _p, _w)
     policy = make_policy(policy_name, [w.view for w in workers], predictor,
                          **policy_kw)
+    if vectorized:
+        policy.vectorized = True
+        if getattr(policy, "toggle", None) is not None:
+            policy.toggle.vectorized = True
+        for w in workers:
+            w.fast = True
+        for c in costs.values():
+            c.cached = True      # idempotent on the shared homogeneous model
     transfer = TransferEngine() if use_transfer_engine else None
     policy.attach_transfer(transfer, cost.kv_transfer_bytes,
                            cost.state_tokens)

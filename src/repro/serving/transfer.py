@@ -27,6 +27,8 @@ import itertools
 import math
 from typing import Optional
 
+import numpy as np
+
 
 def host_node(wid: int) -> int:
     """Pseudo node id for worker ``wid``'s host-DRAM endpoint. Worker ids
@@ -90,6 +92,10 @@ class TransferEngine:
         self.completed_flows = 0
         self.bytes_moved = 0.0
         self.total_transfer_seconds = 0.0
+        # wid-indexed (ingress_bw, latency) cache for the vectorized
+        # predictor; the topology only grows, so len(links) is a token
+        self._ibw_cache: Optional[np.ndarray] = None
+        self._ibw_token = -1
 
     # ------------------------------------------------------------- topology
     def add_worker(self, wid: int, spec: Optional[LinkSpec] = None) -> None:
@@ -133,6 +139,82 @@ class TransferEngine:
         t_in = ((self.ingress_queued_bytes(dst) + nbytes) / d.ingress_bw
                 if math.isfinite(d.ingress_bw) else 0.0)
         return s.latency + max(t_out, t_in)
+
+    def predict_transfer_time_batch(self, src: int, dsts, nbytes: float,
+                                    now: Optional[float] = None) -> list:
+        """``predict_transfer_time`` against many candidate destinations in
+        one pass: the clock advances once, the source egress backlog is
+        summed once, and a single sweep over in-flight flows accumulates
+        each candidate's ingress backlog (per-destination accumulation in
+        flow-table order — the same addition sequence as the scalar
+        filtered sums, so every element is bit-identical)."""
+        if now is not None:
+            self.advance(now)
+        s = self._spec(src)
+        if s.egress_bw <= 0:
+            return [float("inf")] * len(dsts)
+        egress = self.egress_queued_bytes(src)
+        t_out = ((egress + nbytes) / s.egress_bw
+                 if math.isfinite(s.egress_bw) else 0.0)
+        want = set(dsts)
+        ingress = dict.fromkeys(want, 0.0)
+        for f in self._flows.values():
+            if f.dst in ingress:
+                ingress[f.dst] += f.remaining
+        out = []
+        for dst in dsts:
+            d = self._spec(dst)
+            if d.ingress_bw <= 0:
+                out.append(float("inf"))
+                continue
+            t_in = ((ingress[dst] + nbytes) / d.ingress_bw
+                    if math.isfinite(d.ingress_bw) else 0.0)
+            out.append(s.latency + max(t_out, t_in))
+        return out
+
+    def _ingress_bw_array(self, n: int) -> np.ndarray:
+        """Ingress bandwidth indexed by worker id for ids ``0..n-1``."""
+        c = self._ibw_cache
+        if c is None or c.size < n or self._ibw_token != len(self.links):
+            m = max(n, c.size if c is not None else 0)
+            c = np.empty(m, dtype=np.float64)
+            for w in range(m):
+                c[w] = self._spec(w).ingress_bw
+            self._ibw_cache = c
+            self._ibw_token = len(self.links)
+        return c
+
+    def predict_transfer_times(self, src: int, dsts: np.ndarray,
+                               nbytes: float,
+                               now: Optional[float] = None) -> np.ndarray:
+        """Array-native ``predict_transfer_time_batch``: ``dsts`` is an
+        int array of non-negative worker ids; returns a float64 array.
+        Each element is bit-identical to the scalar prediction — the
+        per-destination backlogs accumulate in flow-table order and the
+        divisions/max use the same operand values."""
+        if now is not None:
+            self.advance(now)
+        n = dsts.size
+        s = self._spec(src)
+        if s.egress_bw <= 0:
+            return np.full(n, float("inf"))
+        t_out = ((self.egress_queued_bytes(src) + nbytes) / s.egress_bw
+                 if math.isfinite(s.egress_bw) else 0.0)
+        ing = np.zeros(n, dtype=np.float64)
+        if self._flows:
+            acc: dict[int, float] = {}
+            for f in self._flows.values():
+                acc[f.dst] = acc.get(f.dst, 0.0) + f.remaining
+            for dst, v in acc.items():
+                ing[dsts == dst] = v
+        ibw = self._ingress_bw_array(int(dsts.max()) + 1 if n else 0)[dsts]
+        dead = ibw <= 0
+        safe = np.where(dead, 1.0, ibw)
+        t_in = np.where(np.isfinite(ibw), (ing + nbytes) / safe, 0.0)
+        out = s.latency + np.maximum(t_out, t_in)
+        if dead.any():
+            out[dead] = float("inf")
+        return out
 
     # ------------------------------------------------------------ mechanics
     def advance(self, now: float) -> None:

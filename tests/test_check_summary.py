@@ -7,7 +7,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.check_summary import (ATTAINMENT_DROP, LATENCY_REGRESS,
-                                      check, classify, main)
+                                      RPS_DROP, check, classify, main)
 
 SNAPSHOT = {
     "schema_version": 2,
@@ -18,6 +18,7 @@ SNAPSHOT = {
     "weighted_attainment": 1.0,
     "ttft_p90_s": 0.9635,
     "mean_step_s": 0.01365,
+    "sim_throughput_rps": 900.0,
 }
 
 
@@ -30,6 +31,25 @@ def test_classify_heuristics():
     assert classify("ttft_p90_s", 0.9) == "latency"
     assert classify("slo_attainment", 0.97) == "attainment"
     assert classify("goodput_ratio", 2.1) == "info"
+    assert classify("sim_throughput_rps", 900.0) == "throughput"
+    # the suffix wins even for sub-1.0 values that look like fractions:
+    # gating a slow sim's rps as attainment would invert the tolerance
+    assert classify("sim_throughput_rps", 0.4) == "throughput"
+
+
+def test_throughput_drop_beyond_tolerance_fails():
+    fresh = dict(SNAPSHOT)
+    fresh["sim_throughput_rps"] = \
+        SNAPSHOT["sim_throughput_rps"] * (1 - RPS_DROP) * 0.9
+    fails = _fails(check(fresh, SNAPSHOT))
+    assert len(fails) == 1 and "sim_throughput_rps" in fails[0]
+    # a drop inside tolerance passes
+    fresh["sim_throughput_rps"] = \
+        SNAPSHOT["sim_throughput_rps"] * (1 - RPS_DROP) * 1.01
+    assert _fails(check(fresh, SNAPSHOT)) == []
+    # improvements always pass
+    fresh["sim_throughput_rps"] = SNAPSHOT["sim_throughput_rps"] * 10
+    assert _fails(check(fresh, SNAPSHOT)) == []
 
 
 def test_identical_summaries_pass():

@@ -448,9 +448,17 @@ def test_bench_summary_schema():
         "fig_tiered": [{"config": "summary", "evict_ttft_attainment": 0.957,
                         "tiered_prefix_ttft_attainment": 0.996,
                         "prefix_hit_rate": 0.958}],
+        "scale": [{"tier": "throughput", "mode": "vectorized",
+                   "workers": 256, "sim_throughput_rps": 410.0,
+                   "speedup_x": 4.1},
+                  {"tier": "throughput", "mode": "vectorized",
+                   "workers": 1024, "sim_throughput_rps": 1000.0,
+                   "speedup_x": 13.8},
+                  {"tier": "throughput", "mode": "scalar",
+                   "workers": 1024, "sim_throughput_rps": 72.0}],
     }
     s = build_summary(results)
-    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 2
+    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 3
     assert s["slo_attainment"] == 0.97
     assert s["weighted_attainment"] == 0.95
     assert s["hetero_per_worker_attainment"] == 0.76
@@ -460,5 +468,9 @@ def test_bench_summary_schema():
     assert s["tiered_evict_ttft_attainment"] == 0.957
     assert s["tiered_prefix_ttft_attainment"] == 0.996
     assert s["tiered_prefix_hit_rate"] == 0.958
+    # throughput tier: largest-scale vectorized row wins
+    assert s["sim_throughput_rps"] == 1000.0
+    assert s["sim_throughput_workers"] == 1024
+    assert s["sim_throughput_speedup"] == 13.8
     assert s["ttft_p90_s"] > 0 and s["tpot_p90_s"] > 0
     assert s["mean_step_s"] > 0 and s["n_requests"] > 0

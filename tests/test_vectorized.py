@@ -1,0 +1,221 @@
+"""Vectorized scheduler hot path: batched-vs-scalar numerical parity.
+
+The vectorized dispatch path exists purely as an optimization — every
+array evaluation must be bit-for-bit identical to the scalar reference
+(same IEEE-754 operations in the same association order), so the
+fixed-seed decision streams of the two paths can never diverge. These
+tests pin that contract at both layers:
+
+* property-style grids over the ``predict_*_batch`` entry points against
+  per-element scalar calls — across heterogeneous ``HardwareSpec``s,
+  bucketed γ ``InterferenceTable``s, and warmed ``OnlinePredictor`` EWMA
+  states;
+* end-to-end fixed-seed runs (single-class, 2-class mixture, hetero +
+  online calibration) asserting the recorded decision streams match
+  exactly between ``build_cluster(..., vectorized=True)`` and the scalar
+  reference.
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import MODEL, WORKER, clone_trace, cost_model, \
+    make_trace
+from repro.configs import get_config
+from repro.core.predictor import (AnalyticalPredictor, BiasedPredictor,
+                                  OnlinePredictor)
+from repro.perf.hardware import InterferenceTable, V5E, WorkerSpec, \
+    gamma_at, gamma_at_batch
+from repro.perf.predictor import ClusterPredictor
+from repro.serving.costmodel import CostModel
+from repro.serving.simulator import build_cluster
+
+GAMMA_TABLE = InterferenceTable(
+    decode_edges=(0, 8, 32), chunk_edges=(0, 512, 2048),
+    gamma=((0.0, 0.05, 0.12), (0.03, 0.10, 0.22), (0.08, 0.18, 0.35)))
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return cost_model()
+
+
+@pytest.fixture(scope="module")
+def gamma_cost():
+    hw = dataclasses.replace(V5E, interference=GAMMA_TABLE)
+    return CostModel(get_config(MODEL), WorkerSpec(tp=8, hw=hw))
+
+
+def _grid(rng, n=64):
+    """Mixed-phase argument grid with deliberate zeros/edge rows."""
+    nd = rng.integers(0, 48, n)
+    nd[:8] = 0                                    # pure-prefill rows
+    sc = np.where(nd > 0, nd * rng.integers(64, 4096, n), 0.0).astype(float)
+    pt = rng.integers(0, 4096, n)
+    pt[8:16] = 0                                  # pure-decode rows
+    pt[:4] = 0                                    # fully idle rows
+    off = rng.integers(0, 2048, n).astype(float)
+    return nd, sc, pt, off
+
+
+# --------------------------------------------------- cost-model batch lanes
+
+def test_iteration_time_batch_matches_scalar(gamma_cost):
+    rng = np.random.default_rng(0)
+    nd, sc, pt, off = _grid(rng)
+    got = gamma_cost.iteration_time_batch(nd.astype(float), sc,
+                                          pt.astype(float), off)
+    for i in range(nd.size):
+        want = gamma_cost.iteration_time(int(nd[i]), float(sc[i]),
+                                         int(pt[i]), float(off[i]))
+        assert got[i] == want, (i, nd[i], sc[i], pt[i], off[i])
+
+
+def test_uniform_phase_fast_lanes_match_scalar(gamma_cost):
+    """Scalar-zero ``n_decode`` / ``prefill_tokens`` take the dedicated
+    fast lanes; their outputs must still be bit-identical."""
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 8192, 48)
+    offs = rng.integers(0, 4096, 48).astype(float)
+    got = gamma_cost.iteration_time_batch(0, 0.0, toks.astype(float), offs)
+    for i in range(toks.size):
+        assert got[i] == gamma_cost.iteration_time(0, 0.0, int(toks[i]),
+                                                   float(offs[i]))
+    nd = rng.integers(0, 64, 48)
+    sc = (nd * rng.integers(128, 4096, 48)).astype(float)
+    got = gamma_cost.iteration_time_batch(nd.astype(float), sc)
+    for i in range(nd.size):
+        assert got[i] == gamma_cost.iteration_time(int(nd[i]), float(sc[i]))
+
+
+def test_interference_penalty_batch_matches_scalar(gamma_cost):
+    rng = np.random.default_rng(2)
+    nd, sc, pt, off = _grid(rng)
+    got = gamma_cost.interference_penalty_batch(nd.astype(float), sc,
+                                               pt.astype(float), off)
+    for i in range(nd.size):
+        want = gamma_cost.interference_penalty(int(nd[i]), float(sc[i]),
+                                               int(pt[i]), float(off[i]))
+        assert got[i] == want, (i, nd[i], pt[i])
+
+
+def test_gamma_at_batch_matches_scalar_on_bucket_edges():
+    """γ lookups exactly on, below, and above every bucket edge resolve
+    to the same cell as the scalar ``bisect`` path."""
+    probes = [0, 1, 7, 8, 9, 31, 32, 33, 100]
+    chunks = [0, 1, 511, 512, 513, 2047, 2048, 2049, 10000]
+    n = np.array([float(p) for p in probes for _ in chunks])
+    p = np.array([float(c) for _ in probes for c in chunks])
+    got = gamma_at_batch(GAMMA_TABLE, n, p)
+    for i in range(n.size):
+        assert got[i] == gamma_at(GAMMA_TABLE, n[i], p[i]), (n[i], p[i])
+    # scalar-γ (degenerate table) and plain-float specs resolve too
+    assert np.all(gamma_at_batch(0.25, n, p) == 0.25)
+
+
+# ------------------------------------------------------- predictor parity
+
+def _assert_batch_matches_scalar(pred, wids, nd, sc, pt, off):
+    toks = pt.astype(np.int64)
+    got_p = pred.predict_prefill_batch(wids, toks, off.astype(np.int64))
+    got_d = pred.predict_decode_iter_batch(wids, nd, sc)
+    got_i = pred.predict_interference_batch(wids, nd, sc, toks, off)
+    for i, w in enumerate(wids):
+        assert got_p[i] == pred.predict_prefill(
+            int(toks[i]), int(off[i]), wid=w)
+        assert got_d[i] == pred.predict_decode_iter(
+            int(nd[i]), float(sc[i]), wid=w)
+        assert got_i[i] == pred.predict_interference(
+            int(nd[i]), float(sc[i]), int(toks[i]), float(off[i]), wid=w)
+
+
+def test_analytical_predictor_batch_parity(gamma_cost):
+    rng = np.random.default_rng(3)
+    nd, sc, pt, off = _grid(rng)
+    pred = AnalyticalPredictor(gamma_cost, safety=1.1)
+    _assert_batch_matches_scalar(pred, [None] * nd.size, nd, sc, pt, off)
+
+
+def test_cluster_predictor_hetero_batch_parity(gamma_cost):
+    """Heterogeneous hardware: each row prices on its own worker's spec,
+    including a 1.7x straggler, a smaller TP slice, and a γ table."""
+    cfg = get_config(MODEL)
+    costs = {
+        0: CostModel(cfg, WORKER),
+        1: CostModel(cfg, WorkerSpec(tp=8, hw=V5E.slowed(1.7))),
+        2: CostModel(cfg, WorkerSpec(tp=4)),
+        3: gamma_cost,
+    }
+    pred = ClusterPredictor(costs, safety=1.1)
+    rng = np.random.default_rng(4)
+    nd, sc, pt, off = _grid(rng)
+    wids = [int(w) if w >= 0 else None
+            for w in rng.integers(-1, 4, nd.size)]
+    _assert_batch_matches_scalar(pred, wids, nd, sc, pt, off)
+
+
+def test_online_predictor_warmed_ewma_batch_parity(gamma_cost):
+    """The EWMA-corrected scales must gather identically into the batch
+    path after real observations have moved them off 1.0."""
+    pred = OnlinePredictor(BiasedPredictor(gamma_cost, 1.6))
+    truth = gamma_cost
+    for k in range(25):
+        pred.observe_prefill(1024 + 64 * k, 0,
+                             truth.prefill_time(1024 + 64 * k))
+        pred.observe_decode(8 + k, (8 + k) * 1500.0,
+                            truth.decode_iter_time(8 + k, (8 + k) * 1500.0))
+    assert pred.prefill_scale != 1.0 and pred.decode_scale != 1.0
+    rng = np.random.default_rng(5)
+    nd, sc, pt, off = _grid(rng)
+    _assert_batch_matches_scalar(pred, [None] * nd.size, nd, sc, pt, off)
+
+
+# ------------------------------------------- end-to-end decision parity
+
+def _decisions(policy, trace, vectorized, n_workers, **kw):
+    sim, _ = build_cluster(get_config(MODEL), policy, n_workers=n_workers,
+                           worker_spec=WORKER, record_decisions=True,
+                           vectorized=vectorized, **kw)
+    sim.add_trace(clone_trace(trace))
+    m = sim.run()
+    return sim.decisions, m
+
+
+def _assert_run_parity(policy, trace, n_workers=8, **kw):
+    da, ma = _decisions(policy, trace, False, n_workers, **kw)
+    db, mb = _decisions(policy, trace, True, n_workers, **kw)
+    assert len(da) == len(db)
+    for i, (x, y) in enumerate(zip(da, db)):
+        assert x == y, f"decision {i} diverged: {x} vs {y}"
+    assert ma.slo_attainment == mb.slo_attainment
+
+
+def test_decision_parity_tropical(cost):
+    trace = make_trace(2.5, 30.0, cost, seed=5)
+    _assert_run_parity("tropical", trace)
+
+
+def test_decision_parity_mixture_two_classes(cost):
+    """2-class SLO mixture: class-aware queue ordering, per-class floors,
+    and the multiplex admission gates all stay in lockstep."""
+    from repro.launch.serve import _classes_scenario, parse_slo_classes
+    classes = parse_slo_classes(
+        "interactive:scale=3,weight=2,frac=0.6;batch:scale=9,frac=0.4")
+    scenario = _classes_scenario(classes, cost)
+    trace = scenario.generate(2.0, 30.0, cost, seed=7)
+    _assert_run_parity("tropical", trace, n_workers=4)
+
+
+def test_decision_parity_hetero_online(cost):
+    """Heterogeneous specs + online EWMA calibration: per-worker batch
+    grouping and the calibrated scale gathers stay bit-identical."""
+    specs = [WORKER, WorkerSpec(tp=8, hw=V5E.slowed(1.7)),
+             WORKER, WorkerSpec(tp=4)]
+    trace = make_trace(2.0, 25.0, cost, seed=5)
+    _assert_run_parity("tropical", trace, n_workers=4,
+                       worker_specs=specs, online_predictor=True)
