@@ -42,9 +42,9 @@ def maybe_profile(enabled: bool, top: int = 25):
         print(f"# --profile: top {top} by cumulative time", file=sys.stderr)
         stats.print_stats(top)
 
-SUMMARY_SCHEMA_VERSION = 3   # v3: sim_throughput_rps (vectorized-scheduler
-                             # scale tier); additive over v2 (fig_tiered
-                             # headline keys)
+SUMMARY_SCHEMA_VERSION = 4   # v4: sim_engine_rps (engine-bound scale tier,
+                             # array-native engine bookkeeping); additive
+                             # over v3 (sim_throughput_rps)
 REF_RATE = 2.0
 
 
@@ -108,6 +108,16 @@ def build_summary(results: dict[str, list[dict]],
         summary["sim_throughput_rps"] = best["sim_throughput_rps"]
         summary["sim_throughput_workers"] = best["workers"]
         summary["sim_throughput_speedup"] = best["speedup_x"]
+    # engine-bound tier (decode-heavy long-output): the fast engine
+    # bookkeeping path's gated number, same *_rps key class
+    eng_rows = [r for r in results.get("scale", [])
+                if r.get("tier") == "engine"
+                and r.get("mode") == "vectorized"]
+    if eng_rows:
+        best = max(eng_rows, key=lambda r: r["workers"])
+        summary["sim_engine_rps"] = best["sim_throughput_rps"]
+        summary["sim_engine_workers"] = best["workers"]
+        summary["sim_engine_speedup"] = best["speedup_x"]
     m, mean_step = _canonical_run(ref_rate)
     summary.update(
         ttft_p90_s=round(m.ttft_p90, 4),
@@ -160,7 +170,8 @@ def main(argv=None) -> None:
         if args.quick else fig_interference.main,
         "scale": (lambda: scale.main(
             scales=[(4, 4.0), (16, 16.0)], duration=60.0,
-            throughput_scales=scale.THROUGHPUT_SCALES_QUICK))
+            throughput_scales=scale.THROUGHPUT_SCALES_QUICK,
+            engine_scales=scale.ENGINE_SCALES))
         if args.quick else scale.main,
         "predictor_noise": (lambda: predictor_noise.main(quick=True))
         if args.quick else predictor_noise.main,

@@ -53,6 +53,16 @@ DISPATCH_HEAVY = TraceProfile(
     tail_frac=0.02, out_median=4.0, out_sigma=0.3,
     min_output=2, max_output=8)
 
+# engine tier: decode-heavy long-output workload, so per-iteration engine
+# bookkeeping (completion effects + view refresh over large decode
+# batches) — not dispatch — dominates each request's simulation cost.
+# This is the regime the SoA fast path exists for.
+ENGINE_SCALES = [(1024, 512.0, 4.0)]
+ENGINE_HEAVY = TraceProfile(
+    name="engine-heavy", body_median=96.0, body_sigma=0.5,
+    tail_frac=0.0, out_median=192.0, out_sigma=0.3,
+    min_output=96, max_output=384)
+
 
 def _attainment_run(cm, pol, n_workers, trace, duration,
                     rebalance_config=None):
@@ -116,17 +126,19 @@ def _throughput_run(trace, n_workers, vectorized):
     return m, time.perf_counter() - t0
 
 
-def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2) -> list[dict]:
-    """Vectorized-vs-scalar sim throughput. The vectorized measurement is
-    best-of-``repeats`` (it is the gated number and short enough to
-    repeat; the scalar baseline runs once). Both modes replay clones of
-    one master trace, so the decision streams — and therefore the
-    attainment columns — are identical by construction."""
+def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2, *,
+                    tier="throughput",
+                    profile=DISPATCH_HEAVY) -> list[dict]:
+    """Vectorized-vs-scalar sim throughput on ``profile``. The vectorized
+    measurement is best-of-``repeats`` (it is the gated number and short
+    enough to repeat; the scalar baseline runs once). Both modes replay
+    clones of one master trace, so the decision streams — and therefore
+    the attainment columns — are identical by construction."""
     cm = cost_model()
     rows = []
     for n_workers, rate, duration in scales:
         trace = generate_trace(rate=rate, duration=duration, cost_model=cm,
-                               seed=5, profile=DISPATCH_HEAVY,
+                               seed=5, profile=profile,
                                fixed_slo=fixed_slo(cm))
         walls = {}
         for mode, vec in (("scalar", False), ("vectorized", True)):
@@ -137,7 +149,7 @@ def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2) -> list[dict]:
                 best = wall if best is None else min(best, wall)
             walls[mode] = best
             row = {
-                "tier": "throughput", "mode": mode,
+                "tier": tier, "mode": mode,
                 "workers": n_workers, "rate": rate,
                 "requests": m.n_total,
                 "slo_attainment": round(m.slo_attainment, 3),
@@ -151,11 +163,21 @@ def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2) -> list[dict]:
     return rows
 
 
+def engine_tier(scales=ENGINE_SCALES, repeats=2) -> list[dict]:
+    """Engine-bound tier: same harness, decode-heavy workload. The
+    largest scale's vectorized ``sim_throughput_rps`` is what
+    ``benchmarks.run --quick`` records as ``sim_engine_rps``."""
+    return throughput_tier(scales, repeats, tier="engine",
+                           profile=ENGINE_HEAVY)
+
+
 def main(scales=SCALES, duration=DURATION,
          throughput_scales=THROUGHPUT_SCALES,
+         engine_scales=ENGINE_SCALES,
          throughput_only=False) -> list[dict]:
     rows = [] if throughput_only else attainment_tier(scales, duration)
     rows += throughput_tier(throughput_scales)
+    rows += engine_tier(engine_scales)
     emit("scale", rows)
     return rows
 

@@ -50,7 +50,10 @@ SLOSpec = SLOClass
 # equality check in the stack compares the same live object, and identity
 # comparison keeps hot ``in``-list checks O(1) per element instead of a
 # 25-field structural compare (it also restores hashability).
-@dataclasses.dataclass(eq=False)
+# ``slots=True``: the engine reads/writes these fields millions of times
+# per simulated minute; slot access skips the per-instance __dict__ and
+# shrinks each request by ~100 bytes at 100k-request trace scale.
+@dataclasses.dataclass(eq=False, slots=True)
 class Request:
     rid: int
     arrival_time: float

@@ -208,6 +208,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="keep the legacy dispatch-count role review "
                          "instead of windowed-attainment rebalancing")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--reference", action="store_true",
+                    help="run the scalar reference scheduler/engine "
+                         "instead of the vectorized fast paths (decisions "
+                         "and metrics are bit-identical; this is the "
+                         "parity baseline, ~2-10x slower)")
     ap.add_argument("--profile", action="store_true",
                     help="run the simulation under cProfile; print the "
                          "top-25 cumulative-time entries to stderr")
@@ -274,7 +279,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         online_predictor=args.online_predictor,
         recalibrate_every=args.recalibrate_every,
         role_rebalance=False if args.no_rebalance else "auto",
-        host_kv_gb=args.host_kv_gb, prefix_cache=args.prefix_cache)
+        host_kv_gb=args.host_kv_gb, prefix_cache=args.prefix_cache,
+        vectorized=not args.reference)
     # one workload-source selection for both feeds: each leaf names the
     # (materialised, streaming) pair so --backend trace-replay can never
     # diverge from the default path on *which* workload runs

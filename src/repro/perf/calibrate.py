@@ -42,7 +42,12 @@ _MFU_FLOOR = 1e-6        # interpret-mode measurements stay valid fractions
 
 @dataclasses.dataclass(frozen=True)
 class KernelCalibration:
-    """What the calibration run measured (seconds + derived fractions)."""
+    """What the calibration run measured (seconds + derived fractions).
+
+    The ``gemm_*`` fields (0.0 when the GEMM pass is disabled) time the
+    full-layer dense forward — projections, MLP, unembed — so the blended
+    ``mfu_prefill``/``mfu_decode`` cover the MLP-dominated regime the
+    attention microkernels alone cannot see."""
     mfu_prefill: float
     mfu_decode: float
     bw_eff: float
@@ -52,6 +57,12 @@ class KernelCalibration:
     decode_flops: float
     decode_bytes: float
     device: str
+    gemm_prefill_seconds: float = 0.0
+    gemm_decode_seconds: float = 0.0
+    gemm_prefill_flops: float = 0.0
+    gemm_decode_flops: float = 0.0
+    mfu_gemm_prefill: float = 0.0
+    mfu_gemm_decode: float = 0.0
 
 
 def _clamp_frac(x: float) -> float:
@@ -122,14 +133,63 @@ def _decode_case(rng, dtype, batch: int, heads: int, head_dim: int,
             flops, nbytes)
 
 
+def _gemm_case(rng, dtype, seq: int, batch: int):
+    """Full-layer GEMM workload over the repo's own dense transformer
+    forward (``models/api``): a tiny 2-layer model whose prefill and
+    one-token decode are dominated by projections + MLP + unembed rather
+    than attention score math. Returns
+    ``(prefill_fn, prefill_flops, decode_fn, decode_flops)`` with the
+    canonical 2 · n_active flops/token accounting the cost model uses,
+    so the measured fraction is an apples-to-apples MFU."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.api import build
+    from repro.models.layers import ModelConfig
+    from repro.perf.model import build_cost_spec
+
+    cfg = ModelConfig(name="calib-gemm", family="dense", num_layers=2,
+                      d_model=128, num_heads=2, num_kv_heads=2, head_dim=64,
+                      d_ff=512, vocab_size=512)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    if dtype is not None:
+        params = jax.tree.map(
+            lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+            else a, params)
+    n_active = build_cost_spec(cfg).n_active
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    lengths = jnp.full((batch,), seq, jnp.int32)
+    cache0 = api.init_cache(batch, seq + 1)
+    prefill_jit = jax.jit(lambda p, c, t, l: api.prefill(p, c, t, l))
+    decode_jit = jax.jit(lambda p, c, t, l: api.decode(p, c, t, l))
+    _, cache1 = jax.block_until_ready(
+        prefill_jit(params, cache0, tokens, lengths))
+    step = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch,)),
+                       jnp.int32)
+    return (lambda: prefill_jit(params, cache0, tokens, lengths),
+            2.0 * n_active * batch * seq,
+            lambda: decode_jit(params, cache1, step, lengths),
+            2.0 * n_active * batch)
+
+
 def calibrate_hardware(hw: HardwareSpec = V5E, *,
                        seq: int = 256, heads: int = 4, head_dim: int = 64,
                        batch: int = 4, page_size: int = 16,
                        pages_per_seq: int = 8, repeats: int = 3,
                        interpret: Optional[bool] = None,
+                       gemm: bool = True,
                        ) -> tuple[HardwareSpec, KernelCalibration]:
     """Measure achieved MFU / bandwidth-efficiency of the real serving
     kernels and return ``hw`` with the measured constants substituted.
+
+    With ``gemm=True`` (default) the attention microkernel timings are
+    blended with a full-layer dense-forward GEMM pass, so the returned
+    MFU reflects the MLP-dominated regime a serving iteration actually
+    spends most of its flops in:
+
+        mfu = (attn_flops + gemm_flops) / ((t_attn + t_gemm) · peak)
 
     Shapes default small enough that interpret-mode (non-TPU) calibration
     finishes in seconds; on a TPU pass serving-sized shapes
@@ -156,11 +216,25 @@ def calibrate_hardware(hw: HardwareSpec = V5E, *,
     mfu_d = _clamp_frac(d_flops / (t_d * hw.peak_flops))
     bw_eff = _clamp_frac(d_bytes / (t_d * hw.hbm_bw))
 
+    gp_t = gd_t = gp_f = gd_f = mfu_gp = mfu_gd = 0.0
+    if gemm:
+        gp_fn, gp_f, gd_fn, gd_f = _gemm_case(rng, dtype, seq, batch)
+        gp_t = _time_fn(gp_fn, repeats)
+        gd_t = _time_fn(gd_fn, repeats)
+        mfu_gp = _clamp_frac(gp_f / (gp_t * hw.peak_flops))
+        mfu_gd = _clamp_frac(gd_f / (gd_t * hw.peak_flops))
+        # blended phase MFU: one combined workload, one combined clock
+        mfu_p = _clamp_frac((p_flops + gp_f) / ((t_p + gp_t) * hw.peak_flops))
+        mfu_d = _clamp_frac((d_flops + gd_f) / ((t_d + gd_t) * hw.peak_flops))
+
     cal = KernelCalibration(
         mfu_prefill=mfu_p, mfu_decode=mfu_d, bw_eff=bw_eff,
         prefill_seconds=t_p, decode_seconds=t_d,
         prefill_flops=p_flops, decode_flops=d_flops, decode_bytes=d_bytes,
-        device=device)
+        device=device,
+        gemm_prefill_seconds=gp_t, gemm_decode_seconds=gd_t,
+        gemm_prefill_flops=gp_f, gemm_decode_flops=gd_f,
+        mfu_gemm_prefill=mfu_gp, mfu_gemm_decode=mfu_gd)
     measured = dataclasses.replace(
         hw, name=f"{hw.name}-measured",
         mfu_prefill=mfu_p, mfu_decode=mfu_d, bw_eff=bw_eff)

@@ -220,6 +220,24 @@ class CostModel:
             return ctx * 0.5 + min(ctx, cap) * 0.5
         return float(ctx)
 
+    def state_token_delta_sum(self, ctx_new) -> float:
+        """Exact sum of ``state_tokens(c) - state_tokens(c - 1)`` over an
+        int64 array of post-step contexts — the engine's batched KV-growth
+        charge for one decode token per request. Every per-element delta
+        is 0.0 (constant-state), 1.0 (dense KV), or 0.5 (past a sliding
+        window's cap): dyadic values whose float64 accumulation is exact
+        at any magnitude this simulator reaches, so the batched sum lands
+        on the same bits as the scalar per-request loop regardless of
+        association order."""
+        spec = self.spec
+        if spec.kv_bytes_per_token <= 0:
+            return 0.0
+        cap = spec.ctx_cap
+        if cap is None:
+            return float(ctx_new.size)
+        inside = int(np.count_nonzero(ctx_new <= cap))
+        return inside * 1.0 + (ctx_new.size - inside) * 0.5
+
     # --------------------------------------------------------------- steps
     def _roofline(self, flops: float, bytes_: float, mfu: float) -> float:
         hw = self.worker.hw

@@ -87,6 +87,27 @@ class ClusterScheduler:
             h = self._handlers[kind] = getattr(self, f"_on_{kind}")
         h(now, payload)
 
+    def handle_batch(self, now: float, events) -> None:
+        """Process a same-timestamp run of ``(time, seq, kind, payload)``
+        heap tuples in order. Semantically identical to calling ``handle``
+        per event — coalescing exists so per-timestamp overhead (handler
+        lookup per same-kind run, the driver's pop/dispatch round-trips)
+        is paid once per batch; view-column syncs stay lazy/dirty-row so
+        they already collapse across the batch."""
+        handlers = self._handlers
+        i, m = 0, len(events)
+        while i < m:
+            kind = events[i][2]
+            h = handlers.get(kind)
+            if h is None:
+                h = handlers[kind] = getattr(self, f"_on_{kind}")
+            h(now, events[i][3])
+            j = i + 1
+            while j < m and events[j][2] == kind:
+                h(now, events[j][3])
+                j += 1
+            i = j
+
     def metrics(self) -> ServeMetrics:
         qt, bt = {}, {}
         counters = {"prefix_lookups": 0, "prefix_hits": 0,

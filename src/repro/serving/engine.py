@@ -6,6 +6,23 @@ It is executor-agnostic: ``compose_iteration`` returns the work description;
 the ClusterScheduler's ``ExecutionBackend`` (cost model or real JAX —
 ``repro.sched.backend``) supplies the duration; ``complete_iteration``
 applies state transitions + SLO bookkeeping.
+
+Fast mode (``build_cluster(vectorized=True)``) makes the per-iteration
+bookkeeping array-native and incremental:
+
+* ``RequestColumns`` — a structure-of-arrays mirror of the decode batch
+  (the ``ViewColumns`` discipline one layer down) so completion effects
+  (decode recording, KV footprint growth, blocked-time charging, finish
+  detection, page-growth filtering) run as numpy ops over the batch, with
+  scalar fallbacks only for the rows the masks flag;
+* incremental ``_refresh_view`` — queue tokens, per-class TPOT floors and
+  the prefix-span map are maintained as running aggregates at the mutation
+  sites instead of O(batch) rescans per event.
+
+The scalar path remains the reference: ``view_reference()`` recomputes
+every derived view field from scratch, and the fast path must match it —
+and the full decision stream / ``ServeMetrics`` — bit for bit
+(``tests/test_engine_fast.py``, ``tests/test_vectorized.py``).
 """
 from __future__ import annotations
 
@@ -15,11 +32,19 @@ from typing import Callable, Optional
 
 import math
 
+import numpy as np
+
 from repro.core.policies import BatchRule, Policy
 from repro.core.request import Phase, Request
 from repro.core.toggle import Role, WorkerView
 from repro.perf import CostModel
 from repro.serving.kvcache import PageAccountant, PrefixIndex
+
+# Decode batches below this run the scalar completion/refresh bodies even
+# in fast mode: numpy's fixed per-op cost (~µs) only amortises once the
+# loop it replaces has enough rows. The scalar body is the parity
+# reference, so the shortcut cannot change results, only wall clock.
+_VEC_MIN_BATCH = 8
 
 
 def _slack_key(now: float):
@@ -45,10 +70,73 @@ class IterationPlan:
     prefill_tokens: int
     prefill_ctx_offset: float
     exclusive_prefill: bool    # decode stalled behind prefill (interference)
+    # decode-batch membership version at compose time (fast mode): lets
+    # ``complete_iteration`` prove the SoA rows still ARE the planned batch
+    # and take the vector path; any admit/release/offload in between bumps
+    # the worker counter and the completion falls back to the scalar body
+    batch_version: int = -1
 
     @property
     def empty(self) -> bool:
         return self.n_decode == 0 and self.prefill_tokens == 0
+
+
+class RequestColumns:
+    """Structure-of-arrays mirror of one worker's decode batch: the
+    per-request scalars the completion hot path touches, as numpy columns
+    in ``decode_running``'s insertion order — which is exactly the plan
+    order ``compose_iteration`` captured, so masked results map back to
+    requests by row index.
+
+    The ``Request`` objects stay authoritative: the fast completion path
+    writes its array results straight back every iteration, so the mirror
+    never holds state the scalar fallbacks (preempt / offload / metrics)
+    can't see. Any membership change just sets ``dirty`` (batch-granular
+    analogue of ``ViewColumns``' per-row dirty set — decode batches are
+    small enough that a whole-batch rebuild beats row surgery); the next
+    reader rebuilds from the dict."""
+
+    __slots__ = ("reqs", "rids", "ctx", "gen", "rem_out", "decode_time",
+                 "tpot_slack", "tpot_slo", "cached_prefix", "pages_held",
+                 "n", "dirty")
+
+    def __init__(self) -> None:
+        self.reqs: list[Request] = []
+        self.rids: list[int] = []
+        self.ctx = np.empty(0, dtype=np.int64)
+        self.gen = np.empty(0, dtype=np.int64)
+        self.rem_out = np.empty(0, dtype=np.int64)
+        self.decode_time = np.empty(0, dtype=np.float64)
+        self.tpot_slack = np.empty(0, dtype=np.float64)
+        self.tpot_slo = np.empty(0, dtype=np.float64)
+        self.cached_prefix = np.empty(0, dtype=np.int64)
+        self.pages_held = np.empty(0, dtype=np.int64)
+        self.n = 0
+        self.dirty = True
+
+    def rebuild(self, decode_running: dict[int, Request],
+                pages: PageAccountant) -> None:
+        reqs = list(decode_running.values())
+        n = len(reqs)
+        self.reqs = reqs
+        self.rids = [r.rid for r in reqs]
+        self.ctx = np.fromiter((r.context_len for r in reqs), np.int64, n)
+        self.gen = np.fromiter((r.generated_tokens for r in reqs),
+                               np.int64, n)
+        self.rem_out = np.fromiter((r.remaining_output for r in reqs),
+                                   np.int64, n)
+        self.decode_time = np.fromiter((r.decode_time for r in reqs),
+                                       np.float64, n)
+        self.tpot_slack = np.fromiter((r.tpot_slack for r in reqs),
+                                      np.float64, n)
+        self.tpot_slo = np.fromiter((r.slo.tpot for r in reqs),
+                                    np.float64, n)
+        self.cached_prefix = np.fromiter((r.cached_prefix for r in reqs),
+                                         np.int64, n)
+        self.pages_held = np.fromiter((pages.held_pages(rid)
+                                       for rid in self.rids), np.int64, n)
+        self.n = n
+        self.dirty = False
 
 
 class Worker:
@@ -69,11 +157,10 @@ class Worker:
         self.pages = PageAccountant(cost.kv_capacity_pages(), cost.page_size,
                                     host_pages=host_pages)
         self.kv_preempt_watermark = kv_preempt_watermark
-        # fast mode (build_cluster(vectorized=True)): coalesce the per-event
-        # view rebuild into one refresh per completed iteration, use
-        # phase-only membership checks and the view's maintained decode
-        # context sum in place of O(batch) rescans. State transitions are
-        # identical — tests/test_vectorized.py pins decision parity.
+        # fast mode (build_cluster(vectorized=True)): incremental view
+        # refresh + array-shaped completion effects over RequestColumns.
+        # State transitions are identical — tests/test_vectorized.py and
+        # tests/test_engine_fast.py pin decision/metrics/view parity.
         self.fast = False
         self.prefix_cache = prefix_cache
         self.offload_gate = offload_gate
@@ -87,7 +174,10 @@ class Worker:
             host_free_pages=self.pages.host_total_pages,
         )
         self.prefill_queue: deque[Request] = deque()
-        self.decode_running: list[Request] = []
+        # insertion-ordered, keyed by rid: O(1) membership/removal where
+        # the old list paid O(batch) scans per event; iteration order is
+        # insertion order, i.e. exactly the old list order (plan parity)
+        self.decode_running: dict[int, Request] = {}
         self.preempted: list[Request] = []       # drained by the simulator
         # tiered-KV lifecycle (scheduler drains/advances these):
         # offload_started -> engine starts the worker->host flow;
@@ -97,6 +187,21 @@ class Worker:
         self.offloaded: dict[int, Request] = {}
         self.restoring: dict[int, Request] = {}
         self.busy = False
+        # incremental-view aggregates, maintained at the mutation sites in
+        # both modes (the slow path ignores them; keeping them mode-blind
+        # makes toggling ``fast`` mid-life safe in tests):
+        # exact queued-prefill token count (ints — no float drift)
+        self._q_tokens = 0
+        # per-class {tpot: live count} so the class floor map rebuilds
+        # from keys already in the batch instead of an O(batch) walk
+        self._floor_counts: dict[str, dict[float, int]] = {}
+        self._floors_cache: Optional[dict[str, float]] = {}
+        # bumped on every decode-batch membership change; plans carry the
+        # compose-time value so completion can prove row alignment
+        self._batch_version = 0
+        self._cols = RequestColumns()
+        # prefix-cache content version last mirrored into the view
+        self._prefix_seen = -1
         # metrics
         self.blocked_time: dict[int, float] = {}
         self.queue_times: dict[int, float] = {}
@@ -113,16 +218,51 @@ class Worker:
         self.pages_restored = 0
         self.pages_reprefilled = 0
 
+    # ---------------------------------------------------- batch bookkeeping
+    def _decode_add(self, req: Request) -> None:
+        self.decode_running[req.rid] = req
+        self._batch_version += 1
+        self._cols.dirty = True
+        counts = self._floor_counts.get(req.slo.name)
+        if counts is None:
+            counts = self._floor_counts[req.slo.name] = {}
+        tpot = req.slo.tpot
+        counts[tpot] = counts.get(tpot, 0) + 1
+        self._floors_cache = None
+
+    def _decode_discard(self, req: Request) -> bool:
+        if self.decode_running.pop(req.rid, None) is None:
+            return False
+        self._batch_version += 1
+        self._cols.dirty = True
+        # tolerant of direct decode_running inserts (test harnesses):
+        # missing entries just skip the floor aggregate — fast-mode runs
+        # always pair _decode_add/_decode_discard, and the view parity
+        # tests would surface any imbalance as a floor-map divergence
+        counts = self._floor_counts.get(req.slo.name)
+        tpot = req.slo.tpot
+        if counts is not None and tpot in counts:
+            left = counts[tpot] - 1
+            if left:
+                counts[tpot] = left
+            else:
+                del counts[tpot]
+                if not counts:
+                    del self._floor_counts[req.slo.name]
+        self._floors_cache = None
+        return True
+
     # ------------------------------------------------------------- admission
     def admit_prefill(self, req: Request, now: float) -> None:
         req.worker = self.wid
         self.prefill_queue.append(req)
+        self._q_tokens += req.remaining_prefill
         self._refresh_view()
 
     def admit_decode(self, req: Request, now: float) -> None:
         req.worker = self.wid
         req.phase = Phase.DECODING
-        self.decode_running.append(req)
+        self._decode_add(req)
         self._refresh_view()
 
     def admit_migrated(self, req: Request, now: float) -> bool:
@@ -161,7 +301,7 @@ class Worker:
                 budget -= take
         else:
             if rule.run_decode:
-                decode_reqs = list(self.decode_running)
+                decode_reqs = list(self.decode_running.values())
             if budget > 0 and self._has_admissible_prefill():
                 req = self._peek_admissible_prefill(now)
                 if req is not None and self._start_prefill(req, now):
@@ -182,6 +322,7 @@ class Worker:
             n_decode=len(decode_reqs), sum_ctx=sum_ctx,
             prefill_tokens=p_tokens, prefill_ctx_offset=ctx_off,
             exclusive_prefill=run_prefill_exclusively and bool(prefill_parts),
+            batch_version=self._batch_version if self.fast else -1,
         )
 
     def plan_duration(self, plan: IterationPlan) -> float:
@@ -210,59 +351,47 @@ class Worker:
         interference = max(0.0, duration - pure_decode)
         if plan.n_decode and plan.prefill_tokens > 0:
             self.interference_time += interference
-        fast = self.fast
-        for r in plan.decode_reqs:
-            # fast mode drops the list scan: every site that removes a
-            # request from decode_running sets its phase away from DECODING
-            # first, so the phase test alone is equivalent
-            if r.phase != Phase.DECODING or \
-                    (not fast and r not in self.decode_running):
-                continue        # evicted mid-compose (page preemption)
-            r.record_decode_iteration(duration)
-            # grow the token counter by the request's true footprint
-            # delta so release() — which frees state_tokens(ctx) — always
-            # balances: 1.0 for dense KV, 0.5 past a sliding window's
-            # cap, 0 for constant-state (rwkv/mamba, whose fixed state
-            # was pinned in full at admission). A flat += 1 leaked the
-            # difference on every finished request.
-            self.view.kv_used_tokens += \
-                self.cost.state_tokens(r.context_len) \
-                - self.cost.state_tokens(r.context_len - 1)
-            if plan.prefill_tokens > 0:
-                self.blocked_time[r.rid] = \
-                    self.blocked_time.get(r.rid, 0.0) + interference
-            if r.remaining_output == 0:
-                r.phase = Phase.FINISHED
-                r.finish_time = now
-                self.release(r, refresh=not fast)
-        # page growth for the tokens just written; evict newest decodes
-        # when the pool can't supply it, then enforce the watermark
-        for r in plan.decode_reqs:
-            if r.phase != Phase.DECODING or \
-                    (not fast and r not in self.decode_running):
-                continue
-            need = self._page_need(r.context_len, r.cached_prefix)
-            while not self.pages.reserve(r.rid, need):
-                if self._evict_prefix_lru():
-                    continue       # unreferenced cached prefixes go first
-                if not self._preempt_one(now, keep=r):
-                    self._preempt(r, now)      # nobody else to evict
-                    break
+        if self.fast and plan.n_decode >= _VEC_MIN_BATCH \
+                and plan.batch_version == self._batch_version:
+            # membership unchanged since compose: the SoA rows are exactly
+            # plan.decode_reqs, in order — take the vector path. Below
+            # the batch threshold the numpy fixed cost exceeds the loop
+            # it replaces, so small batches run the scalar body (which IS
+            # the reference — parity is free).
+            self._decode_effects_fast(plan, now, duration, interference)
+        else:
+            if self.fast and plan.n_decode:
+                # scalar fallback advanced the batch outside the SoA; a
+                # refresh between compose and now may have rebuilt (and
+                # clean-flagged) the mirror at the new version, so the
+                # version bump alone does not guarantee a re-pull
+                self._cols.dirty = True
+            self._decode_effects(plan, now, duration, interference)
         while self.pages.utilization > self.kv_preempt_watermark:
             if self._evict_prefix_lru():
                 continue
             if len(self.decode_running) <= 1 or not self._preempt_one(now):
                 break
         # decode requests stalled behind an exclusive prefill count as blocked
-        if plan.exclusive_prefill:
-            for r in self.decode_running:
+        if plan.exclusive_prefill and self.decode_running:
+            bt = self.blocked_time
+            for r in self.decode_running.values():
                 r.decode_time += duration
                 r.tpot_slack -= duration       # the stall burns slack
-                self.blocked_time[r.rid] = \
-                    self.blocked_time.get(r.rid, 0.0) + duration
+                bt[r.rid] = bt.get(r.rid, 0.0) + duration
+            # scalar mutation of batch members outside the SoA path: the
+            # mirror must re-pull before the next vector step reads it
+            self._cols.dirty = True
         # prefill side
+        fast = self.fast
         for req, tokens in plan.prefill_parts:
+            in_queue = req in self.prefill_queue
+            before = req.remaining_prefill
             req.prefilled_tokens += tokens
+            if in_queue:
+                # exact aggregate delta (remaining_prefill clamps at 0, so
+                # the delta is re-derived, not assumed equal to ``tokens``)
+                self._q_tokens -= before - req.remaining_prefill
             if req.remaining_prefill == 0:
                 req.record_first_token(now)
                 # the prefill's forward pass emitted token #1: charge its
@@ -284,10 +413,134 @@ class Worker:
                     self.release(req, refresh=not fast)
                 else:
                     finished_prefills.append(req)
-                if req in self.prefill_queue:
+                if in_queue:
                     self.prefill_queue.remove(req)
         self._refresh_view()
         return finished_prefills
+
+    def _decode_effects(self, plan: IterationPlan, now: float,
+                        duration: float, interference: float) -> None:
+        """Scalar reference for the decode-side completion effects: token
+        recording, KV footprint growth, blocked-time charging, finish
+        detection, then page growth for the tokens just written."""
+        running = self.decode_running
+        bt = self.blocked_time
+        mixed = plan.prefill_tokens > 0
+        for r in plan.decode_reqs:
+            if r.phase != Phase.DECODING or r.rid not in running:
+                continue        # evicted mid-compose (page preemption)
+            r.record_decode_iteration(duration)
+            # grow the token counter by the request's true footprint
+            # delta so release() — which frees state_tokens(ctx) — always
+            # balances: 1.0 for dense KV, 0.5 past a sliding window's
+            # cap, 0 for constant-state (rwkv/mamba, whose fixed state
+            # was pinned in full at admission). A flat += 1 leaked the
+            # difference on every finished request.
+            self.view.kv_used_tokens += \
+                self.cost.state_tokens(r.context_len) \
+                - self.cost.state_tokens(r.context_len - 1)
+            if mixed:
+                bt[r.rid] = bt.get(r.rid, 0.0) + interference
+            if r.remaining_output == 0:
+                r.phase = Phase.FINISHED
+                r.finish_time = now
+                self.release(r, refresh=not self.fast)
+        # page growth for the tokens just written; evict newest decodes
+        # when the pool can't supply it, then enforce the watermark
+        for r in plan.decode_reqs:
+            if r.phase != Phase.DECODING or r.rid not in running:
+                continue
+            need = self._page_need(r.context_len, r.cached_prefix)
+            while not self.pages.reserve(r.rid, need):
+                if self._evict_prefix_lru():
+                    continue       # unreferenced cached prefixes go first
+                if not self._preempt_one(now, keep=r):
+                    self._preempt(r, now)      # nobody else to evict
+                    break
+
+    def _decode_effects_fast(self, plan: IterationPlan, now: float,
+                             duration: float, interference: float) -> None:
+        """Array-native decode-side completion: the same effects as
+        ``_decode_effects``, as elementwise ops over ``RequestColumns``.
+        Bit-for-bit identical because every column op mirrors the scalar
+        recurrence's IEEE-754 association order, and the one cross-row
+        accumulation (the KV footprint delta) sums exactly-representable
+        dyadic values, where grouping cannot change the result. Rows the
+        masks flag (finished, page growth) fall back to the exact scalar
+        bodies in row (= plan) order.
+
+        One knowing divergence: rows that need no new pages skip the
+        no-op ``PageAccountant.reserve`` the scalar loop still issues, so
+        the accountant's advisory per-rid token watermark (feeding only
+        the ``fragmentation`` diagnostic) can read lower here. Decisions
+        never consume it."""
+        cols = self._cols
+        if cols.dirty:
+            cols.rebuild(self.decode_running, self.pages)
+        reqs = cols.reqs
+        # one decode token per request — the scalar recurrences of
+        # Request.record_decode_iteration, elementwise
+        cols.ctx += 1
+        cols.gen += 1
+        cols.rem_out -= 1
+        cols.decode_time += duration
+        cols.tpot_slack += cols.tpot_slo - duration
+        delta = self.cost.state_token_delta_sum(cols.ctx)
+        if delta:
+            self.view.kv_used_tokens += delta
+        if plan.prefill_tokens > 0:
+            bt = self.blocked_time
+            for rid in cols.rids:
+                bt[rid] = bt.get(rid, 0.0) + interference
+        # immediate writeback: Requests stay authoritative for every
+        # scalar consumer (preempt/offload victims, metrics, routing)
+        for r, d, t, g in zip(reqs, cols.decode_time.tolist(),
+                              cols.tpot_slack.tolist(), cols.gen.tolist()):
+            r.decode_time = d
+            r.tpot_slack = t
+            r.generated_tokens = g
+        done = None
+        if cols.rem_out.min() == 0:
+            done = np.nonzero(cols.rem_out == 0)[0]
+            for i in done.tolist():
+                r = reqs[i]
+                r.phase = Phase.FINISHED
+                r.finish_time = now
+                self.release(r, refresh=False)
+        # page growth: vector-filter the rows whose own reservation no
+        # longer covers their grown footprint, scalar-handle only those
+        spec = self.cost.spec
+        if spec.kv_bytes_per_token <= 0:
+            return          # constant-state: footprint pinned at admission
+        cap = spec.ctx_cap
+        ps = self.pages.page_size
+        if cap is None:
+            need_tok = np.maximum(cols.ctx - cols.cached_prefix, 0)
+        else:
+            st_ctx = cols.ctx * 0.5 + np.minimum(cols.ctx, cap) * 0.5
+            st_cached = cols.cached_prefix * 0.5 \
+                + np.minimum(cols.cached_prefix, cap) * 0.5
+            need_tok = np.ceil(
+                np.maximum(st_ctx - st_cached, 0.0)).astype(np.int64)
+        grow = -(-need_tok // ps) > cols.pages_held
+        if done is not None:
+            grow[done] = False
+        if not grow.any():
+            return
+        running = self.decode_running
+        for i in np.nonzero(grow)[0].tolist():
+            r = reqs[i]
+            if r.phase != Phase.DECODING or r.rid not in running:
+                continue        # evicted by an earlier victim this pass
+            need = self._page_need(r.context_len, r.cached_prefix)
+            while not self.pages.reserve(r.rid, need):
+                if self._evict_prefix_lru():
+                    continue
+                if not self._preempt_one(now, keep=r):
+                    self._preempt(r, now)
+                    break
+            else:
+                cols.pages_held[i] = self.pages.held_pages(r.rid)
 
     def release(self, req: Request, refresh: bool = True) -> None:
         """Free KV held by a finished/migrated request (both tiers), and
@@ -301,8 +554,7 @@ class Worker:
         if req.cached_prefix > 0 and self.prefix_cache is not None:
             self.prefix_cache.unref(req.prefix_key)
             req.cached_prefix = 0
-        if req in self.decode_running:
-            self.decode_running.remove(req)
+        self._decode_discard(req)
         if refresh:
             self._refresh_view()
 
@@ -326,7 +578,7 @@ class Worker:
         tier has room and the offload gate prices restore below re-prefill;
         falls back to eviction. Returns False when there is no eligible
         victim."""
-        for victim in reversed(self.decode_running):
+        for victim in reversed(self.decode_running.values()):
             if victim is not keep:
                 if self._try_offload(victim, now):
                     return True
@@ -362,7 +614,7 @@ class Worker:
                                                        victim.context_len))
         # a borrowed prefix ref stays held across the park: the cached span
         # must still be resident when the restore lands
-        self.decode_running.remove(victim)
+        self._decode_discard(victim)
         self.offloading[victim.rid] = victim
         self.offload_started.append(victim)
         return True
@@ -531,7 +783,12 @@ class Worker:
                 if entry is not None and span > 0:
                     entry.refs += 1
                     req.cached_prefix = span
+                    # the borrowed span never runs prefill compute: the
+                    # queued-token aggregate sheds it here (req is still
+                    # in the queue — starts only come from queue walks)
+                    before = req.remaining_prefill
                     req.prefilled_tokens = span
+                    self._q_tokens -= before - req.remaining_prefill
                     req.prefix_hits += 1
             req.prefill_start = now
             req.phase = Phase.PREFILLING
@@ -579,33 +836,118 @@ class Worker:
             - self.cost.state_tokens(entry.tokens))
         return True
 
-    def _refresh_view(self) -> None:
-        v = self.view
-        v.queued_prefill_tokens = sum(r.remaining_prefill
-                                      for r in self.prefill_queue)
-        v.queued_requests = len(self.prefill_queue)
-        v.decode_batch = len(self.decode_running)
-        v.decode_sum_ctx = float(sum(r.context_len
-                                     for r in self.decode_running))
-        base_iter = self.cost.decode_iter_time(v.decode_batch,
-                                               v.decode_sum_ctx) \
-            if self.decode_running else 0.0
-        v.min_tpot_slack = min(
-            (r.effective_slack(base_iter) for r in self.decode_running),
+    # ------------------------------------------------------------------ view
+    def view_reference(self) -> dict:
+        """Every derived view field, recomputed from scratch — the scalar
+        reference the fast incremental refresh must match bit for bit
+        after every event (``tests/test_engine_fast.py`` walks event
+        histories asserting exactly that)."""
+        decode = list(self.decode_running.values())
+        fields: dict = {
+            "queued_prefill_tokens": sum(r.remaining_prefill
+                                         for r in self.prefill_queue),
+            "queued_requests": len(self.prefill_queue),
+            "decode_batch": len(decode),
+            "decode_sum_ctx": float(sum(r.context_len for r in decode)),
+        }
+        base_iter = self.cost.decode_iter_time(
+            fields["decode_batch"], fields["decode_sum_ctx"]) \
+            if decode else 0.0
+        fields["min_tpot_slack"] = min(
+            (r.effective_slack(base_iter) for r in decode),
             default=float("inf"))
         floors: dict[str, float] = {}
-        for r in self.decode_running:
+        for r in decode:
             name = r.slo.name
             floors[name] = min(floors.get(name, float("inf")), r.slo.tpot)
-        v.decode_tpot_floor = floors
-        v.total_pages = self.pages.total_pages
-        v.free_pages = self.pages.free_pages
-        v.page_size = self.pages.page_size
-        v.host_total_pages = self.pages.host_total_pages
-        v.host_free_pages = self.pages.host_free_pages
+        fields["decode_tpot_floor"] = floors
+        fields["total_pages"] = self.pages.total_pages
+        fields["free_pages"] = self.pages.free_pages
+        fields["page_size"] = self.pages.page_size
+        fields["host_total_pages"] = self.pages.host_total_pages
+        fields["host_free_pages"] = self.pages.host_free_pages
         if self.prefix_cache is not None:
-            v.cached_prefixes = self.prefix_cache.spans()
-            v.prefix_hit_ewma = self.prefix_cache.hit_ewma
+            fields["cached_prefixes"] = self.prefix_cache.spans()
+            fields["prefix_hit_ewma"] = self.prefix_cache.hit_ewma
+        return fields
+
+    def _refresh_view(self) -> None:
+        if self.fast:
+            self._refresh_view_fast()
+            return
+        self.view.assign(**self.view_reference())
+
+    def _refresh_view_fast(self) -> None:
+        """Incremental refresh: running aggregates + SoA reductions in
+        place of ``view_reference``'s O(batch + queue) rescans. Values are
+        bit-identical: the queue/floor aggregates are exact integer /
+        min-structure maintenance, ``decode_sum_ctx`` is an exact int64
+        sum, and the slack reduction mirrors ``Request.effective_slack``'s
+        float ops elementwise before one order-free ``min``."""
+        running = self.decode_running
+        n = len(running)
+        if not n:
+            sum_ctx = 0.0
+            min_slack = float("inf")
+        elif n < _VEC_MIN_BATCH:
+            # small batch: the reference's own scalar recurrences, hand
+            # inlined (``Request.effective_slack``'s exact float ops, the
+            # same int context sum), straight off the live requests — no
+            # SoA rebuild, no numpy fixed cost. cols stays dirty; it
+            # re-pulls when the batch grows past the threshold.
+            ictx = 0
+            for r in running.values():
+                ictx += r.prompt_len + r.generated_tokens
+            sum_ctx = float(ictx)
+            base_iter = self.cost.decode_iter_time(n, sum_ctx)
+            min_slack = float("inf")
+            for r in running.values():
+                rem = r.output_len - r.prior_tokens - r.generated_tokens
+                if rem > 4:
+                    rem = 4
+                elif rem < 0:
+                    rem = 0
+                s = r.tpot_slack + max(0.0, r.slo.tpot - base_iter) * rem
+                if s < min_slack:
+                    min_slack = s
+        else:
+            cols = self._cols
+            if cols.dirty:
+                cols.rebuild(running, self.pages)
+            sum_ctx = float(np.sum(cols.ctx))
+            # memoized in fast mode — repeat signatures are dict hits
+            base_iter = self.cost.decode_iter_time(n, sum_ctx)
+            credit = np.maximum(0.0, cols.tpot_slo - base_iter) \
+                * np.minimum(cols.rem_out, 4)
+            min_slack = float(np.min(cols.tpot_slack + credit))
+        floors = self._floors_cache
+        if floors is None:
+            floors = self._floors_cache = {
+                name: min(counts)
+                for name, counts in self._floor_counts.items()}
+        pages = self.pages
+        view = self.view
+        set_ = object.__setattr__
+        set_(view, "queued_prefill_tokens", self._q_tokens)
+        set_(view, "queued_requests", len(self.prefill_queue))
+        set_(view, "decode_batch", n)
+        set_(view, "decode_sum_ctx", sum_ctx)
+        set_(view, "min_tpot_slack", min_slack)
+        set_(view, "decode_tpot_floor", floors)
+        set_(view, "total_pages", pages.total_pages)
+        set_(view, "free_pages", pages.free_pages)
+        set_(view, "page_size", pages.page_size)
+        set_(view, "host_total_pages", pages.host_total_pages)
+        set_(view, "host_free_pages", pages.host_free_pages)
+        pc = self.prefix_cache
+        if pc is not None:
+            if pc.version != self._prefix_seen:
+                self._prefix_seen = pc.version
+                set_(view, "cached_prefixes", pc.spans())
+            set_(view, "prefix_hit_ewma", pc.hit_ewma)
+        cols_mirror = view._cols
+        if cols_mirror is not None:
+            cols_mirror.dirty.add(view._row)
 
     # -------------------------------------------------------------- failure
     def fail(self, now: Optional[float] = None) -> list[Request]:
@@ -614,7 +956,7 @@ class Worker:
         parked/in-flight offloads are lost too, accounted exactly once
         (``offload_started`` entries are already in ``offloading``)."""
         self.view.alive = False
-        lost = list(self.prefill_queue) + list(self.decode_running) \
+        lost = list(self.prefill_queue) + list(self.decode_running.values()) \
             + list(self.offloading.values()) + list(self.offloaded.values()) \
             + list(self.restoring.values())
         self.prefill_queue.clear()
@@ -623,6 +965,11 @@ class Worker:
         self.offloading.clear()
         self.offloaded.clear()
         self.restoring.clear()
+        self._q_tokens = 0
+        self._floor_counts.clear()
+        self._floors_cache = {}
+        self._batch_version += 1
+        self._cols.dirty = True
         if self.prefix_cache is not None:
             self.prefix_cache.clear()   # entries died with the HBM
         self.view.kv_used_tokens = 0.0

@@ -218,6 +218,9 @@ class PrefixIndex:
         self.lookups = 0
         self.hits = 0
         self.hit_ewma = 0.0
+        # bumped on every change to the {key: tokens} content, so view
+        # refreshes can skip rebuilding ``spans()`` when nothing moved
+        self.version = 0
 
     # ---------------------------------------------------------------- query
     @property
@@ -257,6 +260,7 @@ class PrefixIndex:
         e = CachedPrefix(key=key, tokens=int(tokens), rid=-next(self._rids),
                          pages=int(pages), last_use=next(self._seq))
         self._entries[key] = e
+        self.version += 1
         return e
 
     def unref(self, key: int) -> None:
@@ -274,12 +278,15 @@ class PrefixIndex:
                 victim = e
         if victim is not None:
             del self._entries[victim.key]
+            self.version += 1
         return victim
 
     def clear(self) -> list[CachedPrefix]:
         """Drop every entry (worker failure: HBM content is gone)."""
         dropped = list(self._entries.values())
         self._entries.clear()
+        if dropped:
+            self.version += 1
         return dropped
 
 

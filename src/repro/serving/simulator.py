@@ -28,14 +28,10 @@ from repro.sched.rebalance import RebalanceConfig, RoleRebalancer
 from repro.serving.engine import Worker
 
 
-@dataclasses.dataclass(order=True)
-class _Event:
-    time: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)
-    payload: object = dataclasses.field(compare=False, default=None)
-
-
+# heap entries are plain tuples ``(time, seq, kind, payload)`` — the seq
+# counter is unique, so comparisons never reach kind/payload and the heap
+# skips dataclass dispatch entirely (this is the hottest allocation in a
+# large simulation)
 class Simulator:
     def __init__(self, workers: Sequence[Worker], policy: Policy,
                  duration_fn: Optional[Callable] = None,
@@ -62,7 +58,7 @@ class Simulator:
             record_decisions=record_decisions)
         self.sched.bind(self.push)
         self.now = 0.0
-        self._heap: list[_Event] = []
+        self._heap: list[tuple] = []
         self._seq = itertools.count()
         self.max_sim_time = float("inf")
         self._replay: Optional[TraceReplayBackend] = None
@@ -105,7 +101,7 @@ class Simulator:
 
     # ----------------------------------------------------------------- api
     def push(self, kind: str, time: float, payload=None) -> None:
-        heapq.heappush(self._heap, _Event(time, next(self._seq), kind, payload))
+        heapq.heappush(self._heap, (time, next(self._seq), kind, payload))
 
     def add_trace(self, requests: Sequence[Request]) -> None:
         for r in requests:
@@ -140,22 +136,46 @@ class Simulator:
 
     # ---------------------------------------------------------------- loop
     def run(self, until: Optional[float] = None) -> ServeMetrics:
+        """Drain the heap. Events sharing a timestamp are popped as one
+        batch and handed to ``ClusterScheduler.handle_batch`` (same-kind
+        runs share one handler dispatch). The total processing order is
+        identical to one-at-a-time pops: the batch is drained in seq
+        order, and any event a handler pushes at the *same* timestamp gets
+        a strictly higher seq than everything drained — the outer loop
+        re-drains it as the next batch, exactly where the one-at-a-time
+        loop would have popped it."""
         if until is not None:
             self.max_sim_time = until
-        while self._heap:
-            ev = heapq.heappop(self._heap)
-            if ev.time > self.max_sim_time:
+        heap = self._heap
+        pop = heapq.heappop
+        handle_batch = self.sched.handle_batch
+        max_t = self.max_sim_time
+        batch: list[tuple] = []
+        while heap:
+            t = heap[0][0]
+            if t > max_t:
                 break
-            self.now = ev.time
-            if ev.kind == "replay_next":
-                # driver-level streaming arrival: hand it to the scheduler,
-                # then pull the next one from the replay iterator
-                self.sched.handle("arrival", self.now, ev.payload)
-                nxt = self._replay.next_arrival()
-                if nxt is not None:
-                    self.push("replay_next", nxt[0], nxt[1])
-                continue
-            self.sched.handle(ev.kind, self.now, ev.payload)
+            self.now = t
+            batch.clear()
+            while heap and heap[0][0] == t:
+                batch.append(pop(heap))
+            i, m = 0, len(batch)
+            while i < m:
+                if batch[i][2] == "replay_next":
+                    # driver-level streaming arrival: hand it to the
+                    # scheduler, then pull the next from the replay
+                    # iterator (a same-t successor re-drains next round)
+                    self.sched.handle("arrival", t, batch[i][3])
+                    nxt = self._replay.next_arrival()
+                    if nxt is not None:
+                        self.push("replay_next", nxt[0], nxt[1])
+                    i += 1
+                    continue
+                j = i + 1
+                while j < m and batch[j][2] != "replay_next":
+                    j += 1
+                handle_batch(t, batch[i:j])
+                i = j
         return self.metrics()
 
     def metrics(self) -> ServeMetrics:

@@ -455,10 +455,15 @@ def test_bench_summary_schema():
                    "workers": 1024, "sim_throughput_rps": 1000.0,
                    "speedup_x": 13.8},
                   {"tier": "throughput", "mode": "scalar",
-                   "workers": 1024, "sim_throughput_rps": 72.0}],
+                   "workers": 1024, "sim_throughput_rps": 72.0},
+                  {"tier": "engine", "mode": "vectorized",
+                   "workers": 1024, "sim_throughput_rps": 155.0,
+                   "speedup_x": 3.2},
+                  {"tier": "engine", "mode": "scalar",
+                   "workers": 1024, "sim_throughput_rps": 49.0}],
     }
     s = build_summary(results)
-    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 3
+    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 4
     assert s["slo_attainment"] == 0.97
     assert s["weighted_attainment"] == 0.95
     assert s["hetero_per_worker_attainment"] == 0.76
@@ -472,5 +477,9 @@ def test_bench_summary_schema():
     assert s["sim_throughput_rps"] == 1000.0
     assert s["sim_throughput_workers"] == 1024
     assert s["sim_throughput_speedup"] == 13.8
+    # engine tier: same rule, its own keys
+    assert s["sim_engine_rps"] == 155.0
+    assert s["sim_engine_workers"] == 1024
+    assert s["sim_engine_speedup"] == 3.2
     assert s["ttft_p90_s"] > 0 and s["tpot_p90_s"] > 0
     assert s["mean_step_s"] > 0 and s["n_requests"] > 0

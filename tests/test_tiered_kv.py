@@ -121,14 +121,14 @@ def test_worker_offload_restore_lifecycle():
     req.phase = Phase.DECODING
     req.generated_tokens = 4
     assert w.pages.reserve(req.rid, req.context_len)
-    w.decode_running.append(req)
+    w.decode_running[req.rid] = req
     w.view.kv_used_tokens = float(req.context_len)
     held = w.pages.held_pages(req.rid)
 
     assert w._try_offload(req, now=1.0)
     assert req.phase == Phase.OFFLOADED and req.offloads == 1
     assert req.stall_start == 1.0
-    assert req not in w.decode_running
+    assert req.rid not in w.decode_running
     assert w.pages.used_pages == 0 and w.pages.host_used_pages == held
     assert w.drain_offload_started() == [req]
     assert w.drain_offload_started() == []      # drained exactly once
@@ -140,7 +140,7 @@ def test_worker_offload_restore_lifecycle():
     assert req.rid in w.restoring
     assert w.pages.used_pages == held and w.pages.host_used_pages == 0
     assert w.finish_restore(req, now=3.0)
-    assert req in w.decode_running and req.restores == 1
+    assert req.rid in w.decode_running and req.restores == 1
     # the whole parked interval charged as inter-token latency
     assert req.decode_time == pytest.approx(2.0)
     assert req.stall_start is None
@@ -157,7 +157,7 @@ def test_worker_fail_mid_offload_counts_pages_exactly_once():
         r.phase = Phase.DECODING
         r.generated_tokens = 2
         assert w.pages.reserve(r.rid, r.context_len)
-        w.decode_running.append(r)
+        w.decode_running[r.rid] = r
     w.view.kv_used_tokens = float(a.context_len + b.context_len)
     assert w._try_offload(a, 1.0) and w._try_offload(b, 1.0)
     w.drain_offload_started()
@@ -181,7 +181,7 @@ def test_stale_restore_completion_after_fail_is_ignored():
     req = _req(prompt=2048)
     req.phase = Phase.DECODING
     assert w.pages.reserve(req.rid, req.context_len)
-    w.decode_running.append(req)
+    w.decode_running[req.rid] = req
     w.view.kv_used_tokens = float(req.context_len)
     assert w._try_offload(req, 1.0)
     w.drain_offload_started()
