@@ -6,10 +6,11 @@ tolerances:
 
   * attainment-like keys (fractions in [0, 1]) may not DROP by more than
     ``ATTAINMENT_DROP`` (2 points) — rises are always fine;
-  * latency/step-time keys (``*_s`` suffixes) may not REGRESS (grow) by
-    more than ``LATENCY_REGRESS`` (25%) — speedups are always fine;
-  * throughput keys (``*_rps`` suffixes) may not DROP by more than
-    ``RPS_DROP`` (20%) — improvements always pass;
+  * latency/step-time keys (``*_s``/``*_ms`` suffixes) may not REGRESS
+    (grow) by more than ``LATENCY_REGRESS`` (25%) — speedups are always
+    fine;
+  * throughput-like keys (``*_rps``/``*_speedup`` suffixes) may not DROP
+    by more than ``RPS_DROP`` (20%) — improvements always pass;
   * counters/config keys (``n_requests``, ``ref_rate``, ``schema_version``)
     must match exactly: a changed request count means the quick sweep
     itself changed, which is a snapshot refresh, not noise.
@@ -42,12 +43,14 @@ def classify(key: str, value) -> str:
     """'exact' | 'latency' | 'throughput' | 'attainment' | 'info'."""
     if key in EXACT_KEYS:
         return "exact"
-    if key.endswith("_s"):
+    # *_ms/*_s must classify before the [0, 1] heuristic: a fast enough
+    # real-executor step lands below 1.0 ms, and gating that as
+    # attainment would invert the direction of the tolerance
+    if key.endswith("_s") or key.endswith("_ms"):
         return "latency"
-    # *_rps must classify before the [0, 1] heuristic: a slow enough sim
-    # could report a sub-1.0 requests-per-second figure, and gating that
-    # as attainment would invert the direction of the tolerance
-    if key.endswith("_rps"):
+    # *_rps likewise: a slow enough sim could report a sub-1.0
+    # requests-per-second figure
+    if key.endswith("_rps") or key.endswith("_speedup"):
         return "throughput"
     if isinstance(value, (int, float)) and 0.0 <= float(value) <= 1.0:
         return "attainment"
@@ -72,14 +75,16 @@ def check(fresh: dict, snapshot: dict) -> list[str]:
             verdict = "ok" if old == new else "FAIL"
             lines.append(f"{verdict} {k}: {old!r} -> {new!r} (must match)")
         elif kind == "latency":
+            unit = "ms" if k.endswith("_ms") else "s"
             limit = old * (1.0 + LATENCY_REGRESS)
             verdict = "ok" if new <= limit else "FAIL"
-            lines.append(f"{verdict} {k}: {old:g}s -> {new:g}s "
-                         f"(limit {limit:g}s, +{LATENCY_REGRESS:.0%})")
+            lines.append(f"{verdict} {k}: {old:g}{unit} -> {new:g}{unit} "
+                         f"(limit {limit:g}{unit}, +{LATENCY_REGRESS:.0%})")
         elif kind == "throughput":
+            unit = "x" if k.endswith("_speedup") else "rps"
             limit = old * (1.0 - RPS_DROP)
             verdict = "ok" if new >= limit else "FAIL"
-            lines.append(f"{verdict} {k}: {old:g} -> {new:g} rps "
+            lines.append(f"{verdict} {k}: {old:g} -> {new:g} {unit} "
                          f"(floor {limit:g}, -{RPS_DROP:.0%})")
         elif kind == "attainment":
             limit = old - ATTAINMENT_DROP

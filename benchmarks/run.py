@@ -42,9 +42,9 @@ def maybe_profile(enabled: bool, top: int = 25):
         print(f"# --profile: top {top} by cumulative time", file=sys.stderr)
         stats.print_stats(top)
 
-SUMMARY_SCHEMA_VERSION = 4   # v4: sim_engine_rps (engine-bound scale tier,
-                             # array-native engine bookkeeping); additive
-                             # over v3 (sim_throughput_rps)
+SUMMARY_SCHEMA_VERSION = 5   # v5: real_step_ms + real_exec_speedup (batched
+                             # real-executor fast path, scale real_exec
+                             # tier); additive over v4 (sim_engine_rps)
 REF_RATE = 2.0
 
 
@@ -118,6 +118,16 @@ def build_summary(results: dict[str, list[dict]],
         summary["sim_engine_rps"] = best["sim_throughput_rps"]
         summary["sim_engine_workers"] = best["workers"]
         summary["sim_engine_speedup"] = best["speedup_x"]
+    # real-compute executor tier: per-iteration wall clock of the batched
+    # fast path (``*_ms`` latency class: check_summary.py fails growth
+    # beyond 25%) and its measured speedup over the scalar seed reference
+    # (``*_speedup`` throughput class: fails drops beyond 20%)
+    re_row = next((r for r in results.get("scale", [])
+                   if r.get("tier") == "real_exec"
+                   and r.get("mode") == "fast"), None)
+    if re_row:
+        summary["real_step_ms"] = re_row["step_ms"]
+        summary["real_exec_speedup"] = re_row["speedup_x"]
     m, mean_step = _canonical_run(ref_rate)
     summary.update(
         ttft_p90_s=round(m.ttft_p90, 4),

@@ -18,6 +18,12 @@ Two tiers:
   scalar row at the same scale; the largest scale's vectorized
   ``sim_throughput_rps`` is the number ``benchmarks.run --quick`` records
   in ``BENCH_summary.json`` for the CI perf gate.
+* **real_exec** — real JAX compute, not simulation: wall clock per
+  composed iteration of the batched donation-aware executor fast path vs
+  the scalar seed reference on a smoke model (CPU jit), with token
+  streams asserted bit-identical. Lands ``real_step_ms`` /
+  ``real_exec_speedup`` in the summary (``--real-exec-only`` runs just
+  this tier — the bench-weekly cProfile target).
 
 The master trace for each (rate, duration, seed) is generated once and
 every run receives a cheap replay clone (``common.clone_trace``) — the
@@ -171,13 +177,97 @@ def engine_tier(scales=ENGINE_SCALES, repeats=2) -> list[dict]:
                            profile=ENGINE_HEAVY)
 
 
+def _real_exec_drive(execs, rid_base: int, n_reqs=6, prompt=96, out=12,
+                     chunk=48):
+    """Deterministic smoke workload against one RealExecutor: admit up to
+    two chunked prefills per iteration while decoding every completed
+    request — the composed mixed-iteration regime the batched fast path
+    fuses. The admission logic never looks at token values, so seed and
+    fast runs execute identical plan sequences."""
+    from repro.core.request import Request, SLOSpec
+    from repro.serving.engine import IterationPlan
+
+    e = execs.execs[0]
+    slo = SLOSpec(ttft=30.0, tpot=5.0)
+    queue = [Request(rid=rid_base + i, arrival_time=0.0, prompt_len=prompt,
+                     output_len=out, slo=slo) for i in range(n_reqs)]
+    rids = [r.rid for r in queue]
+    admitted: list = []
+    iters = 0
+    while queue or admitted:
+        while queue and len(admitted) < e.max_slots and \
+                sum(1 for r in admitted
+                    if r.prefilled_tokens < prompt) < 2:
+            admitted.append(queue.pop(0))
+        prefill = []
+        for r in admitted:
+            if r.prefilled_tokens < prompt and len(prefill) < 2:
+                prefill.append((r, min(chunk, prompt - r.prefilled_tokens)))
+        decode = [r for r in admitted if r.prefilled_tokens >= prompt
+                  and len(e.generated[r.rid]) < out]
+        e.run_plan(IterationPlan(
+            decode_reqs=decode, prefill_parts=prefill, n_decode=len(decode),
+            sum_ctx=float(sum(r.prompt_len for r in decode)),
+            prefill_tokens=sum(t for _, t in prefill),
+            prefill_ctx_offset=0.0, exclusive_prefill=not decode))
+        for r, t in prefill:
+            r.prefilled_tokens += t
+        iters += 1
+        for r in [r for r in admitted if r.prefilled_tokens >= prompt
+                  and len(e.generated[r.rid]) >= out]:
+            admitted.remove(r)
+            execs.on_finish(r)
+    return iters, {rid: list(e.generated[rid]) for rid in rids}
+
+
+def real_exec_tier(cfg_name: str = "qwen2-1.5b") -> list[dict]:
+    """Seed vs fast real-compute wall clock per iteration at smoke scale
+    (CPU jit). Both modes share one cluster per mode (jit caches stay
+    warm), run the drive twice, and time the second pass; the fast row
+    carries ``speedup_x`` vs seed and is what ``benchmarks.run --quick``
+    records as ``real_step_ms`` / ``real_exec_speedup``. Token streams
+    are asserted bit-identical across modes — the fast path may not buy
+    its speed with different math."""
+    from repro.configs import get_smoke
+    from repro.serving.executor import ClusterRealExecutors
+
+    cfg = get_smoke(cfg_name)
+    rows, walls, streams = [], {}, {}
+    for mode, batched in (("seed", False), ("fast", True)):
+        execs = ClusterRealExecutors(cfg, 1, max_slots=8, max_len=128,
+                                     batched=batched)
+        _real_exec_drive(execs, rid_base=0)          # warm every jit entry
+        t0 = time.perf_counter()
+        iters, toks = _real_exec_drive(execs, rid_base=100)
+        wall = time.perf_counter() - t0
+        walls[mode] = wall / iters
+        streams[mode] = toks
+        row = {
+            "tier": "real_exec", "mode": mode, "model": cfg_name,
+            "iters": iters, "wall_s": round(wall, 3),
+            "step_ms": round(1000.0 * wall / iters, 3),
+        }
+        if mode == "fast":
+            row["speedup_x"] = round(walls["seed"] / max(walls["fast"],
+                                                         1e-12), 2)
+        rows.append(row)
+    assert streams["seed"] == streams["fast"], \
+        "fast path token streams diverged from the seed reference"
+    return rows
+
+
 def main(scales=SCALES, duration=DURATION,
          throughput_scales=THROUGHPUT_SCALES,
          engine_scales=ENGINE_SCALES,
-         throughput_only=False) -> list[dict]:
+         throughput_only=False, real_exec_only=False) -> list[dict]:
+    if real_exec_only:
+        rows = real_exec_tier()
+        emit("scale", rows)
+        return rows
     rows = [] if throughput_only else attainment_tier(scales, duration)
     rows += throughput_tier(throughput_scales)
     rows += engine_tier(engine_scales)
+    rows += real_exec_tier()
     emit("scale", rows)
     return rows
 
@@ -188,10 +278,15 @@ if __name__ == "__main__":
     ap.add_argument("--throughput-only", action="store_true",
                     help="skip the attainment sweep (CI scale-throughput "
                          "tier)")
+    ap.add_argument("--real-exec-only", action="store_true",
+                    help="run only the real-compute seed-vs-fast tier "
+                         "(the bench-weekly cProfile target)")
     a = ap.parse_args()
     if a.quick:
         main(scales=[(4, 4.0), (16, 16.0)], duration=60.0,
              throughput_scales=THROUGHPUT_SCALES_QUICK,
-             throughput_only=a.throughput_only)
+             throughput_only=a.throughput_only,
+             real_exec_only=a.real_exec_only)
     else:
-        main(throughput_only=a.throughput_only)
+        main(throughput_only=a.throughput_only,
+             real_exec_only=a.real_exec_only)

@@ -248,15 +248,44 @@ class MultiplexingToggle:
                 if w.alive and (role is None or w.role == role)]
 
     def chunk_for(self, w: WorkerView, tpot_slo: float) -> int:
-        """Prefill chunk size admissible on multiplexing worker ``w``."""
+        """Prefill chunk size admissible on multiplexing worker ``w``.
+
+        beyond-paper: size the chunk to the current slack budget (the
+        paper uses a fixed 2048 chunk). The cost of a candidate chunk
+        includes the §IV contention penalty (0.0 under γ=0): sizing by
+        the additive estimate alone would pick chunks the penalty then
+        pushes over budget — rejected outright by the admission gates
+        instead of shrunk to fit. Analytic predictors invert the budget
+        in closed form (``Predictor.chunk_candidates`` + one batched
+        verification); others bisect (``_chunk_for_bisect``)."""
         if not self.cfg.slack_chunking:
             return self.cfg.chunk_tokens
-        # beyond-paper: binary-search the largest chunk the current slack
-        # budget allows (paper uses a fixed 2048 chunk). The cost of a
-        # candidate chunk includes the §IV contention penalty (0.0 under
-        # γ=0): sizing by the additive estimate alone would pick chunks
-        # the penalty then pushes over budget — rejected outright by the
-        # admission gates instead of shrunk to fit.
+        cfg = self.cfg
+        lo, hi = cfg.min_chunk, cfg.chunk_tokens
+        budget = w.min_tpot_slack / cfg.slack_safety
+        ictx = int(w.decode_sum_ctx)
+        cand = self.predictor.chunk_candidates(
+            [w.wid], lo, hi, np.array([budget]),
+            np.array([float(w.decode_batch)]),
+            np.array([w.decode_sum_ctx]), np.array([float(ictx)]))
+        if cand is None:
+            return self._chunk_for_bisect(w, tpot_slo)
+        row = np.unique(cand[0])            # sorted; row[0] == lo
+        wids = [w.wid] * row.size
+        offs = np.full(row.size, ictx, dtype=np.int64)
+        t = self.predictor.predict_prefill_batch(wids, row, offs)
+        if w.decode_batch > 0:
+            t = t + self.predictor.predict_interference_batch(
+                wids, w.decode_batch, w.decode_sum_ctx, row, offs)
+        feas = t <= budget
+        if not feas[0]:     # the minimum chunk already busts the budget
+            return lo
+        return int(row[feas].max())
+
+    def _chunk_for_bisect(self, w: WorkerView, tpot_slo: float) -> int:
+        """Reference bisection for ``chunk_for``: the fallback for
+        predictors with no closed form, and the test-time cross-check the
+        closed-form path is pinned against (tests/test_vectorized.py)."""
         def chunk_cost(tokens: int) -> float:
             t = self.predictor.predict_prefill(tokens, int(w.decode_sum_ctx),
                                                wid=w.wid)
@@ -412,10 +441,51 @@ class MultiplexingToggle:
 
     def _chunk_for_vec(self, c: ViewColumns, gidx: np.ndarray,
                        tpot_slo: float) -> np.ndarray:
-        """``chunk_for`` for many workers: one lockstep masked binary
-        search. Rows converge at different interval lengths, so finished
-        rows (lo == hi) freeze under an active mask while the rest keep
-        bisecting; frozen rows re-price at ``lo`` (pure, discarded)."""
+        """``chunk_for`` for many workers. Analytic predictors invert the
+        slack budget in closed form: ``Predictor.chunk_candidates`` emits
+        every chunk size where feasibility can flip (quadratic roots of
+        the piecewise roofline+penalty cost, plus structural breakpoints)
+        and ONE batched cost evaluation over rows × candidates verifies
+        them — where the lockstep bisection issued ~12. Predictors with
+        no closed form fall back to ``_chunk_for_vec_bisect``."""
+        cfg = self.cfg
+        n = gidx.size
+        if not cfg.slack_chunking:
+            return np.full(n, cfg.chunk_tokens, dtype=np.int64)
+        sumctx = c.decode_sum_ctx[gidx]
+        ictx = sumctx.astype(np.int64)
+        batch = c.decode_batch[gidx]
+        lo, hi = cfg.min_chunk, cfg.chunk_tokens
+        budget = c.min_tpot_slack[gidx] / cfg.slack_safety
+        cand = self.predictor.chunk_candidates(
+            c.wid[gidx].tolist(), lo, hi, budget, batch.astype(np.float64),
+            sumctx, ictx.astype(np.float64))
+        if cand is None:
+            return self._chunk_for_vec_bisect(c, gidx, tpot_slo)
+        k = cand.shape[1]
+        toks = cand.ravel()
+        wrep = np.repeat(c.wid[gidx], k).tolist()
+        offs = np.repeat(ictx, k)
+        t = self.predictor.predict_prefill_batch(wrep, toks, offs)
+        has_b = batch > 0
+        if bool(has_b.any()):
+            t_int = self.predictor.predict_interference_batch(
+                wrep, np.repeat(batch, k), np.repeat(sumctx, k), toks, offs)
+            t = t + np.where(np.repeat(has_b, k), t_int, 0.0)
+        feas = (t <= np.repeat(budget, k)).reshape(n, k)
+        best = np.where(feas, cand, lo).max(axis=1)
+        # a row whose minimum chunk busts the budget returns min_chunk
+        # outright (bisection semantics); lo is always a candidate
+        lo_ok = np.where(cand == lo, feas, False).any(axis=1)
+        return np.where(lo_ok, best, lo).astype(np.int64)
+
+    def _chunk_for_vec_bisect(self, c: ViewColumns, gidx: np.ndarray,
+                              tpot_slo: float) -> np.ndarray:
+        """Reference lockstep masked binary search for ``_chunk_for_vec``
+        (fallback + test-time cross-check). Rows converge at different
+        interval lengths, so finished rows (lo == hi) freeze under an
+        active mask while the rest keep bisecting; frozen rows re-price
+        at ``lo`` (pure, discarded)."""
         cfg = self.cfg
         n = gidx.size
         if not cfg.slack_chunking:

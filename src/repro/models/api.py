@@ -60,8 +60,9 @@ def build(cfg: ModelConfig) -> ModelAPI:
             prefill=prefill_fn,
             decode=lambda p, c, t, l, ep=None: transformer.decode(p, c, t, l, cfg, ep=ep),
             loss=lambda p, batch, ep=None: transformer.lm_loss(p, batch, cfg, ep=ep),
-            prefill_chunk=lambda p, c, ch, st, ep=None: transformer.prefill_chunk(
-                p, c, ch, st, cfg, ep=ep),
+            prefill_chunk=lambda p, c, ch, st, ep=None, take=None:
+                transformer.prefill_chunk(p, c, ch, st, cfg, ep=ep,
+                                          take=take),
         )
     if fam == "rwkv":
         return ModelAPI(

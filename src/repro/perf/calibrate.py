@@ -134,19 +134,22 @@ def _decode_case(rng, dtype, batch: int, heads: int, head_dim: int,
 
 
 def _gemm_case(rng, dtype, seq: int, batch: int):
-    """Full-layer GEMM workload over the repo's own dense transformer
-    forward (``models/api``): a tiny 2-layer model whose prefill and
-    one-token decode are dominated by projections + MLP + unembed rather
-    than attention score math. Returns
-    ``(prefill_fn, prefill_flops, decode_fn, decode_flops)`` with the
-    canonical 2 · n_active flops/token accounting the cost model uses,
-    so the measured fraction is an apples-to-apples MFU."""
+    """Full-layer GEMM workload over the serving executor's own batched,
+    donation-aware entry points (``ExecutorKernels.prefill_fn`` /
+    ``decode_fn``): a tiny 2-layer dense model driven through the exact
+    slot-indexed jitted functions ``RealExecutor`` runs, so the measured
+    fraction prices the serving path — slot gather/scatter, bucket
+    padding and on-device sampling included — not a bespoke harness.
+    Returns ``(prefill_fn, prefill_flops, decode_fn, decode_flops)`` with
+    the canonical 2 · n_active flops/token accounting the cost model
+    uses, so the measured fraction is an apples-to-apples MFU."""
     import jax
     import jax.numpy as jnp
 
     from repro.models.api import build
     from repro.models.layers import ModelConfig
     from repro.perf.model import build_cost_spec
+    from repro.serving.executor import ExecutorKernels
 
     cfg = ModelConfig(name="calib-gemm", family="dense", num_layers=2,
                       d_model=128, num_heads=2, num_kv_heads=2, head_dim=64,
@@ -158,20 +161,36 @@ def _gemm_case(rng, dtype, seq: int, batch: int):
             lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
             else a, params)
     n_active = build_cost_spec(cfg).n_active
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    # +1 cache row so the decode write at position ``seq`` stays in bounds
+    kernels = ExecutorKernels(api, max_slots=batch, max_len=seq + 1)
+    state = {"cache": api.init_cache(batch, seq + 1)}
+    bucket = kernels.bucket_for(seq)
+    tokens = rng.integers(0, cfg.vocab_size, size=(batch, seq))
+    chunk = jnp.zeros((batch, bucket), jnp.int32).at[:, :seq].set(
+        jnp.asarray(tokens, jnp.int32))
+    slots = jnp.arange(batch, dtype=jnp.int32)
+    starts = jnp.zeros((batch,), jnp.int32)
+    takes = jnp.full((batch,), seq, jnp.int32)
+    pfn = kernels.prefill_fn(bucket, batch)
+
+    def prefill_call():
+        # thread the cache: donate_argnums consumes the argument buffer
+        toks, state["cache"] = pfn(params, state["cache"], chunk, slots,
+                                   starts, takes)
+        return toks
+
     lengths = jnp.full((batch,), seq, jnp.int32)
-    cache0 = api.init_cache(batch, seq + 1)
-    prefill_jit = jax.jit(lambda p, c, t, l: api.prefill(p, c, t, l))
-    decode_jit = jax.jit(lambda p, c, t, l: api.decode(p, c, t, l))
-    _, cache1 = jax.block_until_ready(
-        prefill_jit(params, cache0, tokens, lengths))
     step = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(batch,)),
                        jnp.int32)
-    return (lambda: prefill_jit(params, cache0, tokens, lengths),
-            2.0 * n_active * batch * seq,
-            lambda: decode_jit(params, cache1, step, lengths),
-            2.0 * n_active * batch)
+
+    def decode_call():
+        toks, state["cache"] = kernels.decode_fn(params, state["cache"],
+                                                 step, lengths)
+        return toks
+
+    jax.block_until_ready(prefill_call())    # decode times a filled cache
+    return (prefill_call, 2.0 * n_active * batch * seq,
+            decode_call, 2.0 * n_active * batch)
 
 
 def calibrate_hardware(hw: HardwareSpec = V5E, *,

@@ -203,6 +203,35 @@ class OnlinePredictor(Predictor):
         return self.base.predict_interference_batch(
             wids, n_decode, sum_ctx, prefill_tokens, ctx_offset)
 
+    def chunk_candidates(self, wids: Sequence[Optional[int]], lo: int,
+                         hi: int, budget, n_decode, sum_ctx, ctx_offset,
+                         s_mul=None) -> Optional[np.ndarray]:
+        """The EWMA scale on predict_prefill is piecewise constant over
+        the power-of-two size buckets, so the closed-form chunk inversion
+        stays exact: delegate to the base once per bucket segment of
+        [lo, hi] with that segment's per-row scale folded in via
+        ``s_mul``. Segment edges are structural breakpoints and each call
+        includes its own endpoints, so flips at a bucket boundary are
+        covered. (Candidate generation is pure arithmetic — the single
+        batched cost evaluation still happens in the caller.)"""
+        parts = []
+        a = int(lo)
+        while a <= int(hi):
+            b = min(int(hi), (1 << max(a, 1).bit_length()) - 1)
+            scales = np.array(
+                [self._scale_for("prefill", a, self.prefill_scale, w)
+                 for w in wids], dtype=np.float64)
+            mul = scales if s_mul is None \
+                else scales * np.asarray(s_mul, dtype=np.float64)
+            cand = self.base.chunk_candidates(
+                wids, a, b, budget, n_decode, sum_ctx, ctx_offset,
+                s_mul=mul)
+            if cand is None:
+                return None
+            parts.append(cand)
+            a = b + 1
+        return np.concatenate(parts, axis=1)
+
     # ------------------------------------------------------------- feedback
     def _ewma(self, scale: float, ratio: float) -> float:
         lo, hi = self.clip

@@ -559,6 +559,137 @@ class CostModel:
     def decode_iter_time_batch(self, n_decode, sum_ctx) -> np.ndarray:
         return self.iteration_time_batch(n_decode, sum_ctx)
 
+    # ------------------------------------------- slack-chunk inversion
+    def chunk_candidates(self, lo: int, hi: int, budget, n_decode, sum_ctx,
+                         ctx_offset, s_scale=1.0, q_scale=1.0) -> np.ndarray:
+        """Closed-form support for slack-sized prefill chunking: candidate
+        chunk sizes containing every integer where the admission cost
+
+            S·prefill_time(p, c) + Q·interference_penalty(n, sc, p, c)
+
+        can cross ``budget`` on ``[lo, hi]``. The cost is piecewise
+        quadratic in p: ``t_cp = a2·p² + a1·p`` (compute roofline),
+        ``t_mp = m1·p + m0`` (memory roofline incl. weights), and the §IV
+        penalty collapses per region — ``P·t_cp`` while the prefill-alone
+        time is the iteration minimum, ``P·t_d`` (constant) or
+        ``P·t_d·t_cp/t_mp`` (quadratic after clearing the linear
+        denominator) once it dominates — with P = Q·γ·β_d piecewise
+        constant over the γ table's chunk buckets. So every feasibility
+        flip sits at a quadratic root or at a structural breakpoint (γ
+        bucket edge, sliding-window cap crossing), all solved here in
+        closed form. Callers verify the candidates with ONE batched cost
+        evaluation and keep the largest feasible — replacing the lockstep
+        bisection loop (~12 batched evaluations) while returning the same
+        chunk wherever the cost is monotone in p (everywhere the model's
+        increasing rooflines make it so).
+
+        ``budget``/``n_decode``/``sum_ctx``/``ctx_offset``/``s_scale``
+        broadcast per row; ``q_scale`` is scalar. Returns (rows, K) int64
+        clipped to [lo, hi]; ``lo`` and ``hi`` are always included."""
+        bud0 = np.atleast_1d(np.asarray(budget, dtype=np.float64))
+        nd = np.asarray(n_decode, dtype=np.float64)
+        sc = np.asarray(sum_ctx, dtype=np.float64)
+        c = np.asarray(ctx_offset, dtype=np.float64)
+        S = np.asarray(s_scale, dtype=np.float64)
+        bud0, nd, sc, c, S = np.broadcast_arrays(bud0, nd, sc, c, S)
+        Q = float(q_scale)
+        s_ = self.spec
+        hw = self.worker.hw
+        comp = self.worker.peak_flops
+        mem = self.worker.hbm_bw * hw.bw_eff
+        F = comp * hw.mfu_prefill
+        # decode-alone constants (mirroring _interference): t_d and the
+        # memory-boundedness β_d do not depend on the chunk size
+        df_gemm = 2.0 * s_.n_active * nd
+        df_attn = s_.attn_flops_per_ctx_token * self._attn_ctx_batch(sc)
+        db_kv = s_.kv_bytes_per_token * self._attn_ctx_batch(sc)
+        db_state = s_.state_bytes * nd * 2
+        t_cd = (df_gemm + df_attn) / (comp * hw.mfu_decode)
+        t_md = (db_kv + db_state + self.params_bytes) / mem
+        t_d = np.maximum(t_cd, t_md)
+        live = (nd > 0) & (t_d > 0.0)
+        beta_d = np.where(live, t_md / np.where(t_d > 0.0, t_d, 1.0), 0.0)
+        t_d = np.where(live, t_d, 0.0)
+        # γ is piecewise constant over the table's chunk buckets: one
+        # penalty coefficient P per (row, chunk-cell)
+        interf = hw.interference
+        if isinstance(interf, InterferenceTable):
+            de = np.asarray(interf.decode_edges, dtype=np.float64)
+            row = np.maximum(np.searchsorted(de, nd, side="right") - 1, 0)
+            gam = np.asarray(interf.gamma, dtype=np.float64)[row]
+            edges = [float(e) for e in interf.chunk_edges]
+        else:
+            gam = np.full(nd.shape + (1,), float(interf))
+            edges = []
+        pen = Q * gam * beta_d[..., None]
+        # prefill rooflines per sliding-window regime:
+        #   t_cp = a2·p² + a1·p,  t_mp = m1·p + m0
+        attn = s_.attn_flops_per_ctx_token
+        kv = s_.kv_bytes_per_token
+        gemm = 2.0 * s_.n_active
+        cap = s_.ctx_cap
+        a_regimes = [(attn / 2.0 / F, (gemm + attn * c) / F)]
+        m_regimes = [(2.0 * kv / mem, (kv * c + self.params_bytes) / mem)]
+        if cap is not None:
+            a_regimes.append((attn / 4.0 / F,
+                              (gemm + attn * (c + cap) / 2.0) / F))
+            m_regimes.append((1.5 * kv / mem,
+                              (kv * (c + cap) / 2.0 + self.params_bytes)
+                              / mem))
+        bud = bud0 - S * hw.t_fixed
+        roots = []
+        with np.errstate(divide="ignore", invalid="ignore"):
+            for a2, a1 in a_regimes:
+                for j in range(pen.shape[-1]):
+                    P = pen[..., j]
+                    sp = S + P
+                    # compute-bound, penalty tracks t_cp: (S+P)·t_cp = bud
+                    roots.append(_quad_roots(
+                        a2, a1, -bud / np.where(sp > 0.0, sp, np.nan)))
+                    # compute-bound past t_d: S·t_cp + P·t_d = bud
+                    roots.append(_quad_roots(
+                        a2, a1,
+                        -(bud - P * t_d) / np.where(S > 0.0, S, np.nan)))
+                # region boundary t_cp = t_d
+                roots.append(_quad_roots(a2, a1, -t_d))
+                for m1, m0 in m_regimes:
+                    # region boundary t_cp = t_mp
+                    roots.append(_quad_roots(a2, a1 - m1, -m0))
+                    for j in range(pen.shape[-1]):
+                        P = pen[..., j]
+                        # memory-bound, penalty P·t_cp: S·t_mp + P·t_cp
+                        roots.append(_quad_roots(
+                            P * a2, S * m1 + P * a1, S * m0 - bud))
+                        # memory-bound past t_d: S·t_mp² + P·t_d·t_cp
+                        # − bud·t_mp = 0 (×t_mp clears the denominator)
+                        roots.append(_quad_roots(
+                            S * m1 * m1 + P * t_d * a2,
+                            2.0 * S * m1 * m0 + P * t_d * a1 - bud * m1,
+                            S * m0 * m0 - bud * m0))
+            for m1, m0 in m_regimes:
+                # region boundary t_mp = t_d (linear)
+                r = (t_d - m0) / (m1 if m1 != 0.0 else np.nan)
+                roots.append(np.stack([r, np.full_like(r, np.nan)],
+                                      axis=-1))
+        fl = np.floor(np.concatenate(roots, axis=-1))
+        cols = [fl - 1.0, fl, fl + 1.0, fl + 2.0]
+        # structural breakpoints: interval ends, γ bucket edges, and the
+        # per-row sliding-window crossings (KV at cap−c, attention midpoint
+        # at 2(cap−c))
+        fixed = [float(lo), float(hi)]
+        for e in edges:
+            fixed += [e - 1.0, e, e + 1.0]
+        cols.append(np.broadcast_to(np.asarray(fixed),
+                                    nd.shape + (len(fixed),)))
+        if cap is not None:
+            for bp in (cap - c, 2.0 * (cap - c)):
+                f = np.floor(bp)[..., None]
+                cols.append(np.concatenate([f - 1.0, f, f + 1.0, f + 2.0],
+                                           axis=-1))
+        cand = np.concatenate(cols, axis=-1)
+        cand = np.where(np.isfinite(cand), cand, float(lo))
+        return np.clip(cand, float(lo), float(hi)).astype(np.int64)
+
     # ----------------------------------------------------------- migration
     def kv_transfer_bytes(self, ctx_tokens: int) -> float:
         """Bytes of KV/state that must cross the ICI links to migrate a
@@ -601,6 +732,24 @@ class CostModel:
         if residue_tokens > 0:
             t += self.prefill_time(residue_tokens, ctx_offset=ctx_tokens)
         return t
+
+
+def _quad_roots(a, b, c) -> np.ndarray:
+    """Real roots of ``a·x² + b·x + c = 0``, elementwise over broadcast
+    arrays. Degenerate rows (a == 0) fall back to the linear root −c/b;
+    rows with no real root (or 0·x² + 0·x + c) yield NaN. Returns the
+    inputs' broadcast shape with a trailing axis of 2."""
+    a, b, c = np.broadcast_arrays(np.asarray(a, dtype=np.float64),
+                                  np.asarray(b, dtype=np.float64),
+                                  np.asarray(c, dtype=np.float64))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        disc = b * b - 4.0 * a * c
+        sq = np.sqrt(np.where(disc >= 0.0, disc, np.nan))
+        quad = a != 0.0
+        den = np.where(quad, 2.0 * a, 1.0)
+        r1 = np.where(quad, (-b - sq) / den, -c / np.where(b != 0.0, b, np.nan))
+        r2 = np.where(quad, (-b + sq) / den, np.nan)
+    return np.stack([r1, r2], axis=-1)
 
 
 def canonical_iteration_time(cost: IterationCostModel) -> float:

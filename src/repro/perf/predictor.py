@@ -118,6 +118,20 @@ class Predictor:
                          for w, b, s, p, o in zip(wids, nds, scs, pts, offs)],
                         dtype=np.float64)
 
+    # ------------------------------------------- slack-chunk inversion
+    def chunk_candidates(self, wids: Sequence[Optional[int]], lo: int,
+                         hi: int, budget, n_decode, sum_ctx, ctx_offset,
+                         s_mul=None) -> Optional[np.ndarray]:
+        """Closed-form slack-chunking support: per-row candidate chunk
+        sizes guaranteed to contain every integer on [lo, hi] where this
+        predictor's chunk cost (prefill + interference) can cross the
+        per-row ``budget`` — so the toggle verifies them with ONE batched
+        cost evaluation instead of a bisection loop. ``s_mul`` stacks an
+        extra per-row multiplier on the prefill estimate (the
+        OnlinePredictor's EWMA scale). None = no closed form available
+        (profiled/custom predictors); callers fall back to bisection."""
+        return None
+
 
 @dataclasses.dataclass
 class AnalyticalPredictor(Predictor):
@@ -167,6 +181,22 @@ class AnalyticalPredictor(Predictor):
             _col(n_decode, n), _col(sum_ctx, n), _col(prefill_tokens, n),
             _col(ctx_offset, n)) * self.safety
 
+    def _chunk_scales(self) -> tuple[float, float]:
+        """(prefill multiplier, penalty multiplier) this predictor applies
+        on top of the raw CostModel estimates — what the closed-form
+        chunk inversion must fold into its coefficients."""
+        return self.safety, self.safety
+
+    def chunk_candidates(self, wids: Sequence[Optional[int]], lo: int,
+                         hi: int, budget, n_decode, sum_ctx, ctx_offset,
+                         s_mul=None) -> Optional[np.ndarray]:
+        n = len(wids)
+        S, Q = self._chunk_scales()
+        s = S if s_mul is None else S * _col(s_mul, n)
+        return self.cost.chunk_candidates(
+            lo, hi, _col(budget, n), _col(n_decode, n), _col(sum_ctx, n),
+            _col(ctx_offset, n), s, Q)
+
 
 class BiasedPredictor(AnalyticalPredictor):
     """Systematically ``bias``×-miscalibrated analytical predictor — a
@@ -194,6 +224,11 @@ class BiasedPredictor(AnalyticalPredictor):
                                   n_decode, sum_ctx) -> np.ndarray:
         return super().predict_decode_iter_batch(wids, n_decode, sum_ctx) \
             * self.bias
+
+    def _chunk_scales(self) -> tuple[float, float]:
+        # the bias hits the additive prefill estimate only — interference
+        # is not overridden and keeps the base safety margin
+        return self.safety * self.bias, self.safety
 
 
 class ClusterPredictor(Predictor):
@@ -316,6 +351,30 @@ class ClusterPredictor(Predictor):
                 for i in idxs:
                     out[i] = 0.0 if penalty is None else \
                         penalty(nds[i], scs[i], pts[i], offs[i]) * self.safety
+        return out
+
+    def chunk_candidates(self, wids: Sequence[Optional[int]], lo: int,
+                         hi: int, budget, n_decode, sum_ctx, ctx_offset,
+                         s_mul=None) -> Optional[np.ndarray]:
+        n = len(wids)
+        bud, nd = _col(budget, n), _col(n_decode, n)
+        sc, off = _col(sum_ctx, n), _col(ctx_offset, n)
+        mul = None if s_mul is None else _col(s_mul, n)
+        got = []
+        for cost, idxs in self._groups(wids):
+            # any worker priced by a non-roofline model sinks the whole
+            # batch to bisection: mixed closed-form/bisected rows would
+            # split one arrival's pricing into several evaluations
+            if not isinstance(cost, CostModel):
+                return None
+            ii = np.asarray(idxs)
+            s = self.safety if mul is None else self.safety * mul[ii]
+            got.append((ii, cost.chunk_candidates(
+                lo, hi, bud[ii], nd[ii], sc[ii], off[ii], s, self.safety)))
+        width = max(cand.shape[1] for _, cand in got)
+        out = np.full((n, width), int(lo), dtype=np.int64)
+        for ii, cand in got:
+            out[ii, :cand.shape[1]] = cand
         return out
 
 

@@ -33,6 +33,24 @@ from repro.core.request import Request
 from repro.serving.engine import IterationPlan, Worker
 
 
+class SlotExhausted(RuntimeError):
+    """A backend ran out of per-worker KV slots for a new request.
+
+    Raised by ``RealExecutor._slot`` (and any backend with bounded
+    per-worker request state) BEFORE any compute runs, so the scheduler
+    can treat it as a dispatch refusal — requeue the request globally and
+    retry once a slot frees — rather than a crash. Carries the worker,
+    the refused request, and the capacity so the refusal is loggable."""
+
+    def __init__(self, wid: int, rid: int, max_slots: int):
+        super().__init__(
+            f"worker {wid}: no free KV slot for request {rid} "
+            f"(max_slots={max_slots})")
+        self.wid = wid
+        self.rid = rid
+        self.max_slots = max_slots
+
+
 @runtime_checkable
 class ExecutionBackend(Protocol):
     def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:

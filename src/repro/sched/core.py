@@ -29,7 +29,8 @@ from typing import Callable, Optional, Sequence
 from repro.core.metrics import ServeMetrics, compute_metrics
 from repro.core.policies import Policy
 from repro.core.request import Phase, Request
-from repro.sched.backend import CostModelBackend, ExecutionBackend
+from repro.sched.backend import CostModelBackend, ExecutionBackend, \
+    SlotExhausted
 from repro.sched.rebalance import RoleRebalancer
 from repro.serving.engine import IterationPlan, Worker, _slack_key
 from repro.serving.transfer import LinkSpec, host_node
@@ -182,9 +183,35 @@ class ClusterScheduler:
                 "iter", wid,
                 tuple(r.rid for r in plan.decode_reqs),
                 tuple((r.rid, t) for r, t in plan.prefill_parts)))
-        dur = self.backend.run_iteration(w, plan)
+        try:
+            dur = self.backend.run_iteration(w, plan)
+        except SlotExhausted as exc:
+            # the backend refused the plan's NEW prefill (per-worker slot
+            # capacity, a real-hardware constraint the view's HBM watermark
+            # does not model) before running any compute: requeue that
+            # request globally and re-kick the worker with the rest
+            self._refuse_prefill(w, plan, exc.rid, now)
+            return
         self._busy[wid] = True
         self._defer("iter_done", now + dur, (wid, plan, dur))
+
+    def _refuse_prefill(self, w: Worker, plan: IterationPlan, rid: int,
+                        now: float) -> None:
+        """Back out one refused first-chunk prefill: undo its admission on
+        the worker, return it to the global overflow queue (NOT
+        ``_try_dispatch`` — the policy would place it straight back on the
+        same slot-full worker), and let the worker run its remaining
+        work."""
+        req = next(r for r, _ in plan.prefill_parts if r.rid == rid)
+        if self.decisions is not None:
+            self.decisions.append(("refuse", w.wid, rid))
+        w.withdraw_prefill(req)           # queue + pages + prefix ref + kv
+        req.reset_for_reprefill(now)
+        if req.rid not in self.global_queue:
+            self.global_queue[req.rid] = req
+            name = req.slo.name
+            self._gq_classes[name] = self._gq_classes.get(name, 0) + 1
+        self._kick(w.wid, now)
 
     def _on_iter_done(self, now: float, payload) -> None:
         wid, plan, dur = payload
@@ -332,7 +359,17 @@ class ClusterScheduler:
             req.reset_for_reprefill(now)
             self._try_dispatch(req, now)
             return
-        self.backend.on_migrate(req, src_wid, wid)
+        try:
+            self.backend.on_migrate(req, src_wid, wid)
+        except SlotExhausted:
+            # destination has HBM room but no free KV slot: undo the admit
+            # and fall back to the failed-placement restart path
+            w.release(req)
+            self.backend.on_finish(req)
+            req.restarts += 1
+            req.reset_for_reprefill(now)
+            self._try_dispatch(req, now)
+            return
         self._kick(wid, now)
         self._arm_rebalance(now)
 

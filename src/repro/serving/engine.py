@@ -265,6 +265,17 @@ class Worker:
         self._decode_add(req)
         self._refresh_view()
 
+    def withdraw_prefill(self, req: Request, now: float = 0.0) -> None:
+        """Back out a queued/just-started prefill whose execution the
+        backend refused (e.g. ``SlotExhausted``): drop it from the queue,
+        return its reserved pages / borrowed prefix ref / KV accounting.
+        The caller re-queues the request elsewhere."""
+        if req in self.prefill_queue:
+            self.prefill_queue.remove(req)
+            self._q_tokens -= req.remaining_prefill
+        self.release(req, refresh=False)
+        self._refresh_view()
+
     def admit_migrated(self, req: Request, now: float) -> bool:
         """Admit a request whose KV just arrived over the links. False when
         the page pool cannot hold the migrated context (caller restarts the

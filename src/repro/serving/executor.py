@@ -11,19 +11,194 @@
   real compute + wall-clock durations (``clock="wall"``), or real compute
   under the cost-model clock (``clock="model"``) so scheduling decisions
   are bit-identical to the pure simulator — the backend-parity guarantee.
+
+Two execution regimes per executor:
+
+* ``batched=False`` — the scalar reference: one unjitted prefill-chunk
+  call per request (a compile per distinct chunk length), a full-cache
+  gather/scatter copy per chunk, and a host sync per sampled token.
+  Kept bit-for-bit as the seed path; the parity tests compare against it.
+* ``batched=True`` (default) — the fast path: prefill chunks are padded
+  to a pow2 **bucket grid** and all same-bucket parts of an iteration run
+  as ONE jitted slot-indexed call that updates the slotted cache in place
+  (``jax.lax.dynamic_slice`` row gather + ``jax.lax.dynamic_update_slice``
+  row scatter under ``donate_argnums``), then the decode batch, with
+  exactly one ``block_until_ready`` and one device->host token transfer
+  per iteration. Bucket padding never writes past the cache: rows pad
+  LEFT by re-feeding already-prefilled prefix tokens (recomputing the
+  same KV) and only spill right while ``start + bucket <= max_len``;
+  batch rows pad by duplicating row 0, so writes stay idempotent and the
+  cache geometry is identical to the scalar path. Compiled entry points
+  live in a per-cluster ``ExecutorKernels`` (identical shapes across
+  replicas => one compile per (bucket, rows) for the whole cluster),
+  warmed over the bucket grid at construction so first-iteration compile
+  latency never poisons ``OnlinePredictor`` EWMAs.
+
+The fast path requires the chunked-prefill contract and a uniform slotted
+{"k","v"} cache (dense/moe/vlm transformers); ring-cache and stateful
+families (gemma2 sliding window, rwkv, zamba2, whisper) transparently
+fall back to the scalar reference even under ``batched=True``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.models import api as model_api
 from repro.perf import CostModel
+from repro.sched.backend import SlotExhausted
 from repro.serving.engine import IterationPlan, Worker
+
+# CPU jax cannot honour buffer donation; the (once-per-compile) warning is
+# expected off-accelerator and would otherwise pollute every test run
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+_BUCKET_FLOOR = 32
+
+
+def _bucket_grid(max_len: int) -> tuple[int, ...]:
+    """Pow2 chunk buckets from the floor up, capped by the cache length
+    (the last bucket is ``max_len`` itself so padded writes stay in
+    bounds even for a non-pow2 cache)."""
+    grid = []
+    b = min(_BUCKET_FLOOR, max_len)
+    while b < max_len:
+        grid.append(b)
+        b *= 2
+    grid.append(max_len)
+    return tuple(grid)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
+
+
+def _uniform_cache(cache) -> bool:
+    """True for the slotted dict-of-arrays cache the bucketed kernels can
+    row-index: {"k","v"} with (L, B, S, H, D) leaves. Ring caches (tuple
+    leaves) and stateful pytrees fall back to the scalar path."""
+    return (isinstance(cache, dict) and set(cache.keys()) == {"k", "v"}
+            and all(getattr(a, "ndim", 0) == 5 for a in cache.values()))
+
+
+def _slice_row(tree, idx):
+    """One slot row (axis 1) of every leaf, via ``lax.dynamic_slice`` so a
+    traced index is allowed."""
+    return jax.tree.map(
+        lambda a: lax.dynamic_slice(
+            a, (0, idx) + (0,) * (a.ndim - 2),
+            (a.shape[0], 1) + a.shape[2:]), tree)
+
+
+class ExecutorKernels:
+    """Jitted, slot-indexed entry points over one cache geometry, shared
+    by every executor in a cluster (replicas have identical shapes, so
+    each (bucket, rows) signature compiles exactly once per process).
+
+    ``prefill_traces`` / ``decode_traces`` increment only when jax
+    actually traces (= compiles) an entry point — the compile-count
+    regression tests pin them to the bucket grid, not to the number of
+    distinct chunk lengths seen.
+    """
+
+    def __init__(self, api, max_slots: int, max_len: int):
+        self.api = api
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.buckets = _bucket_grid(max_len)
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        self._prefill_fns: dict[tuple[int, int], object] = {}
+        self._decode = None
+        self._copy = None
+
+    def bucket_for(self, take: int) -> int:
+        for b in self.buckets:
+            if take <= b:
+                return b
+        raise ValueError(f"chunk of {take} tokens exceeds max_len "
+                         f"{self.max_len}")
+
+    # ---------------------------------------------------------- entry points
+    def prefill_fn(self, bucket: int, rows: int):
+        """Batched bucketed prefill: gathers ``rows`` slot views, runs one
+        padded ``prefill_chunk``, scatters the rows back in place, and
+        samples every row's next token on device."""
+        key = (bucket, rows)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            api = self.api
+
+            def step(params, cache, chunk, slots, starts, takes):
+                self.prefill_traces += 1     # trace-time only: a jit miss
+                view = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, axis=1),
+                    *[_slice_row(cache, slots[i]) for i in range(rows)])
+                logits, view = api.prefill_chunk(
+                    params, view, chunk, starts, take=takes)
+                for i in range(rows):
+                    cache = jax.tree.map(
+                        lambda a, r: lax.dynamic_update_slice(
+                            a, r.astype(a.dtype),
+                            (0, slots[i]) + (0,) * (a.ndim - 2)),
+                        cache, _slice_row(view, i))
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return toks, cache
+
+            fn = jax.jit(step, donate_argnums=1)
+            self._prefill_fns[key] = fn
+        return fn
+
+    @property
+    def decode_fn(self):
+        if self._decode is None:
+            api = self.api
+
+            def step(params, cache, tokens, lengths):
+                self.decode_traces += 1
+                logits, cache = api.decode(params, cache, tokens, lengths)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+            self._decode = jax.jit(step, donate_argnums=1)
+        return self._decode
+
+    @property
+    def copy_fn(self):
+        """Device-to-device KV slot copy (migration fast path)."""
+        if self._copy is None:
+
+            def step(dst, src, dslot, sslot):
+                return jax.tree.map(
+                    lambda a, r: lax.dynamic_update_slice(
+                        a, r.astype(a.dtype),
+                        (0, dslot) + (0,) * (a.ndim - 2)),
+                    dst, _slice_row(src, sslot))
+
+            self._copy = jax.jit(step, donate_argnums=0)
+        return self._copy
+
+    # --------------------------------------------------------------- warmup
+    def warmup(self, params) -> None:
+        """Compile the (bucket, 1-row) grid + the decode step up front on a
+        throwaway cache, so the first scheduled iterations measure steady-
+        state execution (not compilation) — the durations that feed the
+        OnlinePredictor EWMAs."""
+        cache = self.api.init_cache(self.max_slots, self.max_len)
+        one = jnp.zeros((1,), jnp.int32)
+        for b in self.buckets:
+            _, cache = self.prefill_fn(b, 1)(
+                params, cache, jnp.zeros((1, b), jnp.int32), one, one,
+                jnp.ones((1,), jnp.int32))
+        zeros = jnp.zeros((self.max_slots,), jnp.int32)
+        _, cache = self.decode_fn(params, cache, zeros, zeros)
+        jax.block_until_ready(cache)
 
 
 class SimExecutor:
@@ -38,21 +213,30 @@ class RealExecutor:
     """One executor per worker; owns params + a slotted cache."""
 
     def __init__(self, cfg, rng, max_slots: int = 8, max_len: int = 256,
-                 params=None):
+                 params=None, batched: bool = True, wid: int = 0,
+                 kernels: Optional[ExecutorKernels] = None, owner=None):
         self.cfg = cfg
         self.api = model_api.build(cfg)
         self.params = params if params is not None else self.api.init(rng)
         self.max_slots = max_slots
         self.max_len = max_len
+        self.wid = wid
         self.cache = self.api.init_cache(max_slots, max_len)
         self.free_slots = list(range(max_slots))
         self.slot_of: dict[int, int] = {}
+        self.owner = owner                   # cluster rid -> wid registry
         self.lengths = np.zeros(max_slots, np.int32)
         self.prompts: dict[int, np.ndarray] = {}     # rid -> prompt tokens
         self.generated: dict[int, list[int]] = {}
         self.pending_logits: dict[int, np.ndarray] = {}
         self._decode_fn = jax.jit(
             lambda p, c, t, l: self.api.decode(p, c, t, l))
+        self.batched = batched
+        self.fast = bool(batched and self.api.prefill_chunk is not None
+                         and _uniform_cache(self.cache))
+        if self.fast and kernels is None:
+            kernels = ExecutorKernels(self.api, max_slots, max_len)
+        self.kernels = kernels
 
     # ------------------------------------------------------------ requests
     def register(self, req) -> None:
@@ -65,9 +249,11 @@ class RealExecutor:
     def _slot(self, rid: int) -> int:
         if rid not in self.slot_of:
             if not self.free_slots:
-                raise MemoryError("no free slots")
+                raise SlotExhausted(self.wid, rid, self.max_slots)
             self.slot_of[rid] = self.free_slots.pop()
             self.lengths[self.slot_of[rid]] = 0
+            if self.owner is not None:
+                self.owner[rid] = self.wid
         return self.slot_of[rid]
 
     def release(self, rid: int) -> None:
@@ -75,6 +261,8 @@ class RealExecutor:
         if slot is not None:
             self.lengths[slot] = 0
             self.free_slots.append(slot)
+            if self.owner is not None and self.owner.get(rid) == self.wid:
+                del self.owner[rid]
 
     # ----------------------------------------------------------- execution
     def _cache_view(self, slot: int):
@@ -129,32 +317,141 @@ class RealExecutor:
             self.generated[r.rid].append(int(logits[s].argmax()))
             self.lengths[s] += 1
 
+    # ------------------------------------------------------ fused fast path
+    def assign_slots(self, plan: IterationPlan) -> None:
+        """Reserve every slot the plan needs BEFORE any compute runs, so a
+        ``SlotExhausted`` refusal is side-effect-free on the device (re-
+        running a final prefill chunk would double-append its sampled
+        token)."""
+        for req, _ in plan.prefill_parts:
+            self.register(req)
+            self._slot(req.rid)
+        for r in plan.decode_reqs:
+            self._slot(r.rid)
+
+    def run_plan(self, plan: IterationPlan) -> None:
+        """Execute one composed iteration (either regime), returning after
+        the device is idle."""
+        self.assign_slots(plan)
+        if self.fast:
+            self._run_plan_fast(plan)
+            return
+        for req, take in plan.prefill_parts:
+            self.run_prefill_chunk(req, take)
+        self.run_decode_batch(plan.decode_reqs)
+        jax.block_until_ready(self.cache)
+
+    def _run_plan_fast(self, plan: IterationPlan) -> None:
+        groups: dict[int, list] = {}
+        for req, take in plan.prefill_parts:
+            bucket = self.kernels.bucket_for(take)
+            groups.setdefault(bucket, []).append((req, take))
+        pending = []        # (rows-of-Optional[req] | decode pairs)
+        tok_parts = []
+        for bucket in sorted(groups):
+            parts = groups[bucket]
+            rows = _next_pow2(len(parts))
+            chunk = np.zeros((rows, bucket), np.int32)
+            slots = np.zeros(rows, np.int32)
+            starts = np.zeros(rows, np.int32)
+            takes = np.ones(rows, np.int32)
+            finals: list = [None] * rows
+            for i, (req, take) in enumerate(parts):
+                start = int(req.prefilled_tokens)
+                slot = self.slot_of[req.rid]
+                # pad LEFT with the already-prefilled prefix (recomputing
+                # identical KV) so the padded write window never crosses
+                # max_len — dynamic_update_slice clamps, which would slide
+                # real KV rows to wrong positions
+                pad_l = min(bucket - take, start)
+                row_start = start - pad_l
+                toks = self.prompts[req.rid][row_start:start + take]
+                chunk[i, :len(toks)] = toks
+                slots[i] = slot
+                starts[i] = row_start
+                takes[i] = pad_l + take
+                self.lengths[slot] = start + take
+                if start + take >= req.prompt_len:
+                    finals[i] = req
+            for i in range(len(parts), rows):   # duplicate row 0: idempotent
+                chunk[i] = chunk[0]
+                slots[i] = slots[0]
+                starts[i] = starts[0]
+                takes[i] = takes[0]
+            toks_dev, self.cache = self.kernels.prefill_fn(bucket, rows)(
+                self.params, self.cache, jnp.asarray(chunk),
+                jnp.asarray(slots), jnp.asarray(starts), jnp.asarray(takes))
+            tok_parts.append(toks_dev)
+            pending.append(("prefill", finals))
+        if plan.decode_reqs:
+            dpairs = [(r, self._slot(r.rid)) for r in plan.decode_reqs]
+            tokens = np.zeros(self.max_slots, np.int32)
+            lengths = np.array(self.lengths)
+            for r, s in dpairs:
+                tokens[s] = self.generated[r.rid][-1]
+            toks_dev, self.cache = self.kernels.decode_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(lengths))
+            tok_parts.append(toks_dev)
+            pending.append(("decode", dpairs))
+        # exactly one device sync + one device->host transfer per iteration
+        jax.block_until_ready(self.cache)
+        if not tok_parts:
+            return
+        host = np.asarray(tok_parts[0]) if len(tok_parts) == 1 else \
+            np.asarray(jnp.concatenate(tok_parts))
+        off = 0
+        for kind, data in pending:
+            if kind == "prefill":
+                for i, req in enumerate(data):
+                    if req is not None:
+                        self.generated[req.rid].append(int(host[off + i]))
+                off += len(data)
+            else:
+                for r, s in data:
+                    self.generated[r.rid].append(int(host[off + s]))
+                    self.lengths[s] += 1
+                off += self.max_slots
+
     def duration_fn(self):
         """Measured-wall-clock duration_fn for the Simulator."""
 
         def run(worker: Worker, plan: IterationPlan) -> float:
             t0 = time.perf_counter()
-            for req, take in plan.prefill_parts:
-                self.run_prefill_chunk(req, take)
-            self.run_decode_batch(plan.decode_reqs)
-            jax.block_until_ready(self.cache)
+            self.run_plan(plan)
             return time.perf_counter() - t0
 
         return run
 
 
 class ClusterRealExecutors:
-    """Per-worker RealExecutor registry + shared duration_fn dispatch."""
+    """Per-worker RealExecutor registry + shared duration_fn dispatch.
+
+    All replicas share weights AND compiled entry points (identical cache
+    geometry => one jit cache for the cluster), warmed over the bucket
+    grid at construction.
+    """
 
     def __init__(self, cfg, n_workers: int, rng=None, max_slots=8,
-                 max_len=256):
+                 max_len=256, batched: bool = True, warmup: bool = True):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         api = model_api.build(cfg)
         params = api.init(rng)   # replicas share weights
+        self.batched = batched
+        self._owner: dict[int, int] = {}     # rid -> owning wid
+        kernels = None
+        if batched and api.prefill_chunk is not None and \
+                _uniform_cache(api.init_cache(1, max_len)):
+            kernels = ExecutorKernels(api, max_slots, max_len)
+        self.kernels = kernels
         self.execs = {
-            i: RealExecutor(cfg, rng, max_slots, max_len, params=params)
+            i: RealExecutor(cfg, rng, max_slots, max_len, params=params,
+                            batched=batched, wid=i, kernels=kernels,
+                            owner=self._owner)
             for i in range(n_workers)
         }
+        if kernels is not None and warmup:
+            kernels.warmup(params)
 
     def duration_fn(self):
         def run(worker: Worker, plan: IterationPlan) -> float:
@@ -162,20 +459,29 @@ class ClusterRealExecutors:
         return run
 
     def on_finish(self, req) -> None:
-        for e in self.execs.values():
-            e.release(req.rid)
+        wid = self._owner.get(req.rid)
+        if wid is not None:
+            self.execs[wid].release(req.rid)
 
     def as_backend(self, clock: str = "wall") -> "RealJaxBackend":
         return RealJaxBackend(self, clock=clock)
 
     def migrate(self, req, src: int, dst: int) -> None:
-        """Copy the request's tokens; the KV re-registers on the target
-        (cache content is re-derived — on TPU this is the ICI transfer)."""
+        """Move the request across workers. Cache-true families copy the
+        KV slot device-to-device (on TPU this is the ICI transfer);
+        stateful/ring families re-derive it by replaying prefill."""
         se, de = self.execs[src], self.execs[dst]
         de.prompts[req.rid] = se.prompts[req.rid]
         de.generated[req.rid] = list(se.generated[req.rid])
+        slot = de._slot(req.rid)      # SlotExhausted surfaces to scheduler
+        sslot = se.slot_of.get(req.rid)
+        if de.fast and sslot is not None and se.fast:
+            de.cache = de.kernels.copy_fn(
+                de.cache, se.cache, jnp.int32(slot), jnp.int32(sslot))
+            de.lengths[slot] = se.lengths[sslot]
+            se.release(req.rid)
+            return
         # replay KV on the destination (simulating the transfer)
-        slot = de._slot(req.rid)
         full = np.concatenate([
             de.prompts[req.rid],
             np.asarray(de.generated[req.rid][:-1], np.int32)]) \
@@ -199,6 +505,10 @@ class RealJaxBackend:
                          cost-model duration. Scheduling then sees exactly
                          the timings the pure simulator sees, which makes
                          decision logs comparable across backends.
+
+    A worker out of KV slots raises ``SlotExhausted`` before any compute
+    runs; the scheduler turns it into a dispatch refusal (the request
+    re-queues) instead of a crash.
     """
 
     def __init__(self, execs: ClusterRealExecutors, clock: str = "wall"):
@@ -210,10 +520,7 @@ class RealJaxBackend:
     def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
         e = self.execs.execs[worker.wid]
         t0 = time.perf_counter()
-        for req, take in plan.prefill_parts:
-            e.run_prefill_chunk(req, take)
-        e.run_decode_batch(plan.decode_reqs)
-        jax.block_until_ready(e.cache)
+        e.run_plan(plan)
         measured = time.perf_counter() - t0
         return measured if self.clock == "wall" else worker.plan_duration(plan)
 

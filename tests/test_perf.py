@@ -460,10 +460,14 @@ def test_bench_summary_schema():
                    "workers": 1024, "sim_throughput_rps": 155.0,
                    "speedup_x": 3.2},
                   {"tier": "engine", "mode": "scalar",
-                   "workers": 1024, "sim_throughput_rps": 49.0}],
+                   "workers": 1024, "sim_throughput_rps": 49.0},
+                  {"tier": "real_exec", "mode": "seed",
+                   "iters": 17, "step_ms": 375.8},
+                  {"tier": "real_exec", "mode": "fast",
+                   "iters": 17, "step_ms": 2.5, "speedup_x": 150.3}],
     }
     s = build_summary(results)
-    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 4
+    assert s["schema_version"] == SUMMARY_SCHEMA_VERSION == 5
     assert s["slo_attainment"] == 0.97
     assert s["weighted_attainment"] == 0.95
     assert s["hetero_per_worker_attainment"] == 0.76
@@ -481,5 +485,8 @@ def test_bench_summary_schema():
     assert s["sim_engine_rps"] == 155.0
     assert s["sim_engine_workers"] == 1024
     assert s["sim_engine_speedup"] == 3.2
+    # real-compute executor tier: the fast row's wall clock + speedup
+    assert s["real_step_ms"] == 2.5
+    assert s["real_exec_speedup"] == 150.3
     assert s["ttft_p90_s"] > 0 and s["tpot_p90_s"] > 0
     assert s["mean_step_s"] > 0 and s["n_requests"] > 0

@@ -219,3 +219,123 @@ def test_decision_parity_hetero_online(cost):
     trace = make_trace(2.0, 25.0, cost, seed=5)
     _assert_run_parity("tropical", trace, n_workers=4,
                        worker_specs=specs, online_predictor=True)
+
+
+# ------------------------------------- closed-form slack chunking parity
+
+def _chunk_toggle(pred, rng, n=24):
+    """A slack_chunking toggle over n MULTIPLEX views spanning the grid:
+    empty/small/large decode batches, short/long contexts, and slack
+    budgets that land the answer at min_chunk, in the interior, and at
+    chunk_tokens."""
+    from repro.core.toggle import (MultiplexingToggle, Role, ToggleConfig,
+                                   WorkerView)
+    cfg_t = ToggleConfig(slack_chunking=True)
+    views = []
+    for i in range(n):
+        b = int(rng.choice([0, 1, 4, 8, 32]))
+        sc = float(b) * float(rng.choice([128, 2048, 8192]))
+        v = WorkerView(wid=i, role=Role.MULTIPLEX, kv_capacity_tokens=1e9,
+                       decode_batch=b, decode_sum_ctx=sc)
+        ref = pred.predict_prefill(int(rng.integers(64, 4096)), int(sc),
+                                   wid=i)
+        v.min_tpot_slack = ref * cfg_t.slack_safety \
+            * float(rng.choice([0.02, 0.6, 1.0, 1.7, 50.0]))
+        views.append(v)
+    return MultiplexingToggle(views, pred, cfg_t), views
+
+
+def _count_prefill_batch_calls(pred):
+    calls = []
+    orig = pred.predict_prefill_batch
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    pred.predict_prefill_batch = counting
+    return calls
+
+
+def _assert_chunk_parity(pred, seed, closed_form=True):
+    rng = np.random.default_rng(seed)
+    tog, views = _chunk_toggle(pred, rng)
+    cols = tog._cols_sync()
+    gidx = np.arange(len(views))
+    calls = _count_prefill_batch_calls(pred)
+    closed = tog._chunk_for_vec(cols, gidx, 10.0)
+    if closed_form:
+        # the whole point: ONE batched cost evaluation per arrival where
+        # the lockstep bisection issued ~log2(chunk_tokens - min_chunk)
+        assert len(calls) == 1
+    bisected = tog._chunk_for_vec_bisect(cols, gidx, 10.0)
+    np.testing.assert_array_equal(closed, bisected)
+    scalar = np.array([tog.chunk_for(v, 10.0) for v in views])
+    np.testing.assert_array_equal(scalar, closed)
+    # answers must actually span the range or the grid proves nothing
+    assert closed.min() == tog.cfg.min_chunk
+    assert closed.max() == tog.cfg.chunk_tokens
+    assert np.any((closed > tog.cfg.min_chunk)
+                  & (closed < tog.cfg.chunk_tokens))
+
+
+def _interference_model(name=MODEL, interference=GAMMA_TABLE, slow=1.0):
+    hw = dataclasses.replace(V5E, interference=interference)
+    if slow != 1.0:
+        hw = hw.slowed(slow)
+    return CostModel(get_config(name), WorkerSpec(tp=8, hw=hw))
+
+
+def test_chunk_closed_form_matches_bisection_gamma_shapes():
+    for seed, interf in [(11, 0.0), (12, 0.8), (13, GAMMA_TABLE)]:
+        _assert_chunk_parity(
+            AnalyticalPredictor(_interference_model(interference=interf)),
+            seed)
+
+
+def test_chunk_closed_form_matches_bisection_sliding_window():
+    """gemma2's ctx_cap bends both rooflines mid-range: the closed form
+    must cover the cap-crossing breakpoints, not just smooth roots."""
+    _assert_chunk_parity(
+        AnalyticalPredictor(_interference_model("gemma2-2b")), 17)
+
+
+def test_chunk_closed_form_matches_bisection_biased_and_cluster():
+    _assert_chunk_parity(
+        BiasedPredictor(_interference_model(), bias=1.7), 19)
+    costs = {i: _interference_model(slow=(1.0 if i % 2 == 0 else 2.0))
+             for i in range(24)}
+    _assert_chunk_parity(ClusterPredictor(costs), 23)
+
+
+def test_chunk_closed_form_matches_bisection_online_warmed():
+    """The EWMA prefill scale is piecewise constant over pow2 size
+    buckets; the closed form folds the per-segment scale in and must
+    still agree with bisection after observations move scales off 1.0."""
+    base = AnalyticalPredictor(_interference_model())
+    pred = OnlinePredictor(base, per_worker=True)
+    rng = np.random.default_rng(29)
+    for _ in range(200):
+        tk, ct = int(rng.integers(64, 4096)), float(rng.integers(0, 8192))
+        pred.observe_prefill(tk, int(ct),
+                             base.predict_prefill(tk, int(ct)) / base.safety
+                             * float(rng.uniform(0.6, 1.9)),
+                             wid=int(rng.integers(0, 24)))
+        b = int(rng.integers(1, 32))
+        pred.observe_decode(b, b * 512.0,
+                            base.predict_decode_iter(b, b * 512.0)
+                            / base.safety * float(rng.uniform(0.6, 1.9)),
+                            wid=int(rng.integers(0, 24)))
+    assert pred.prefill_scale != 1.0
+    _assert_chunk_parity(pred, 31)
+
+
+def test_chunk_non_analytic_predictor_falls_back_to_bisection():
+    from repro.perf.predictor import ProfiledPredictor
+    pred = ProfiledPredictor([(128, 0.01), (2048, 0.1)],
+                             [(1, 0.005, 512.0), (32, 0.02, 512.0)],
+                             1e-8, 1e-9)
+    assert pred.chunk_candidates([0], 256, 2048, np.array([0.05]),
+                                 np.array([0.0]), np.array([0.0]),
+                                 np.array([0.0])) is None
+    _assert_chunk_parity(pred, 37, closed_form=False)
