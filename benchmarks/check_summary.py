@@ -35,8 +35,12 @@ ATTAINMENT_DROP = 0.02       # absolute points a fraction may fall
 LATENCY_REGRESS = 0.25       # relative growth a *_s latency may show
 RPS_DROP = 0.20              # relative fall a *_rps throughput may show
 
-# keys outside both heuristics: identity must hold exactly
-EXACT_KEYS = {"schema_version", "ref_rate", "n_requests", "generator"}
+# keys outside both heuristics: identity must hold exactly. The
+# *_workers keys are the scale-tier size the gated rps/speedup numbers
+# were measured at — a silent size change would make those comparisons
+# meaningless, so the size itself must match.
+EXACT_KEYS = {"schema_version", "ref_rate", "n_requests", "generator",
+              "sim_throughput_workers", "sim_engine_workers"}
 
 
 def classify(key: str, value) -> str:

@@ -76,9 +76,9 @@ def _attainment_run(cm, pol, n_workers, trace, duration,
                            worker_spec=WORKER,
                            rebalance_config=rebalance_config)
     sim.add_trace(clone_trace(trace))
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # lint: allow-wallclock(measured sim wall time for speedup rows)
     m = sim.run(until=duration * 6)
-    wall = time.perf_counter() - t0
+    wall = time.perf_counter() - t0  # lint: allow-wallclock(measured sim wall time for speedup rows)
     transitions = len(sim.sched.rebalancer.transitions) \
         if sim.sched.rebalancer is not None else 0
     return m, wall, transitions
@@ -127,9 +127,9 @@ def _throughput_run(trace, n_workers, vectorized):
                            n_workers=n_workers, worker_spec=WORKER,
                            vectorized=vectorized)
     sim.add_trace(clone_trace(trace))
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # lint: allow-wallclock(measured sim wall time for speedup rows)
     m = sim.run()
-    return m, time.perf_counter() - t0
+    return m, time.perf_counter() - t0  # lint: allow-wallclock(measured sim wall time for speedup rows)
 
 
 def throughput_tier(scales=THROUGHPUT_SCALES, repeats=2, *,
@@ -237,9 +237,9 @@ def real_exec_tier(cfg_name: str = "qwen2-1.5b") -> list[dict]:
         execs = ClusterRealExecutors(cfg, 1, max_slots=8, max_len=128,
                                      batched=batched)
         _real_exec_drive(execs, rid_base=0)          # warm every jit entry
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # lint: allow-wallclock(measured executor wall time for step_ms)
         iters, toks = _real_exec_drive(execs, rid_base=100)
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0  # lint: allow-wallclock(measured executor wall time for step_ms)
         walls[mode] = wall / iters
         streams[mode] = toks
         row = {

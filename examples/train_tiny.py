@@ -33,12 +33,12 @@ def main(steps: int = 200) -> None:
         lambda p, b: api.loss(p, b),
         optimizer.AdamWConfig(lr=1e-3, warmup_steps=20)))
     state = optimizer.init_state(params)
-    t0 = time.perf_counter()
+    t0 = time.perf_counter()  # lint: allow-wallclock(measured step time for progress display)
     for i in range(steps):
         params, state, loss = step(params, state, data.batch_at(i))
         if i % 20 == 0 or i == steps - 1:
             print(f"step {i:4d} loss {float(loss):.4f} "
-                  f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)")
+                  f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)")  # lint: allow-wallclock(measured step time for progress display)
     checkpoint.save("/tmp/tiny100m_ckpt", steps,
                     {"params": params, "state": state})
     print("checkpoint saved to /tmp/tiny100m_ckpt")

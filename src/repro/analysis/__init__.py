@@ -1,0 +1,71 @@
+"""repro-lint: AST-based invariant checker for this repo's correctness
+contracts.
+
+The scheduler/engine/executor fast paths (PRs 7-9) are guarded by
+after-the-fact parity tests; this package makes the underlying
+*invariants* machine-checked on every push:
+
+* ``determinism``  — no wall-clock, unseeded RNG, or set-iteration-order
+  hazards on the sim/decision path (``sched/``, ``serving/``, ``core/``,
+  ``workload/``) or in ``benchmarks/``/``examples/``;
+* ``soa``          — every write to a ``WorkerView``-mirrored field flows
+  through the dirty-marking setters, and every direct
+  ``decode_running`` mutation bumps ``_batch_version`` + re-dirties the
+  ``RequestColumns`` mirror;
+* ``sync``         — the real-executor fast path stays within its
+  documented one-``block_until_ready`` / one-host-transfer budget, and
+  buffers passed through ``donate_argnums`` are never read after
+  donation;
+* ``parity``       — every ``*_vec``/``*_batch``/``*_fast`` fast path
+  declares a scalar reference and is reachable from a test-exercised
+  entry point;
+* ``metrics``      — every ``BENCH_summary.json`` key classifies under
+  exactly one ``check_summary.py`` gating class, so a new key can never
+  silently dodge the perf gate;
+* ``refusals``     — typed refusals (``SlotExhausted``) carry their full
+  ``(wid, rid, limit)`` context, and refusal-class exceptions are never
+  raised bare.
+
+CLI: ``python -m repro.analysis [--check] [--write-baseline]`` with the
+``check_summary.py`` exit contract (0 clean, 1 findings, 2 bad input).
+Pragmas (``# lint: allow-wallclock(reason)`` style) grant per-line or
+per-def exemptions; every pragma requires a non-empty reason. The
+committed baseline (``LINT_baseline.json``) records accepted pre-existing
+findings — kept empty by fixing violations instead of baselining them.
+"""
+from __future__ import annotations
+
+from repro.analysis.base import Finding, Project, load_baseline
+from repro.analysis.determinism import DeterminismPass
+from repro.analysis.metrics_schema import MetricsSchemaPass
+from repro.analysis.parity import ParityPass
+from repro.analysis.refusals import RefusalsPass
+from repro.analysis.soa import SoaCoherencePass
+from repro.analysis.syncdonate import SyncDonationPass
+
+#: the pass suite, in report order
+PASSES = (
+    DeterminismPass,
+    SoaCoherencePass,
+    SyncDonationPass,
+    ParityPass,
+    MetricsSchemaPass,
+    RefusalsPass,
+)
+
+BASELINE_NAME = "LINT_baseline.json"
+
+
+def run_all(project: Project, passes=PASSES) -> list[Finding]:
+    """Run every pass over ``project``; deterministically ordered output."""
+    findings: list[Finding] = []
+    for cls in passes:
+        findings.extend(cls().run(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.pass_id, f.rule))
+    return findings
+
+
+__all__ = [
+    "Finding", "Project", "PASSES", "BASELINE_NAME", "run_all",
+    "load_baseline",
+]

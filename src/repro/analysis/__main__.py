@@ -1,0 +1,107 @@
+"""repro-lint CLI.
+
+Usage:
+    python -m repro.analysis                    # report all findings
+    python -m repro.analysis --check            # gate vs the baseline
+    python -m repro.analysis --write-baseline   # accept current findings
+
+Exit contract (same as benchmarks/check_summary.py): 0 clean, 1 findings
+(--check: *new* findings or *stale* baseline entries), 2 unreadable or
+malformed input.
+
+``--check`` is symmetric on purpose: a finding NOT in the baseline fails
+(new violation), and a baseline entry with no matching finding also
+fails (the violation was fixed — shrink the baseline in the same PR, so
+it can only ever ratchet down).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import BASELINE_NAME, run_all
+from repro.analysis.base import Project, dump_baseline, load_baseline
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: AST invariant checker "
+                    "(determinism, SoA coherence, sync/donation, "
+                    "parity surfaces, metrics schema, refusal context)")
+    ap.add_argument("--root", default=".", metavar="DIR",
+                    help="repository root to scan (default: cwd)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on findings not in the baseline, "
+                         "or stale baseline entries")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"error: --root {root} is not a directory", file=sys.stderr)
+        return 2
+    try:
+        project = Project.from_dir(root)
+    except (OSError, SyntaxError) as e:
+        print(f"error: cannot scan {root}: {e}", file=sys.stderr)
+        return 2
+    if not project.files:
+        print(f"error: no sources found under {root} (wrong --root?)",
+              file=sys.stderr)
+        return 2
+
+    findings = run_all(project)
+    findings.extend(project.pragma_findings())
+    findings.sort(key=lambda f: (f.path, f.line, f.pass_id, f.rule))
+
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / BASELINE_NAME
+
+    if args.write_baseline:
+        baseline_path.write_text(
+            dump_baseline([f.fingerprint for f in findings]))
+        print(f"wrote {len(findings)} fingerprint(s) to {baseline_path}")
+        for f in findings:
+            print("  " + f.render())
+        return 0
+
+    if not args.check:
+        for f in findings:
+            print(f.render())
+        print(f"\n{len(findings)} finding(s) "
+              f"({len(project.files)} files scanned)")
+        return 1 if findings else 0
+
+    # --check: diff against the committed baseline
+    if baseline_path.exists():
+        try:
+            accepted = set(load_baseline(baseline_path))
+        except (ValueError, OSError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    else:
+        accepted = set()
+
+    fresh = {f.fingerprint: f for f in findings}
+    new = [f for fp, f in fresh.items() if fp not in accepted]
+    stale = sorted(accepted - set(fresh))
+
+    for f in new:
+        print("NEW  " + f.render())
+    for fp in stale:
+        print(f"STALE {fp}: baseline entry no longer fires "
+              "(remove it — the baseline only ratchets down)")
+    ok = len(findings) - len(new)
+    print(f"\n{len(new)} new finding(s), {len(stale)} stale baseline "
+          f"entr(y/ies), {ok} baselined, "
+          f"{len(project.files)} files scanned")
+    return 1 if new or stale else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,229 @@
+"""Shared infrastructure for the repro-lint passes.
+
+``Project`` holds every scanned file (source text + parsed AST + pragma
+map + enclosing-scope index); passes are pure functions of a Project, so
+the fixture tests feed in-memory snippets through exactly the code path
+the CLI drives over the real tree.
+
+Pragma grammar (one per physical line, attached to that line; for
+multi-line statements any line the statement spans counts; for ``def``
+nodes the def line itself):
+
+    # lint: <name>(<reason or argument>)
+
+Every pragma requires a non-empty argument — an exemption without a
+recorded reason is itself a finding (``pragma-reason``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z][a-z0-9-]*)\(([^)]*)\)")
+
+#: pragma names the tool understands; anything else is reported, so a
+#: typo'd exemption can never silently grant itself
+KNOWN_PRAGMAS = frozenset({
+    "allow-wallclock", "allow-rng", "allow-set-iter", "allow-direct-write",
+    "allow-sync", "allow-raise", "allow-key",
+    "parity-ref", "not-parity", "parity-test", "sync-budget",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation. The fingerprint intentionally excludes
+    the line number (pure code motion must not churn the baseline) and
+    keys on the enclosing scope instead."""
+    pass_id: str
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    message: str
+    scope: str = ""    # enclosing Class.function qualname ("" = module)
+
+    @property
+    def fingerprint(self) -> str:
+        where = self.scope or f"L{self.line}"
+        return f"{self.pass_id}:{self.rule}:{self.path}:{where}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_id}/{self.rule}] " \
+               f"{self.message}"
+
+
+class SourceFile:
+    """One parsed file: text, AST, per-line pragmas, scope index."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        # line -> [(pragma, argument)]
+        self.pragmas: dict[int, list[tuple[str, str]]] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            for m in PRAGMA_RE.finditer(line):
+                self.pragmas.setdefault(i, []).append(
+                    (m.group(1), m.group(2).strip()))
+        # node -> enclosing (class_stack, func_stack) qualname
+        self._scope_of: dict[ast.AST, str] = {}
+        self._parent: dict[ast.AST, ast.AST] = {}
+        self._index_scopes()
+
+    def _index_scopes(self) -> None:
+        def walk(node: ast.AST, stack: tuple[str, ...]) -> None:
+            for child in ast.iter_child_nodes(node):
+                self._parent[child] = node
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                    self._scope_of[child] = ".".join(stack) or ""
+                    walk(child, stack + (child.name,))
+                else:
+                    self._scope_of[child] = ".".join(stack) or ""
+                    walk(child, stack)
+        walk(self.tree, ())
+
+    def scope(self, node: ast.AST) -> str:
+        """``Class.method`` qualname enclosing ``node`` ("" at module
+        level). For def/class nodes this is the scope they are DEFINED
+        in, not their own name."""
+        return self._scope_of.get(node, "")
+
+    def qualname(self, node) -> str:
+        """Scope *of* a def node including its own name."""
+        outer = self.scope(node)
+        return f"{outer}.{node.name}" if outer else node.name
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parent.get(node)
+
+    def enclosing_function(self, node: ast.AST):
+        cur = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self._parent.get(cur)
+        return None
+
+    # ------------------------------------------------------------- pragmas
+    def pragma_arg(self, node: ast.AST, name: str) -> Optional[str]:
+        """Argument of pragma ``name`` if present on any line ``node``
+        spans (None = absent; "" = present but reason-less)."""
+        lo = getattr(node, "lineno", None)
+        if lo is None:
+            return None
+        hi = getattr(node, "end_lineno", lo) or lo
+        for ln in range(lo, hi + 1):
+            for pname, arg in self.pragmas.get(ln, ()):
+                if pname == name:
+                    return arg
+        return None
+
+    def has_pragma(self, node: ast.AST, name: str) -> bool:
+        return self.pragma_arg(node, name) is not None
+
+
+class Project:
+    """Every file the suite looks at, keyed by repo-relative posix path.
+
+    ``files`` covers linted + cross-referenced sources (src, benchmarks,
+    examples, tests); ``data`` carries non-Python inputs (the committed
+    BENCH summary) as raw text.
+    """
+
+    SCAN_GLOBS = ("src/repro/**/*.py", "benchmarks/*.py", "examples/*.py",
+                  "tests/*.py")
+    DATA_FILES = ("BENCH_summary.json",)
+
+    def __init__(self, files: dict[str, SourceFile],
+                 data: Optional[dict[str, str]] = None,
+                 root: Optional[Path] = None):
+        self.files = files
+        self.data = data or {}
+        self.root = root
+
+    @classmethod
+    def from_dir(cls, root: Path | str) -> "Project":
+        root = Path(root)
+        files: dict[str, SourceFile] = {}
+        for pattern in cls.SCAN_GLOBS:
+            for p in sorted(root.glob(pattern)):
+                rel = p.relative_to(root).as_posix()
+                if "__pycache__" in rel:
+                    continue
+                files[rel] = SourceFile(rel, p.read_text())
+        data = {}
+        for name in cls.DATA_FILES:
+            p = root / name
+            if p.exists():
+                data[name] = p.read_text()
+        return cls(files, data, root=root)
+
+    @classmethod
+    def from_sources(cls, sources: dict[str, str],
+                     data: Optional[dict[str, str]] = None) -> "Project":
+        return cls({path: SourceFile(path, text)
+                    for path, text in sources.items()}, data)
+
+    def iter_files(self, *prefixes: str) -> Iterable[SourceFile]:
+        for path in sorted(self.files):
+            if not prefixes or any(path.startswith(p) for p in prefixes):
+                yield self.files[path]
+
+    def pragma_findings(self, pass_id: str = "pragma") -> list[Finding]:
+        """Unknown pragma names and reason-less pragmas, project-wide."""
+        out = []
+        for sf in self.iter_files():
+            if sf.path.startswith("tests/"):
+                continue
+            for line, entries in sorted(sf.pragmas.items()):
+                for name, arg in entries:
+                    if name not in KNOWN_PRAGMAS:
+                        out.append(Finding(
+                            pass_id, "unknown-pragma", sf.path, line,
+                            f"unknown lint pragma {name!r} (known: "
+                            f"{', '.join(sorted(KNOWN_PRAGMAS))})"))
+                    elif not arg:
+                        out.append(Finding(
+                            pass_id, "pragma-reason", sf.path, line,
+                            f"pragma {name!r} needs a non-empty reason/"
+                            f"argument"))
+        return out
+
+
+# ---------------------------------------------------------------- helpers
+def dotted_name(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, "" for anything else."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    return dotted_name(call.func)
+
+
+def load_baseline(path: Path) -> list[str]:
+    """Fingerprint list from a baseline file. Raises ValueError on a
+    malformed document (the CLI maps that to exit 2)."""
+    doc = json.loads(path.read_text())
+    if not isinstance(doc, dict) or "findings" not in doc \
+            or not isinstance(doc["findings"], list):
+        raise ValueError(f"{path}: not a repro-lint baseline "
+                         "(need a dict with a 'findings' list)")
+    return [str(f) for f in doc["findings"]]
+
+
+def dump_baseline(fingerprints: list[str]) -> str:
+    return json.dumps({"schema_version": 1,
+                       "findings": sorted(fingerprints)}, indent=1) + "\n"

@@ -1,0 +1,203 @@
+"""Pass 5 — metrics-schema classification: no key dodges the perf gate.
+
+``benchmarks/check_summary.py`` gates regressions per key *class*
+(exact / latency / throughput / attainment); a key that classifies as
+"info" is printed but never gated — a new headline number with an
+unrecognised name silently opts out of CI. This pass closes the loop:
+
+* ``unclassified-key``  — every key in the committed
+  ``BENCH_summary.json`` must classify under a gating class (mirrors
+  ``check_summary.classify`` exactly, including the numeric-in-[0,1]
+  attainment heuristic, against the snapshot's own values).
+* ``unclassified-emit`` — every key emission site in ``benchmarks/``
+  (``summary["k"] = ...``, ``summary.update(k=...)``, and the literal
+  keys of the ``summary = {...}`` seed dict) must classify *statically*
+  — by ``EXACT_KEYS`` membership or a recognised suffix
+  (``_s``/``_ms``/``_rps``/``_speedup``/``_attainment``/``_rate``/
+  ``_abs_err``) — because at emission time there is no value for the
+  [0,1] heuristic to inspect. Deliberately-informational keys carry
+  ``# lint: allow-key(<key>: reason)``.
+* ``emitted-not-in-snapshot`` — a statically-emitted key missing from
+  the committed snapshot means the snapshot is stale (the perf gate
+  would fail the same way at bench time; this catches it at lint time).
+
+``EXACT_KEYS`` is read out of ``check_summary.py``'s AST so the two
+tools can never drift apart; fixture projects without that file fall
+back to the pinned default.
+"""
+from __future__ import annotations
+
+import ast
+import json
+
+from repro.analysis.base import Finding, Project
+
+PASS_ID = "metrics"
+
+CHECKER_PATH = "benchmarks/check_summary.py"
+SNAPSHOT_NAME = "BENCH_summary.json"
+
+DEFAULT_EXACT_KEYS = frozenset({
+    "schema_version", "ref_rate", "n_requests", "generator",
+})
+
+LATENCY_SUFFIXES = ("_s", "_ms")
+THROUGHPUT_SUFFIXES = ("_rps", "_speedup")
+#: suffixes that *name* an attainment-class fraction, so an emission
+#: site classifies without needing a runtime value
+ATTAINMENT_SUFFIXES = ("_attainment", "_rate", "_abs_err")
+
+
+def _exact_keys(project: Project) -> frozenset[str]:
+    sf = project.files.get(CHECKER_PATH)
+    if sf is None:
+        return DEFAULT_EXACT_KEYS
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "EXACT_KEYS"
+                        for t in node.targets) \
+                and isinstance(node.value, ast.Set):
+            keys = {e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)}
+            if keys:
+                return frozenset(keys)
+    return DEFAULT_EXACT_KEYS
+
+
+def classify_static(key: str, exact: frozenset[str]) -> str:
+    """Value-free mirror of ``check_summary.classify`` (suffix rules in
+    the same precedence order), with the attainment name-suffixes
+    standing in for the runtime [0,1] check."""
+    if key in exact:
+        return "exact"
+    if key.endswith(LATENCY_SUFFIXES):
+        return "latency"
+    if key.endswith(THROUGHPUT_SUFFIXES):
+        return "throughput"
+    if key.endswith(ATTAINMENT_SUFFIXES):
+        return "attainment"
+    return "info"
+
+
+def classify_value(key: str, value, exact: frozenset[str]) -> str:
+    """Mirror of ``check_summary.classify`` for keys with a value."""
+    if key in exact:
+        return "exact"
+    if key.endswith(LATENCY_SUFFIXES):
+        return "latency"
+    if key.endswith(THROUGHPUT_SUFFIXES):
+        return "throughput"
+    if isinstance(value, (int, float)) and not isinstance(value, bool) \
+            and 0.0 <= float(value) <= 1.0:
+        return "attainment"
+    return "info"
+
+
+class MetricsSchemaPass:
+    pass_id = PASS_ID
+
+    def run(self, project: Project) -> list[Finding]:
+        exact = _exact_keys(project)
+        allowed = self._allowed_keys(project)
+        out: list[Finding] = []
+        snapshot = self._snapshot(project, out)
+        if snapshot is not None:
+            for key in sorted(snapshot):
+                if key in allowed:
+                    continue
+                if classify_value(key, snapshot[key], exact) == "info":
+                    out.append(Finding(
+                        PASS_ID, "unclassified-key", SNAPSHOT_NAME, 1,
+                        f"summary key {key!r} classifies as 'info' in "
+                        "check_summary.py — it is printed but never "
+                        "gated; rename it into a gated class, add it to "
+                        "EXACT_KEYS, or annotate its emission with "
+                        "`# lint: allow-key({key}: reason)`".format(key=key),
+                        key))
+        for sf, key, line in self._emissions(project):
+            if self._line_allowed(sf, line):
+                continue
+            if key in allowed:
+                continue
+            if classify_static(key, exact) == "info":
+                out.append(Finding(
+                    PASS_ID, "unclassified-emit", sf.path, line,
+                    f"emitted summary key {key!r} has no gating class "
+                    "(not in EXACT_KEYS, no recognised suffix); the perf "
+                    "gate will never check it", key))
+            if snapshot is not None and key not in snapshot:
+                out.append(Finding(
+                    PASS_ID, "emitted-not-in-snapshot", sf.path, line,
+                    f"summary key {key!r} is emitted here but absent from "
+                    f"the committed {SNAPSHOT_NAME}; regenerate the "
+                    "snapshot in this PR", key))
+        return out
+
+    # ----------------------------------------------------------- helpers
+    @staticmethod
+    def _line_allowed(sf, line: int) -> bool:
+        return any(name == "allow-key"
+                   for name, _ in sf.pragmas.get(line, ()))
+
+    @staticmethod
+    def _allowed_keys(project: Project) -> set[str]:
+        """Key names granted 'info' status via ``allow-key(<key>: why)``
+        pragmas anywhere in benchmarks/ sources."""
+        allowed: set[str] = set()
+        for sf in project.iter_files("benchmarks/"):
+            for entries in sf.pragmas.values():
+                for name, arg in entries:
+                    if name == "allow-key" and arg:
+                        allowed.add(arg.split(":")[0].strip())
+        return allowed
+
+    @staticmethod
+    def _snapshot(project: Project, out: list[Finding]):
+        raw = project.data.get(SNAPSHOT_NAME)
+        if raw is None:
+            return None
+        try:
+            doc = json.loads(raw)
+        except json.JSONDecodeError as e:
+            out.append(Finding(
+                PASS_ID, "snapshot-unreadable", SNAPSHOT_NAME, 1,
+                f"committed summary is not valid JSON: {e}"))
+            return None
+        if not isinstance(doc, dict):
+            out.append(Finding(
+                PASS_ID, "snapshot-unreadable", SNAPSHOT_NAME, 1,
+                "committed summary is not a JSON object"))
+            return None
+        return doc
+
+    @staticmethod
+    def _emissions(project: Project):
+        """(file, key, line) for every static summary-key emission in
+        benchmarks/: subscript assigns, .update(kw=...), and the seed
+        dict literal — all keyed off a variable literally named
+        ``summary``."""
+        for sf in project.iter_files("benchmarks/"):
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Subscript) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id == "summary" \
+                                and isinstance(t.slice, ast.Constant) \
+                                and isinstance(t.slice.value, str):
+                            yield sf, t.slice.value, t.lineno
+                        elif isinstance(t, ast.Name) and t.id == "summary" \
+                                and isinstance(node.value, ast.Dict):
+                            for k in node.value.keys:
+                                if isinstance(k, ast.Constant) \
+                                        and isinstance(k.value, str):
+                                    yield sf, k.value, k.lineno
+                elif isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "update" \
+                        and isinstance(node.func.value, ast.Name) \
+                        and node.func.value.id == "summary":
+                    for kw in node.keywords:
+                        if kw.arg is not None:
+                            yield sf, kw.arg, kw.value.lineno

@@ -1,0 +1,148 @@
+"""Pass 4 — parity-surface registry: every fast path has a scalar
+reference and a test that exercises it.
+
+The repo's perf story rests on bit-for-bit parity between vectorized
+fast paths and their scalar references (``vectorized=False`` /
+``batched=False`` are the seed-pinned baselines). A fast path without a
+declared reference (or whose reference silently vanished in a refactor)
+has nothing to be parity-tested *against*; a fast path no test can reach
+is parity-tested against nothing.
+
+Detection: every ``FunctionDef`` under the decision/perf packages whose
+name ends in ``_vec``/``_batch``/``_fast`` is a parity surface. For each:
+
+* ``no-scalar-ref`` — there must be a def named after the stripped base
+  (``_chunk_for_vec`` -> ``_chunk_for`` or public ``chunk_for``) in the
+  same module, or anywhere in scope; a surface whose reference lives
+  under a different name declares it with ``# lint: parity-ref(name)``.
+  Helpers that merely *sound* vectorized opt out with
+  ``# lint: not-parity(reason)``.
+* ``no-parity-test`` — the surface must be reachable from test code:
+  its name appears in ``tests/``, or some (transitive) caller's name
+  does (call graph by simple name over the scanned sources — an e2e
+  decision-parity test that drives ``handle_batch`` covers everything
+  the batch path calls). ``# lint: parity-test(tests/test_x.py)``
+  pins an explicit test module instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Finding, Project, SourceFile
+
+PASS_ID = "parity"
+
+SCOPE = ("src/repro/core/", "src/repro/serving/", "src/repro/sched/",
+         "src/repro/perf/", "src/repro/workload/")
+
+SUFFIXES = ("_vec", "_batch", "_fast")
+
+
+def _base_candidates(name: str) -> list[str]:
+    for suf in SUFFIXES:
+        if name.endswith(suf):
+            base = name[: -len(suf)]
+            cands = [base]
+            if base.startswith("_"):
+                cands.append(base.lstrip("_"))
+            return [c for c in cands if c]
+    return []
+
+
+class ParityPass:
+    pass_id = PASS_ID
+
+    def run(self, project: Project) -> list[Finding]:
+        # every def in scope, by simple name -> set of defining files
+        defs: dict[str, set[str]] = {}
+        per_file_defs: dict[str, set[str]] = {}
+        surfaces: list[tuple[SourceFile, ast.FunctionDef]] = []
+        callees: dict[str, set[str]] = {}   # def name -> called names
+        for sf in project.iter_files(*SCOPE):
+            names = per_file_defs.setdefault(sf.path, set())
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                defs.setdefault(node.name, set()).add(sf.path)
+                names.add(node.name)
+                called = callees.setdefault(node.name, set())
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Call):
+                        f = sub.func
+                        if isinstance(f, ast.Attribute):
+                            called.add(f.attr)
+                        elif isinstance(f, ast.Name):
+                            called.add(f.id)
+                if any(node.name.endswith(s) for s in SUFFIXES) \
+                        and not node.name.startswith("__"):
+                    surfaces.append((sf, node))
+
+        test_text = "\n".join(sf.text for sf in project.iter_files("tests/"))
+        covered = self._coverage(defs, callees, test_text)
+
+        out: list[Finding] = []
+        for sf, node in surfaces:
+            out.extend(self._check_surface(
+                project, sf, node, defs, per_file_defs[sf.path], covered))
+        return out
+
+    # ---------------------------------------------------------- coverage
+    @staticmethod
+    def _coverage(defs, callees, test_text: str) -> set[str]:
+        """Def names reachable from test code: mentioned directly, or
+        (transitively) called by a mentioned def. Name-based, so it
+        over-approximates — which is the right direction for a linter
+        that wants no false 'untested' alarms."""
+        covered = {name for name in defs if name in test_text}
+        changed = True
+        while changed:
+            changed = False
+            for caller in list(covered):
+                for callee in callees.get(caller, ()):
+                    if callee in defs and callee not in covered:
+                        covered.add(callee)
+                        changed = True
+        return covered
+
+    # ----------------------------------------------------------- checks
+    def _check_surface(self, project: Project, sf: SourceFile,
+                       node: ast.FunctionDef, defs, local_defs,
+                       covered) -> list[Finding]:
+        if sf.has_pragma(node, "not-parity"):
+            return []
+        out: list[Finding] = []
+        qual = sf.qualname(node)
+
+        declared = sf.pragma_arg(node, "parity-ref")
+        if declared:
+            if declared not in defs:
+                out.append(Finding(
+                    PASS_ID, "parity-ref-missing", sf.path, node.lineno,
+                    f"{node.name} declares scalar reference {declared!r} "
+                    "but no such def exists in scope", qual))
+        else:
+            cands = _base_candidates(node.name)
+            if not any(c in local_defs for c in cands) \
+                    and not any(c in defs for c in cands):
+                out.append(Finding(
+                    PASS_ID, "no-scalar-ref", sf.path, node.lineno,
+                    f"fast path {node.name} has no scalar reference "
+                    f"(looked for {', '.join(cands)}); add one, declare "
+                    "it with `# lint: parity-ref(name)`, or opt out with "
+                    "`# lint: not-parity(reason)`", qual))
+
+        test_ref = sf.pragma_arg(node, "parity-test")
+        if test_ref:
+            if test_ref not in project.files:
+                out.append(Finding(
+                    PASS_ID, "parity-test-missing", sf.path, node.lineno,
+                    f"{node.name} pins parity test {test_ref!r} but that "
+                    "file is not in the project", qual))
+        elif node.name not in covered:
+            out.append(Finding(
+                PASS_ID, "no-parity-test", sf.path, node.lineno,
+                f"fast path {node.name} is not reachable from tests/ "
+                "(neither its name nor any transitive caller's appears "
+                "there); add a parity test or pin one with "
+                "`# lint: parity-test(tests/test_x.py)`", qual))
+        return out

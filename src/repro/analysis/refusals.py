@@ -1,0 +1,77 @@
+"""Pass 6 — refusal context: typed refusals carry their evidence.
+
+``SlotExhausted`` is the executor's *typed admission refusal* — raised
+before any compute is spent, and consumed programmatically by the
+scheduler's retry/requeue path. Its contract is positional
+``(wid, rid, limit)``; a raise-site that drops fields turns a routable
+refusal into an undebuggable one. More broadly, a refusal-class
+exception raised with no arguments at all ships zero context to the
+log line that is usually the only artifact of a prod incident.
+
+* ``refusal-context`` — ``raise SlotExhausted(...)`` with fewer than
+  three positional/keyword arguments (or re-raising the bare class).
+* ``bare-raise``      — ``raise ValueError()`` / ``RuntimeError`` /
+  ``KeyError`` / ``TypeError`` with zero arguments, in ``src/repro/``.
+  ``raise`` with no expression (re-raise inside ``except``) is fine.
+
+``# lint: allow-raise(reason)`` exempts a site (e.g. an intentional
+sentinel in test-support code).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Finding, Project, SourceFile, dotted_name
+
+PASS_ID = "refusals"
+
+SCOPE = ("src/repro/",)
+
+#: typed refusals: exception name -> minimum argument count
+CONTEXT_EXCEPTIONS = {"SlotExhausted": 3}
+
+BARE_FORBIDDEN = frozenset({
+    "ValueError", "RuntimeError", "KeyError", "TypeError",
+})
+
+
+class RefusalsPass:
+    pass_id = PASS_ID
+
+    def run(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for sf in project.iter_files(*SCOPE):
+            out.extend(self._check_file(sf))
+        return out
+
+    def _check_file(self, sf: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Raise) or node.exc is None:
+                continue
+            if sf.has_pragma(node, "allow-raise"):
+                continue
+            exc = node.exc
+            if isinstance(exc, ast.Call):
+                name = dotted_name(exc.func).split(".")[-1]
+                argc = len(exc.args) + len(exc.keywords)
+            elif isinstance(exc, (ast.Name, ast.Attribute)):
+                # `raise SlotExhausted` — the bare class, zero context
+                name = dotted_name(exc).split(".")[-1]
+                argc = 0
+            else:
+                continue
+            need = CONTEXT_EXCEPTIONS.get(name)
+            if need is not None and argc < need:
+                out.append(Finding(
+                    PASS_ID, "refusal-context", sf.path, node.lineno,
+                    f"{name} raised with {argc} argument(s); the typed-"
+                    f"refusal contract is {need} (wid, rid, limit) so the "
+                    "scheduler can route the refusal", sf.scope(node)))
+            elif name in BARE_FORBIDDEN and argc == 0:
+                out.append(Finding(
+                    PASS_ID, "bare-raise", sf.path, node.lineno,
+                    f"{name} raised with no message/context; say what "
+                    "value was bad and where (wid/rid/limit)",
+                    sf.scope(node)))
+        return out

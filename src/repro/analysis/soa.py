@@ -1,0 +1,194 @@
+"""Pass 2 — SoA-mirror coherence: no un-marked writes to mirrored state.
+
+Two dirty-flag contracts keep the vectorized fast paths honest:
+
+* ``ViewColumns`` mirrors ``WorkerView`` fields as numpy columns; every
+  ``WorkerView`` field assignment goes through ``__setattr__``/``assign``
+  which mark the row dirty. A write that *bypasses* them —
+  ``object.__setattr__(view, "free_pages", ...)`` — silently desyncs the
+  mirror and corrupts every batched dispatch decision until the next
+  unrelated refresh. Such writes are only legal inside functions that
+  mark the row dirty themselves (``_refresh_view_fast``-style).
+* ``Worker.decode_running`` membership is mirrored by ``RequestColumns``
+  and versioned by ``_batch_version``; a direct mutation that skips both
+  lets ``complete_iteration`` apply vectorized effects to rows that are
+  no longer the planned batch.
+
+The mirrored-field set is derived from ``ViewColumns._pull`` in
+``src/repro/core/toggle.py`` when the project contains it (adding a
+column automatically extends enforcement); fixture projects without it
+fall back to the pinned default list.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import Finding, Project, SourceFile, call_name, \
+    dotted_name
+
+PASS_ID = "soa"
+
+SCOPE = ("src/repro/",)
+
+#: (class, function) bodies that ARE the dirty-marking infrastructure
+INFRA_SCOPES = frozenset({
+    "WorkerView.__setattr__", "WorkerView.assign", "ViewColumns.__init__",
+})
+
+#: fallback when the project does not carry ViewColumns._pull
+DEFAULT_MIRRORED_FIELDS = frozenset({
+    "wid", "total_pages", "free_pages", "page_size", "decode_batch",
+    "queued_prefill_tokens", "kv_used_tokens", "kv_capacity_tokens",
+    "decode_sum_ctx", "min_tpot_slack", "speed", "alive",
+})
+
+#: canonical decode-batch mutators (they bump the version themselves)
+BATCH_MUTATORS = frozenset({"_decode_add", "_decode_discard"})
+
+MUTATING_DICT_METHODS = frozenset({
+    "pop", "clear", "update", "setdefault", "popitem",
+})
+
+
+def _mirrored_fields(project: Project) -> frozenset[str]:
+    """Field names ``ViewColumns._pull`` mirrors (``self.X[i] = ...``)."""
+    for sf in project.iter_files(*SCOPE):
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and node.name == "ViewColumns":
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef) \
+                            and item.name == "_pull":
+                        fields = set()
+                        for stmt in ast.walk(item):
+                            if isinstance(stmt, ast.Assign):
+                                for t in stmt.targets:
+                                    if isinstance(t, ast.Subscript) \
+                                            and isinstance(t.value,
+                                                           ast.Attribute):
+                                        fields.add(t.value.attr)
+                        if fields:
+                            return frozenset(fields)
+    return DEFAULT_MIRRORED_FIELDS
+
+
+def _marks_dirty(func: ast.AST) -> bool:
+    """Does this function body contain an explicit dirty-mark — a
+    ``X.dirty.add(...)`` call or an assignment to ``X.dirty``?"""
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name.endswith(".dirty.add"):
+                return True
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute) and t.attr == "dirty":
+                    return True
+    return False
+
+
+def _bumps_version_and_dirties(func: ast.AST) -> bool:
+    """Does the function both bump ``_batch_version`` and write a
+    ``_cols.dirty`` flag (the decode-batch membership contract)?"""
+    bumped = dirtied = False
+    for node in ast.walk(func):
+        if isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Attribute) \
+                and node.target.attr == "_batch_version":
+            bumped = True
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Attribute):
+                    if t.attr == "_batch_version":
+                        bumped = True
+                    if t.attr == "dirty" \
+                            and dotted_name(t.value).endswith("_cols"):
+                        dirtied = True
+    return bumped and dirtied
+
+
+class SoaCoherencePass:
+    pass_id = PASS_ID
+
+    def run(self, project: Project) -> list[Finding]:
+        mirrored = _mirrored_fields(project)
+        out: list[Finding] = []
+        for sf in project.iter_files(*SCOPE):
+            out.extend(self._check_file(sf, mirrored))
+        return out
+
+    def _check_file(self, sf: SourceFile,
+                    mirrored: frozenset[str]) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) \
+                    and call_name(node) == "object.__setattr__":
+                out.extend(self._check_bypass(sf, node, mirrored))
+            else:
+                out.extend(self._check_decode_mutation(sf, node))
+        return out
+
+    # ------------------------------------------------- object.__setattr__
+    def _check_bypass(self, sf: SourceFile, node: ast.Call,
+                      mirrored: frozenset[str]) -> list[Finding]:
+        scope = sf.scope(node)
+        if scope in INFRA_SCOPES:
+            return []
+        if sf.has_pragma(node, "allow-direct-write"):
+            return []
+        # which attribute is written? literal second arg when present
+        attr = None
+        if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant) \
+                and isinstance(node.args[1].value, str):
+            attr = node.args[1].value
+        if attr is not None and attr not in mirrored:
+            # private plumbing (_row/_cols) or an unrelated class's
+            # frozen-dataclass init — not a mirrored field, no hazard
+            return []
+        func = sf.enclosing_function(node)
+        if func is not None and (_marks_dirty(func)
+                                 or sf.has_pragma(func, "allow-direct-write")):
+            return []
+        what = f"field {attr!r}" if attr else "a dynamically-named field"
+        return [Finding(
+            PASS_ID, "bypass-setattr", sf.path, node.lineno,
+            f"object.__setattr__ writes mirrored {what} without marking "
+            "the ViewColumns row dirty; assign through the view (or mark "
+            "`<cols>.dirty` in this function)", scope)]
+
+    # --------------------------------------------------- decode_running
+    def _check_decode_mutation(self, sf: SourceFile,
+                               node: ast.AST) -> list[Finding]:
+        hit_line = None
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) \
+                        and dotted_name(t.value).endswith("decode_running"):
+                    hit_line = node.lineno
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) \
+                        and dotted_name(t.value).endswith("decode_running"):
+                    hit_line = node.lineno
+        elif isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            parts = name.split(".")
+            if len(parts) >= 2 and parts[-1] in MUTATING_DICT_METHODS \
+                    and parts[-2] == "decode_running":
+                hit_line = node.lineno
+        if hit_line is None:
+            return []
+        if sf.has_pragma(node, "allow-direct-write"):
+            return []
+        func = sf.enclosing_function(node)
+        if func is not None:
+            if func.name in BATCH_MUTATORS:
+                return []
+            if _bumps_version_and_dirties(func) \
+                    or sf.has_pragma(func, "allow-direct-write"):
+                return []
+        return [Finding(
+            PASS_ID, "decode-batch-version", sf.path, hit_line,
+            "decode_running mutated without bumping _batch_version and "
+            "re-dirtying the RequestColumns mirror; use _decode_add/"
+            "_decode_discard (or bump both in this function)",
+            sf.scope(node))]

@@ -1,0 +1,290 @@
+"""Pass 3 — host-sync & donation discipline in the real executor.
+
+The batched executor fast path (PR 9) earns its ~150x by composing a
+whole iteration on device and paying exactly ONE ``block_until_ready``
+and ONE device->host transfer at the end. A stray ``.item()`` or
+``np.asarray`` inside the composition silently serialises the pipeline
+— wall-clock regresses but nothing *fails* until the weekly profile run.
+This pass makes the budget structural:
+
+* ``sync-budget`` — fast-path scopes (the pinned ``FAST_SCOPES``
+  registry plus any def carrying ``# lint: sync-budget(block=N,host=M)``)
+  may not exceed their budget of ``jax.block_until_ready`` /
+  ``jax.device_get`` / ``.item()`` / ``np.asarray`` call sites.
+  Branches of a conditional count as alternatives (max, not sum);
+  a sync inside a loop is unconditionally over budget.
+* ``missing-fast-path`` — a registry scope that disappears (rename)
+  is reported rather than silently un-checked.
+* ``use-after-donate`` — a buffer passed at a ``donate_argnums``
+  position of a jitted entry point is dead after the call; reading it
+  again is undefined behaviour on accelerators (and only *works* on CPU
+  because CPU jax ignores donation). The donated-entry registry is
+  derived from the module's own ``jax.jit(..., donate_argnums=...)``
+  sites, so new kernels are covered automatically.
+"""
+from __future__ import annotations
+
+import ast
+import math
+import re
+
+from repro.analysis.base import Finding, Project, SourceFile, dotted_name
+
+PASS_ID = "sync"
+
+SCOPE_SUFFIX = "serving/executor.py"
+
+#: pinned fast-path scopes: function name -> (block budget, host budget).
+#: ``warmup`` composes the whole compile grid before its single sync.
+FAST_SCOPES = {
+    "_run_plan_fast": (1, 1),
+    "warmup": (1, 0),
+}
+
+SYNC_BLOCK_CALLS = frozenset({"jax.block_until_ready"})
+SYNC_HOST_CALLS = frozenset({"np.asarray", "numpy.asarray",
+                             "jax.device_get"})
+BUDGET_RE = re.compile(r"block\s*=\s*(\d+)\s*,\s*host\s*=\s*(\d+)")
+
+#: statements that merely *contain* other statements — a call site is
+#: attributed to its innermost simple statement, never to these
+_COMPOUND_STMTS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                   ast.For, ast.AsyncFor, ast.While, ast.If, ast.With,
+                   ast.AsyncWith, ast.Try)
+
+
+class _SyncCounter:
+    """Branch-aware sync-site counter: If/IfExp branches are
+    alternatives (max), loop bodies are unbounded (inf)."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+
+    def count(self, node: ast.AST) -> tuple[float, float]:
+        if isinstance(node, (ast.If,)):
+            t = self.count_all(node.test)
+            body = self.count_seq(node.body)
+            orelse = self.count_seq(node.orelse)
+            return (t[0] + max(body[0], orelse[0]),
+                    t[1] + max(body[1], orelse[1]))
+        if isinstance(node, ast.IfExp):
+            t = self.count(node.test)
+            b = self.count(node.body)
+            o = self.count(node.orelse)
+            return (t[0] + max(b[0], o[0]), t[1] + max(b[1], o[1]))
+        if isinstance(node, (ast.For, ast.AsyncFor, ast.While)):
+            it = self.count_seq([node.iter] if hasattr(node, "iter") else
+                                [node.test])
+            body = self.count_seq(node.body + node.orelse)
+            if body[0] or body[1]:
+                # any sync under a loop blows a per-iteration budget
+                return (it[0] + (math.inf if body[0] else 0),
+                        it[1] + (math.inf if body[1] else 0))
+            return it
+        block = host = 0.0
+        if isinstance(node, ast.Call):
+            if not self.sf.has_pragma(node, "allow-sync"):
+                name = dotted_name(node.func)
+                if name in SYNC_BLOCK_CALLS:
+                    block += 1
+                elif name in SYNC_HOST_CALLS:
+                    host += 1
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    host += 1
+        b, h = self.count_seq(list(ast.iter_child_nodes(node)))
+        return (block + b, host + h)
+
+    def count_seq(self, nodes) -> tuple[float, float]:
+        block = host = 0.0
+        for n in nodes:
+            b, h = self.count(n)
+            block += b
+            host += h
+        return (block, host)
+
+    def count_all(self, node: ast.AST) -> tuple[float, float]:
+        return self.count(node)
+
+
+def _donated_entries(sf: SourceFile) -> dict[str, tuple[int, ...]]:
+    """Entry-point name -> donated positional indices, derived from
+    ``jax.jit(..., donate_argnums=...)`` sites: keyed by the enclosing
+    def (factory/property pattern) and, when the jit result is assigned
+    to ``self.X``, by ``X`` as well."""
+    entries: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and dotted_name(node.func) == "jax.jit"):
+            continue
+        donate: tuple[int, ...] = ()
+        for kw in node.keywords:
+            if kw.arg == "donate_argnums":
+                if isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, int):
+                    donate = (kw.value.value,)
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    donate = tuple(
+                        e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int))
+        if not donate:
+            continue
+        func = sf.enclosing_function(node)
+        if func is not None:
+            entries[func.name] = donate
+        parent = sf.parent(node)
+        if isinstance(parent, ast.Assign):
+            for t in parent.targets:
+                if isinstance(t, ast.Attribute):
+                    entries[t.attr] = donate
+    return entries
+
+
+def _donated_call(sf: SourceFile, node: ast.Call,
+                  entries: dict[str, tuple[int, ...]]):
+    """(donated indices, args) when ``node`` invokes a donated entry:
+    either ``obj.entry(args)`` directly or ``obj.factory(...)()`` for
+    the factory pattern. A factory's *own* arguments (``prefill_fn(b, 1)``
+    inside ``prefill_fn(b, 1)(params, cache, ...)``) are selectors, not
+    donated buffers, so a call that is itself immediately called does
+    not match the direct form."""
+    f = node.func
+    parent = sf.parent(node)
+    immediately_called = isinstance(parent, ast.Call) and parent.func is node
+    if isinstance(f, ast.Attribute) and f.attr in entries \
+            and not immediately_called:
+        return entries[f.attr], node.args
+    if isinstance(f, ast.Call) and isinstance(f.func, ast.Attribute) \
+            and f.func.attr in entries:
+        return entries[f.func.attr], node.args
+    return None, None
+
+
+class SyncDonationPass:
+    pass_id = PASS_ID
+
+    def run(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for sf in project.iter_files("src/repro/"):
+            if not sf.path.endswith(SCOPE_SUFFIX):
+                continue
+            out.extend(self._check_budgets(sf))
+            out.extend(self._check_donation(sf))
+        return out
+
+    # ------------------------------------------------------- sync budgets
+    def _check_budgets(self, sf: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        seen: set[str] = set()
+        counter = _SyncCounter(sf)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            budget = FAST_SCOPES.get(node.name)
+            arg = sf.pragma_arg(node, "sync-budget")
+            if arg:
+                m = BUDGET_RE.search(arg)
+                if m:
+                    budget = (int(m.group(1)), int(m.group(2)))
+            if budget is None:
+                continue
+            seen.add(node.name)
+            block, host = counter.count_seq(node.body)
+            if block > budget[0]:
+                out.append(Finding(
+                    PASS_ID, "sync-budget", sf.path, node.lineno,
+                    f"{node.name} issues {self._fmt(block)} "
+                    f"block_until_ready sync(s); fast-path budget is "
+                    f"{budget[0]} per iteration", sf.qualname(node)))
+            if host > budget[1]:
+                out.append(Finding(
+                    PASS_ID, "sync-budget", sf.path, node.lineno,
+                    f"{node.name} issues {self._fmt(host)} device->host "
+                    f"transfer(s) (np.asarray/.item()/device_get); "
+                    f"fast-path budget is {budget[1]} per iteration",
+                    sf.qualname(node)))
+        for name in FAST_SCOPES:
+            if name not in seen:
+                out.append(Finding(
+                    PASS_ID, "missing-fast-path", sf.path, 1,
+                    f"pinned fast-path scope {name!r} not found in "
+                    f"{sf.path}; update the FAST_SCOPES registry in "
+                    "repro.analysis.syncdonate alongside the rename",
+                    name))
+        return out
+
+    @staticmethod
+    def _fmt(n: float) -> str:
+        return "loop-many" if math.isinf(n) else str(int(n))
+
+    # ---------------------------------------------------------- donation
+    def _check_donation(self, sf: SourceFile) -> list[Finding]:
+        entries = _donated_entries(sf)
+        if not entries:
+            return []
+        out: list[Finding] = []
+        for func in ast.walk(sf.tree):
+            if not isinstance(func, ast.FunctionDef):
+                continue
+            # leaf statements of THIS function in source order (nested
+            # defs excluded — a nested jit body is the *implementation*,
+            # not a caller; compound statements excluded — each call
+            # belongs to its innermost simple statement)
+            stmts = [s for s in ast.walk(func)
+                     if isinstance(s, ast.stmt)
+                     and not isinstance(s, _COMPOUND_STMTS)
+                     and sf.enclosing_function(s) is func]
+            stmts.sort(key=lambda s: s.lineno)
+            for stmt in stmts:
+                for call in ast.walk(stmt):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    donate, args = _donated_call(sf, call, entries)
+                    if donate is None:
+                        continue
+                    for idx in donate:
+                        if idx >= len(args):
+                            continue
+                        expr = ast.unparse(args[idx])
+                        if self._rebound_by(stmt, expr):
+                            continue
+                        use = self._later_use(stmts, stmt, expr)
+                        if use is not None \
+                                and not sf.has_pragma(stmt, "allow-sync"):
+                            out.append(Finding(
+                                PASS_ID, "use-after-donate", sf.path, use,
+                                f"{expr!r} was donated at line "
+                                f"{call.lineno} (donate_argnums) and read "
+                                "again without rebinding; donated buffers "
+                                "are dead after the call", sf.qualname(func)))
+        return out
+
+    @staticmethod
+    def _rebound_by(stmt: ast.stmt, expr: str) -> bool:
+        """Does the statement assign the call result back over ``expr``
+        (the ``x = f(x)`` donation idiom)?"""
+        if not isinstance(stmt, ast.Assign):
+            return False
+        for t in stmt.targets:
+            elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+            for e in elts:
+                if ast.unparse(e) == expr:
+                    return True
+        return False
+
+    @staticmethod
+    def _later_use(stmts, stmt: ast.stmt, expr: str):
+        """First line after ``stmt`` that reads ``expr`` before any
+        rebinding assignment to it; None when the buffer is never
+        touched again."""
+        after = [s for s in stmts if s.lineno > stmt.lineno]
+        for s in after:
+            if SyncDonationPass._rebound_by(s, expr):
+                return None
+            for sub in ast.walk(s):
+                if isinstance(sub, (ast.Name, ast.Attribute)) \
+                        and isinstance(getattr(sub, "ctx", None), ast.Load) \
+                        and ast.unparse(sub) == expr:
+                    return s.lineno
+        return None

@@ -519,7 +519,7 @@ class MultiplexingToggle:
             active = lo < hi
         return lo
 
-    def _other_floor_vec(self, c: ViewColumns, gidx: np.ndarray,
+    def _other_floor_vec(self, c: ViewColumns, gidx: np.ndarray,  # lint: parity-ref(_multiplex_ok)
                          name: str) -> np.ndarray:
         """Tightest resident TPOT SLO of a *different* class, per row.
         The floor dicts stay Python-side; single-class rows (empty dict or
@@ -625,7 +625,7 @@ class MultiplexingToggle:
         keep[bidx[fail]] = False
         return gidx[keep]
 
-    def _ttft_prefill_vec(self, c: ViewColumns, pidx: np.ndarray,
+    def _ttft_prefill_vec(self, c: ViewColumns, pidx: np.ndarray,  # lint: parity-ref(_predict_ttft_on_prefill)
                           req: Request) -> np.ndarray:
         # queue + exec priced in ONE stacked batch call (rows 0..n-1 the
         # queue drains, rows n..2n-1 the uncached suffixes), then the
@@ -643,7 +643,7 @@ class MultiplexingToggle:
             wids + wids, np.concatenate([qtok, stok]))
         return t[:n] + t[n:]
 
-    def _ttft_multiplex_vec(self, c: ViewColumns, gidx: np.ndarray,
+    def _ttft_multiplex_vec(self, c: ViewColumns, gidx: np.ndarray,  # lint: parity-ref(_predict_ttft_on_multiplex)
                             req: Request) -> np.ndarray:
         cfg = self.cfg
         wids = c.wid[gidx].tolist()

@@ -440,7 +440,7 @@ class CostModel:
         pen = gamma * beta_p * beta_d * np.minimum(t_p, t_d)
         return np.where(live, pen, 0.0)
 
-    def _prefill_only_batch(self, prefill_tokens, prefill_ctx_offset
+    def _prefill_only_batch(self, prefill_tokens, prefill_ctx_offset  # lint: parity-ref(_iteration_time)
                             ) -> np.ndarray:
         """``iteration_time_batch`` lane for pure prefill rows (scalar
         n_decode == 0): only the prefill terms are evaluated. Bit-identical
@@ -466,7 +466,7 @@ class CostModel:
         t = np.maximum(t_c, t_m) + hw.t_fixed
         return np.where(zero, 0.0, t)
 
-    def _decode_only_batch(self, n_decode, sum_ctx) -> np.ndarray:
+    def _decode_only_batch(self, n_decode, sum_ctx) -> np.ndarray:  # lint: parity-ref(_iteration_time)
         """``iteration_time_batch`` lane for pure decode rows (scalar
         prefill_tokens == 0): only the decode terms are evaluated. The
         general path's masked sums associate as ``((a+b)+0.0)+0.0`` and its

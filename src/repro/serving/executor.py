@@ -301,7 +301,7 @@ class RealExecutor:
         one = self.api.init_cache(1, self.max_len)
         return one
 
-    def run_decode_batch(self, reqs) -> None:
+    def run_decode_batch(self, reqs) -> None:  # lint: not-parity(the decode batch IS the unit of work; run_plan's scalar regime calls this directly)
         if not reqs:
             return
         slots = [self._slot(r.rid) for r in reqs]
@@ -417,9 +417,9 @@ class RealExecutor:
         """Measured-wall-clock duration_fn for the Simulator."""
 
         def run(worker: Worker, plan: IterationPlan) -> float:
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # lint: allow-wallclock(real executor measures device wall time)
             self.run_plan(plan)
-            return time.perf_counter() - t0
+            return time.perf_counter() - t0  # lint: allow-wallclock(real executor measures device wall time)
 
         return run
 
@@ -519,9 +519,9 @@ class RealJaxBackend:
 
     def run_iteration(self, worker: Worker, plan: IterationPlan) -> float:
         e = self.execs.execs[worker.wid]
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # lint: allow-wallclock(real executor measures device wall time)
         e.run_plan(plan)
-        measured = time.perf_counter() - t0
+        measured = time.perf_counter() - t0  # lint: allow-wallclock(real executor measures device wall time)
         return measured if self.clock == "wall" else worker.plan_duration(plan)
 
     def on_finish(self, req) -> None:

@@ -289,3 +289,41 @@ def test_request_columns_rebuild_order(cost):
     finally:
         sched.handle_batch = inner
     assert checked[0]
+
+
+# --------------------------------------------- dirty-marking bypass hazard
+
+def test_bypassed_view_write_is_caught_by_reference_divergence(cost):
+    """The hazard repro-lint's ``soa`` pass forbids, demonstrated live: a
+    write that bypasses ``WorkerView.__setattr__`` (no dirty mark) leaves
+    the ViewColumns mirror stale, and ``view_reference()`` flags the
+    divergence — the same check ``_checked_run`` applies after every
+    event batch. A dirty-marked write through the view propagates."""
+    trace = make_trace(3.0, 20.0, cost, seed=5)
+    sim, _ = build_cluster(get_config(MODEL), "tropical", n_workers=4,
+                           worker_spec=WORKER, vectorized=True)
+    sim.add_trace(clone_trace(trace))
+    sim.run(until=10.0)
+    w = next(w for w in sim.workers.values() if w.view.alive)
+    w._refresh_view()
+    view, colstore = w.view, w.view._cols
+    assert colstore is not None
+    colstore.sync()
+    row = view._row
+    assert colstore.free_pages[row] == view.free_pages  # coherent at rest
+
+    # the forbidden bypass: no dirty mark, mirror goes stale silently
+    object.__setattr__(view, "free_pages", view.free_pages + 7)
+    assert row not in colstore.dirty
+    assert colstore.free_pages[row] != view.free_pages  # mirror is stale
+    got = {k: getattr(view, k) for k in w.view_reference()}
+    assert got != w.view_reference()    # the parity harness catches it
+
+    # the sanctioned path: plain attribute write marks the row dirty and
+    # sync() restores mirror coherence
+    view.free_pages = view.free_pages - 7
+    assert row in colstore.dirty
+    colstore.sync()
+    assert colstore.free_pages[row] == view.free_pages
+    assert {k: getattr(view, k)
+            for k in w.view_reference()} == w.view_reference()

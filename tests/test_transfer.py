@@ -102,6 +102,20 @@ def test_predict_transfer_time_monotone_in_queue_depth():
     assert t0 < t1 < t2
 
 
+def test_predict_transfer_time_batch_matches_scalar():
+    """The batched predictor must be bit-identical to the scalar one per
+    destination — including a dead-link dst (inf) and contended dsts."""
+    e = _engine(n=5, latency=0.001)
+    e.links[4] = LinkSpec(egress_bw=10 * GB, ingress_bw=0.0, latency=0.001)
+    e.start(0, 2, 10 * GB, now=0.0)          # egress backlog on 0
+    e.start(3, 1, 4 * GB, now=0.0)           # ingress backlog on 1
+    dsts = [1, 2, 3, 4]
+    batch = e.predict_transfer_time_batch(0, dsts, GB, now=0.25)
+    scalar = [e.predict_transfer_time(0, d, GB, now=0.25) for d in dsts]
+    assert batch == scalar                   # exact, not approx
+    assert batch[-1] == float("inf")         # dead ingress link
+
+
 def test_drop_flows_touching_dead_worker():
     e = _engine()
     e.start(0, 1, 10 * GB, now=0.0)
